@@ -1,0 +1,30 @@
+"""Shared benchmark plumbing: result sink + trace/size regimes."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
+
+# cache-size regimes, as fractions of the trace footprint (paper §V-B:
+# small = 0.1%, large = 10%); the synthetic families use N=8192 objects
+SMALL_FRAC = 0.001
+LARGE_FRAC = 0.10
+
+
+def k_for(N: int, regime: str) -> int:
+    frac = SMALL_FRAC if regime == "S" else LARGE_FRAC
+    return max(4, int(N * frac))
+
+
+def save(name: str, payload: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    payload = {"bench": name, "time": time.time(), **payload}
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+    return payload
+
+
+def fmt_row(cells, widths):
+    return "  ".join(str(c).ljust(w) for c, w in zip(cells, widths))

@@ -1,0 +1,50 @@
+"""Fig. 9: per-request policy cost — the paper measures CPU instructions per
+request; the honest TPU-dry-run equivalent is HLO flops + HBM bytes per
+request of the *compiled policy step*, extracted with the loop-aware
+analyzer from a lowered trace replay.
+
+Compares AdaptiveClimb / DynamicAdaptiveClimb / LRU at small & large cache
+sizes (the paper's small/large x alpha grid).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import POLICIES
+from repro.core.simulator import replay
+from repro.launch import roofline
+from .common import fmt_row, save
+
+POLS = ["lru", "adaptiveclimb", "dynamicadaptiveclimb"]
+
+
+def _per_request(policy, K: int, T: int = 1024):
+    fn = jax.jit(lambda tr: replay(policy, tr, K))
+    lowered = fn.lower(jax.ShapeDtypeStruct((T,), jnp.int32))
+    ana = roofline.analyze_hlo(lowered.compile().as_text())
+    return ana["flops"] / T, ana["hbm_bytes"] / T
+
+
+def run(quiet: bool = False):
+    rows = {}
+    for regime, K in (("small", 64), ("large", 1024)):
+        for p in POLS:
+            fl, by = _per_request(POLICIES[p](), K)
+            rows[f"{p}({regime})"] = {"flops_per_req": fl,
+                                      "bytes_per_req": by}
+    if not quiet:
+        print(fmt_row(["policy(K)", "flops/req", "bytes/req"],
+                      [34, 14, 14]))
+        for k, v in rows.items():
+            print(fmt_row([k, f"{v['flops_per_req']:.0f}",
+                           f"{v['bytes_per_req']:.0f}"], [34, 14, 14]))
+        ac = rows["adaptiveclimb(large)"]["bytes_per_req"]
+        lru = rows["lru(large)"]["bytes_per_req"]
+        print(f"\nAC/LRU bytes ratio (large): {ac/lru:.2f} "
+              "(paper Fig. 9: climb policies ~0.5-0.75x of LRU)")
+    return save("ops_per_request", {"rows": rows})
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+
+Writes JSON results to experiments/bench/ and prints each table.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller T for a quick pass")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from . import (ablation_eps, byte_miss, curve_cachesize, kv_bounded,
+                   mrr_table, ops_per_request, skew_sweep, throughput)
+
+    fast = args.fast
+    jobs = [
+        ("mrr_table (Table III / Fig 5-6)",
+         lambda: mrr_table.run(T=20_000 if fast else 60_000,
+                               n_traces=2 if fast else 3)),
+        ("curve_cachesize (Fig 8)",
+         lambda: curve_cachesize.run(T=30_000 if fast else 80_000)),
+        ("skew_sweep (Fig 11)",
+         lambda: skew_sweep.run(T=20_000 if fast else 60_000)),
+        ("byte_miss (Fig 10)",
+         lambda: byte_miss.run(T=20_000 if fast else 60_000)),
+        ("ops_per_request (Fig 9)", ops_per_request.run),
+        ("throughput (Tables IV/V, Fig 7)",
+         lambda: throughput.run(T=10_000 if fast else 30_000)),
+        ("kv_bounded (beyond-paper)",
+         lambda: kv_bounded.run(gen=16 if fast else 32)),
+        ("ablation_eps (beyond-paper)",
+         lambda: ablation_eps.run(T=20_000 if fast else 60_000)),
+    ]
+    for name, fn in jobs:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n{'='*72}\n{name}\n{'='*72}")
+        t0 = time.time()
+        fn()
+        print(f"[{name}] {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Tables IV/V + Fig. 7: throughput scaling.
+
+The paper replays disjoint traces on 1..16 threads; the SPMD-native
+equivalent replays 1..16 *parallel cache lanes* (vmap) per step — same
+embarrassingly-parallel structure, measured in Mops on this host.  On a
+real pod the lanes additionally spread over the data axis via
+``replay_sharded`` (examples/trace_study.py).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import POLICIES, replay_batch
+from repro.data.traces import zipf_trace
+from .common import fmt_row, save
+
+POLS = ["adaptiveclimb", "dynamicadaptiveclimb", "tinylfu", "clock",
+        "sieve", "twoq", "arc", "lru", "blru"]
+
+
+def run(K: int = 256, T: int = 30_000, quiet: bool = False):
+    lanes_list = [1, 2, 4, 8, 16]
+    table = {}
+    for p in POLS:
+        pol = POLICIES[p]()
+        row = {}
+        for lanes in lanes_list:
+            traces = np.stack([zipf_trace(8192, T, 1.1, seed=s)
+                               for s in range(lanes)])
+            replay_batch(pol, traces, K)            # compile + warm
+            t0 = time.perf_counter()
+            np.asarray(replay_batch(pol, traces, K))
+            dt = time.perf_counter() - t0
+            row[lanes] = lanes * T / dt / 1e6       # Mops
+        table[p] = row
+    if not quiet:
+        print(fmt_row(["policy"] + [f"{n} lanes" for n in lanes_list]
+                      + ["avg"], [22] + [10] * (len(lanes_list) + 1)))
+        for p, row in table.items():
+            vals = [row[n] for n in lanes_list]
+            print(fmt_row([p] + [f"{v:.2f}" for v in vals]
+                          + [f"{np.mean(vals):.2f}"],
+                          [22] + [10] * (len(lanes_list) + 1)))
+    return save("throughput", {
+        "K": K, "T": T,
+        "table": {p: {str(k): v for k, v in r.items()}
+                  for p, r in table.items()}})
+
+
+if __name__ == "__main__":
+    run()

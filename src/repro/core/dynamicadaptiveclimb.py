@@ -1,0 +1,117 @@
+"""DynamicAdaptiveClimb — Algorithm 2 of the paper, vectorized, with true
+dynamic cache resizing.
+
+XLA needs static shapes, so the cache array is allocated at
+``K_max = K * growth`` and the *active* size is a traced scalar ``k``; ranks
+>= k are ``EMPTY`` and never hit.  Doubling activates already-empty ranks;
+halving wipes ranks >= k/2.  This masked-budget scheme preserves the paper's
+policy behaviour exactly while keeping the state a fixed-shape pytree (and
+therefore batchable: a vmapped fleet of caches may each sit at a different
+active size).
+
+Pseudocode mapping (0-indexed ranks, dynamic k):
+  hit at rank i:
+    jump  -= 1                     if jump  > -k/2          (line 2.4-2.6)
+    jump' -= 1                     if i < k/2 and jump' > -k/2   (2.7-2.10)
+    jump' += 1                     if i >= k/2 and jump' < 0     (2.11-2.15)
+    actual = max(1, min(jump, i)); promote i -> i - actual  (2.16-2.20)
+  miss on j:
+    jump += 1 (clamped at 2k)                               (2.22)
+    jump' += 1                     if jump' < 0             (2.23-2.25)
+    actual = max(1, min(k-1, jump))                         (2.27)
+    evict rank k-1; insert j at rank k - actual             (2.26, 2.28-2.29)
+  after every request (see note):
+    jump' = 0                      if jump == 0             (2.30-2.32)
+    k     = 2k                     if jump >= 2k and 2k <= K_max  (2.33-2.35)
+    k     = k/2                    if jump <= -k/2 and jump' <= -ceil(eps*k/2)
+                                                            (2.36-2.38)
+
+Documented interpretation choices (the paper's listing is ambiguous here):
+  * Lines 2.30-2.38 appear inside the miss block, but the halving condition
+    (jump == -K/2) is only reachable through hits — we therefore evaluate the
+    resize checks after *every* request.
+  * ``jump' == -K/2 * eps`` uses exact equality in the paper; for non-integer
+    thresholds we use ``<=`` against ``ceil(eps*k/2)``.
+  * After any resize, ``jump`` is clamped into the new [-k/2, 2k] range and
+    ``jump'`` is reset to 0 (a fresh observation window for the new size).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .policy import EMPTY, Policy, find, promote
+
+
+class DynamicAdaptiveClimb(Policy):
+    name = "dynamicadaptiveclimb"
+
+    def __init__(self, eps: float = 0.5, growth: int = 4, k_min: int = 2):
+        self.eps = float(eps)
+        self.growth = int(growth)  # K_max = K * growth
+        self.k_min = int(k_min)
+
+    def init(self, K: int) -> dict:
+        K_max = K * self.growth
+        return {
+            "cache": jnp.full((K_max,), EMPTY, dtype=jnp.int32),
+            "jump": jnp.int32(K),
+            "jump2": jnp.int32(0),
+            "k": jnp.int32(K),
+        }
+
+    def observables(self, state):
+        return {"k": state["k"], "jump": state["jump"]}
+
+    def step(self, state, key):
+        cache, jump, jump2, k = (
+            state["cache"], state["jump"], state["jump2"], state["k"])
+        K_max = cache.shape[0]
+        half = k // 2
+        hit, i = find(cache, key)
+
+        # --- hit path ------------------------------------------------------
+        jump_h = jnp.where(jump > -half, jump - 1, jump)
+        top_half = i < half
+        jump2_h = jnp.where(
+            top_half,
+            jnp.where(jump2 > -half, jump2 - 1, jump2),
+            jnp.where(jump2 < 0, jump2 + 1, jump2),
+        )
+        actual_h = jnp.maximum(1, jnp.minimum(jump_h, i))
+        t_h = i - actual_h
+        cache_h = jnp.where(i > 0, promote(cache, i, t_h, key), cache)
+
+        # --- miss path -----------------------------------------------------
+        jump_m = jnp.minimum(jump + 1, 2 * k)
+        jump2_m = jnp.where(jump2 < 0, jump2 + 1, jump2)
+        actual_m = jnp.maximum(1, jnp.minimum(k - 1, jump_m))
+        t_m = k - actual_m
+        cache_m = promote(cache, k - 1, t_m, key)
+
+        cache = jnp.where(hit, cache_h, cache_m)
+        jump = jnp.where(hit, jump_h, jump_m)
+        jump2 = jnp.where(hit, jump2_h, jump2_m)
+
+        # --- resize checks (after every request) ----------------------------
+        jump2 = jnp.where(jump == 0, 0, jump2)
+        shrink_thresh = -jnp.ceil(self.eps * half.astype(jnp.float32)).astype(jnp.int32)
+        grow = (jump >= 2 * k) & (2 * k <= K_max)
+        shrink = (~grow) & (jump <= -half) & (jump2 <= shrink_thresh) & (half >= self.k_min)
+
+        k_new = jnp.where(grow, 2 * k, jnp.where(shrink, half, k))
+        # wipe deactivated ranks on shrink
+        r = jnp.arange(K_max, dtype=jnp.int32)
+        cache = jnp.where(shrink & (r >= k_new), EMPTY, cache)
+        # Post-resize control state: after a grow, jump == 2k_old == k_new,
+        # which is exactly Alg. 2's init condition (jump = K) — keep it.
+        # After a shrink, jump is reset to 0 (neutral): leaving it pinned at
+        # the new -k/2 would instantly re-arm the halving trigger and cascade
+        # the cache to k_min.  jump' restarts its observation window on any
+        # resize.  (The paper does not specify post-resize state; these are
+        # the choices that keep the control law well-posed.)
+        resized = grow | shrink
+        jump = jnp.where(shrink, 0, jnp.clip(jump, -(k_new // 2), 2 * k_new))
+        jump2 = jnp.where(resized, 0, jump2)
+
+        new_state = {"cache": cache, "jump": jump, "jump2": jump2, "k": k_new}
+        return new_state, hit

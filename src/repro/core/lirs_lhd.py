@@ -1,0 +1,204 @@
+"""LIRS and LHD — the two remaining non-learned baselines from the paper's
+evaluation (Table I/III), in the same vectorized pure-functional form.
+
+LIRS (Jiang & Zhang 2002), timestamp formulation:
+  The recency stack S is represented by per-key last-access times; "in the
+  stack" == t_last >= the oldest LIR's t_last (stack pruning keeps an LIR
+  block at the bottom, so the LIR minimum defines the stack bottom).  State
+  per tracked key: LIR / resident-HIR / non-resident-HIR (ghost, bounded at
+  2K entries).  Promotions/demotions follow the original rules; all
+  selections are timestamp argmins (timestamps are unique, so behavior is
+  deterministic and the oracle matches bit-for-bit).
+
+LHD (Beckmann et al. 2018), binned-age approximation (unsampled):
+  Hit density per power-of-2 age bin, HD(b) = hits_b / ((hits_b + evs_b
+  + 1) * 2^b) — P(hit | age bin) over the bin's age scale.  Counters decay
+  by integer halving every 4K requests; eviction takes the resident slot
+  with minimal HD of its current age bin (exact argmin over all slots —
+  the paper's 64-candidate sampling is a throughput optimization, not a
+  policy difference).  Documented approximation: coarse binning replaces
+  LHD's full age distributions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .policy import EMPTY, Policy, find
+
+INF32 = jnp.int32(2**31 - 1)
+
+# LIRS states
+FREE, LIR, HIR, GHOST = 0, 1, 2, 3
+
+
+class LIRS(Policy):
+    name = "lirs"
+
+    def __init__(self, hir_frac: float = 0.01, ghost_factor: int = 2):
+        self.hir_frac = float(hir_frac)
+        self.ghost_factor = int(ghost_factor)
+
+    def _sizes(self, K):
+        k_hir = max(1, int(K * self.hir_frac))
+        return K - k_hir, k_hir, self.ghost_factor * K
+
+    def init(self, K: int) -> dict:
+        _, _, G = self._sizes(K)
+        M = K + G
+        return {
+            "keys": jnp.full((M,), EMPTY, jnp.int32),
+            "t_last": jnp.full((M,), -1, jnp.int32),
+            "state": jnp.zeros((M,), jnp.int32),
+            "t": jnp.int32(0),
+        }
+
+    def step(self, state, key):
+        keys, t_last, st = state["keys"], state["t_last"], state["state"]
+        t = state["t"] + 1
+        K = (keys.shape[0]) // (1 + self.ghost_factor)
+        k_lir, k_hir, G = self._sizes(K)
+
+        idx_found = jnp.argmax(keys == key).astype(jnp.int32)
+        tracked = jnp.any(keys == key)
+        cur_state = jnp.where(tracked, st[idx_found], FREE)
+        hit = tracked & ((cur_state == LIR) | (cur_state == HIR))
+
+        n_lir = jnp.sum(st == LIR)
+        lir_ts = jnp.where(st == LIR, t_last, INF32)
+        lir_bottom = jnp.argmin(lir_ts).astype(jnp.int32)
+        min_lir_t = jnp.where(n_lir > 0, t_last[lir_bottom], -1)
+
+        in_stack = jnp.where(tracked, t_last[idx_found] >= min_lir_t,
+                             jnp.bool_(False))
+
+        # selection helpers --------------------------------------------------
+        def lru_of(mask):
+            ts = jnp.where(mask, t_last, INF32)
+            return jnp.argmin(ts).astype(jnp.int32), jnp.any(mask)
+
+        hir_lru, has_hir = lru_of(st == HIR)
+        ghost_lru, has_ghost = lru_of(st == GHOST)
+        free_slot = jnp.argmax(st == FREE).astype(jnp.int32)
+        has_free = jnp.any(st == FREE)
+
+        # --- case 1: LIR hit — refresh recency ------------------------------
+        s1 = (keys, t_last.at[idx_found].set(t), st)
+
+        # --- case 2: resident-HIR hit ---------------------------------------
+        # in stack: promote to LIR, demote the LIR bottom to resident HIR
+        st2a = st.at[idx_found].set(LIR).at[lir_bottom].set(HIR)
+        # out of stack: stays HIR (Q MRU)
+        promote = in_stack & (n_lir > 0)
+        st2 = jnp.where(promote, st2a, st)
+        s2 = (keys, t_last.at[idx_found].set(t), st2)
+
+        # --- case 3: miss ---------------------------------------------------
+        n_res = jnp.sum((st == LIR) | (st == HIR))
+        full = n_res >= K
+
+        # 3a. make room when full: evict LRU resident HIR -> ghost
+        #     (if no HIR exists — unreachable after warmup, kept safe —
+        #     drop the LIR bottom entirely)
+        st3 = jnp.where(full,
+                        jnp.where(has_hir, st.at[hir_lru].set(GHOST),
+                                  st.at[lir_bottom].set(FREE)),
+                        st)
+        keys3 = jnp.where(full & ~has_hir,
+                          keys.at[lir_bottom].set(EMPTY), keys)
+        # bound the ghost table: drop its LRU if over capacity
+        ghost_ts3 = jnp.where(st3 == GHOST, t_last, INF32)
+        ghost_lru3 = jnp.argmin(ghost_ts3).astype(jnp.int32)
+        n_ghost3 = jnp.sum(st3 == GHOST)
+        drop = n_ghost3 > G
+        keys3 = jnp.where(drop, keys3.at[ghost_lru3].set(EMPTY), keys3)
+        st3 = jnp.where(drop, st3.at[ghost_lru3].set(FREE), st3)
+        t3 = jnp.where(drop, t_last.at[ghost_lru3].set(-1), t_last)
+
+        # 3b. insertion slot: reuse the key's ghost slot, else a free slot
+        was_ghost = tracked & (cur_state == GHOST)
+        ins = jnp.where(was_ghost, idx_found,
+                        jnp.argmax(st3 == FREE).astype(jnp.int32))
+        # warmup: while LIR underfull, new blocks become LIR.
+        # ghost-in-stack: promote to LIR and demote the LIR bottom.
+        ghost_promote = was_ghost & in_stack & (n_lir >= k_lir)
+        new_state = jnp.where((n_lir < k_lir) | ghost_promote, LIR, HIR)
+        keys3 = keys3.at[ins].set(key)
+        st3 = st3.at[ins].set(new_state)
+        st3 = jnp.where(ghost_promote, st3.at[lir_bottom].set(HIR), st3)
+        t3 = t3.at[ins].set(t)
+        s3 = (keys3, t3, st3)
+
+        is_lir_hit = hit & (cur_state == LIR)
+        out = tuple(
+            jnp.where(is_lir_hit, a, jnp.where(hit, b, c))
+            for a, b, c in zip(s1, s2, s3))
+        return {"keys": out[0], "t_last": out[1], "state": out[2],
+                "t": t}, hit
+
+
+class LHD(Policy):
+    name = "lhd"
+
+    def __init__(self, n_bins: int = 16, decay_every_factor: int = 4):
+        self.n_bins = int(n_bins)
+        self.decay_every_factor = int(decay_every_factor)
+
+    def init(self, K: int) -> dict:
+        return {
+            "keys": jnp.full((K,), EMPTY, jnp.int32),
+            "t_ins": jnp.full((K,), -1, jnp.int32),
+            "hits": jnp.zeros((self.n_bins,), jnp.int32),
+            "evs": jnp.zeros((self.n_bins,), jnp.int32),
+            "t": jnp.int32(0),
+        }
+
+    def _bin(self, age):
+        # integer floor(log2(age+1)) — exact, so the numpy oracle matches
+        a = jnp.maximum(age, 0) + 1
+        b = sum((a >= 2 ** j).astype(jnp.int32)
+                for j in range(1, self.n_bins))
+        return jnp.clip(b, 0, self.n_bins - 1)
+
+    def _hd(self, hits, evs):
+        b = jnp.arange(self.n_bins, dtype=jnp.float32)
+        num = hits.astype(jnp.float32)
+        den = (hits + evs + 1).astype(jnp.float32) * jnp.exp2(b)
+        return num / den
+
+    def step(self, state, key):
+        keys, t_ins = state["keys"], state["t_ins"]
+        hits_c, evs_c = state["hits"], state["evs"]
+        t = state["t"] + 1
+        K = keys.shape[0]
+        hit, i = find(keys, key)
+        age_i = t - t_ins[i]
+        bin_i = self._bin(age_i)
+
+        # hit: record the reuse age, refresh the slot
+        hits_h = hits_c.at[bin_i].add(1)
+        t_ins_h = t_ins.at[i].set(t)
+
+        # miss: evict min hit-density (empties first), record eviction age
+        hd = self._hd(hits_c, evs_c)
+        ages = t - t_ins
+        slot_hd = hd[self._bin(ages)]
+        slot_hd = jnp.where(keys == EMPTY, -1.0, slot_hd)
+        v = jnp.argmin(slot_hd).astype(jnp.int32)
+        victim_occupied = keys[v] != EMPTY
+        evs_m = jnp.where(victim_occupied,
+                          evs_c.at[self._bin(t - t_ins[v])].add(1), evs_c)
+        keys_m = keys.at[v].set(key)
+        t_ins_m = t_ins.at[v].set(t)
+
+        keys = jnp.where(hit, keys, keys_m)
+        t_ins = jnp.where(hit, t_ins_h, t_ins_m)
+        hits_c = jnp.where(hit, hits_h, hits_c)
+        evs_c = jnp.where(hit, evs_c, evs_m)
+
+        # periodic integer-halving decay
+        decay = (t % (self.decay_every_factor * K)) == 0
+        hits_c = jnp.where(decay, hits_c // 2, hits_c)
+        evs_c = jnp.where(decay, evs_c // 2, evs_c)
+        return {"keys": keys, "t_ins": t_ins, "hits": hits_c,
+                "evs": evs_c, "t": t}, hit

@@ -1,0 +1,76 @@
+"""Policy interface + shared vectorized primitives.
+
+The paper formulates its caches as ordered lists (rank 1 = top).  The
+TPU-native representation used throughout this repo is a dense ``int32[K]``
+array of keys ordered by rank (index 0 = top of the cache); ``EMPTY`` (-1)
+marks unused slots.  The paper's "shift elements between a and b down one
+position" becomes a masked select against a rolled copy of the array — an
+O(K) *vector* operation that lowers to a handful of VPU selects instead of a
+data-dependent pointer splice.
+
+Every policy is a pure-functional object::
+
+    state = policy.init(K)                  # pytree of fixed-shape arrays
+    state, hit = policy.step(state, key)    # key: int32 scalar, hit: bool
+
+``step`` is traceable (scan/vmap/jit safe).  Policy instances are hashable
+(static) so ``jax.jit(..., static_argnames='policy')`` works.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = jnp.int32(-1)
+
+
+class Policy:
+    """Base class; subclasses implement init/step. Instances are static."""
+
+    name: str = "base"
+
+    def init(self, K: int) -> dict:
+        raise NotImplementedError
+
+    def step(self, state: dict, key: jax.Array):
+        raise NotImplementedError
+
+    # hashability for jit static args -----------------------------------
+    def _fields(self):
+        return tuple(sorted(self.__dict__.items()))
+
+    def __hash__(self):
+        return hash((type(self).__name__, self._fields()))
+
+    def __eq__(self, other):
+        return type(self) is type(other) and self._fields() == other._fields()
+
+    def __repr__(self):
+        args = ", ".join(f"{k}={v}" for k, v in self.__dict__.items())
+        return f"{type(self).__name__}({args})"
+
+
+# ---------------------------------------------------------------------------
+# shared vectorized primitives
+# ---------------------------------------------------------------------------
+
+def find(cache: jax.Array, key: jax.Array):
+    """Return (found, rank) of `key` in the rank-ordered `cache` array."""
+    eq = cache == key
+    return jnp.any(eq), jnp.argmax(eq).astype(jnp.int32)
+
+
+def promote(cache: jax.Array, i: jax.Array, t: jax.Array, key: jax.Array):
+    """Move `key` (currently at rank ``i``) to rank ``t`` (t <= i), shifting
+    ranks [t, i-1] down one.  Also implements miss-insertion when ``i`` is the
+    eviction rank (the old occupant of rank ``i`` simply disappears)."""
+    r = jnp.arange(cache.shape[0], dtype=jnp.int32)
+    rolled = jnp.roll(cache, 1)  # rolled[r] = cache[r-1]
+    return jnp.where(r == t, key, jnp.where((r > t) & (r <= i), rolled, cache))
+
+
+def demote(cache: jax.Array, i: jax.Array, t: jax.Array, key: jax.Array):
+    """Move `key` from rank ``i`` down to rank ``t`` (t >= i); [i+1, t] shift up."""
+    r = jnp.arange(cache.shape[0], dtype=jnp.int32)
+    rolled = jnp.roll(cache, -1)  # rolled[r] = cache[r+1]
+    return jnp.where(r == t, key, jnp.where((r >= i) & (r < t), rolled, cache))

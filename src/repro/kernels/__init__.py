@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical hot spots:
+
+  * flash_attention  — causal GQA/SWA/softcap flash attention (training &
+                       prefill compute hot spot)
+  * decode_attention — flash-decode over the KV slot table with fused DAC
+                       hit-signal (per-slot attention mass) extraction
+  * cache_update     — batched AdaptiveClimb policy step (the op the paper
+                       itemizes in its instructions/request analysis)
+
+Each has a pure-jnp oracle in ref.py; ops.py exposes jit'd wrappers that run
+under the Pallas interpreter on CPU and Mosaic on TPU.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

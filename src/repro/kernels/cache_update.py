@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: batched AdaptiveClimb cache update.
+
+This is the operation the paper itemizes in its instructions-per-request
+analysis (Fig. 9) — one policy step (find / jump update / masked shift) —
+executed for a *batch* of independent caches per grid cell.  The CPU paper
+implementation is a pointer splice; the TPU-native form operates on the
+dense rank row held in VMEM:
+
+  * each grid cell owns a [block_b, K] tile of rank rows (int32);
+  * find = lane-wise compare + iota-min reduction (VPU);
+  * the promote/insert shift is a masked select against a lane-rolled copy —
+    no gather/scatter, K <= a few thousand fits a handful of VREG rows.
+
+The jump scalars ride along as a [block_b] vector.  See ops.adaptive_climb
+for the jit wrapper and ref.adaptive_climb_ref for the oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(cache_ref, jump_ref, key_ref, out_cache_ref, out_jump_ref,
+            hit_ref, *, K: int):
+    cache = cache_ref[...]                     # [bt, K] int32
+    jump = jump_ref[...]                       # [bt]
+    key = key_ref[...]                         # [bt]
+
+    r = jax.lax.broadcasted_iota(jnp.int32, cache.shape, 1)
+    eq = cache == key[:, None]
+    hit = jnp.any(eq, axis=1)                  # [bt]
+    big = jnp.int32(K + 1)
+    i = jnp.min(jnp.where(eq, r, big), axis=1).astype(jnp.int32)  # rank of key
+
+    # --- hit path ---------------------------------------------------------
+    jump_h = jnp.maximum(jump - 1, 1)
+    t_h = jnp.maximum(i - jump_h, 0)
+
+    # --- miss path --------------------------------------------------------
+    jump_m = jnp.minimum(jump + 1, K)
+    t_m = K - jump_m
+    i_m = jnp.full_like(i, K - 1)
+
+    t = jnp.where(hit, t_h, t_m)[:, None]
+    src = jnp.where(hit, i, i_m)[:, None]
+
+    rolled = jnp.concatenate([cache[:, -1:], cache[:, :-1]], axis=1)
+    new_cache = jnp.where(
+        r == t, key[:, None],
+        jnp.where((r > t) & (r <= src), rolled, cache))
+
+    out_cache_ref[...] = new_cache
+    out_jump_ref[...] = jnp.where(hit, jump_h, jump_m)
+    hit_ref[...] = hit.astype(jnp.int32)
+
+
+def adaptive_climb_pallas(cache, jump, key, *, block_b: int = 8,
+                          interpret: bool = False):
+    """One AdaptiveClimb step for a batch of caches.
+
+    cache: [B, K] int32 rank rows; jump: [B] int32; key: [B] int32.
+    Returns (new_cache [B,K], new_jump [B], hit [B] int32).
+    """
+    B, K = cache.shape
+    bt = min(block_b, B)
+    while B % bt:
+        bt -= 1
+    grid = (B // bt,)
+    kernel = functools.partial(_kernel, K=K)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, K), lambda b: (b, 0)),
+            pl.BlockSpec((bt,), lambda b: (b,)),
+            pl.BlockSpec((bt,), lambda b: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, K), lambda b: (b, 0)),
+            pl.BlockSpec((bt,), lambda b: (b,)),
+            pl.BlockSpec((bt,), lambda b: (b,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cache, jump, key)

@@ -1,0 +1,187 @@
+"""Pallas TPU kernel: flash-decode over a KV slot table with *fused DAC
+hit-signal extraction*.
+
+One new token attends over the (bounded or unbounded) slot table; besides
+the attention output, the kernel emits the per-slot attention mass
+(head-mean of the softmax weights) — the hit signal that drives the
+DynamicAdaptiveClimb controller.  Producing it inside the same pass means
+the policy costs zero extra HBM reads of K/V.
+
+Two phases (each a pallas_call):
+  phase 1 (stats)  — flash max/denominator per (b, h) row; K streams once.
+  phase 2 (output) — normalized weights p = exp(s - m)/l; accumulates
+                     o += p @ v across slot blocks (f32 VMEM scratch) and
+                     the head-summed mass per slot block.
+
+The two-phase split is what makes the *normalized* per-slot mass exact in a
+single block-streamed pass structure (running-max rescaling cannot repair
+already-written mass blocks).  Cost: K is read twice (V once); decode is
+HBM-bound on K+V, so the fused signal costs ~K/(K+V) extra traffic — still
+strictly cheaper than a separate policy pass, and the §Perf log quantifies
+it.
+
+Layouts: q [B, Hkv, g, D] (g = H // Hkv query heads per kv head);
+k [B, S, Hkv, D]; v [B, S, Hkv, Dv]; valid [B, S] int32 mask.
+Grid phase 1: (B, Hkv, ns); grid phase 2: (B, ns, Hkv) — hkv innermost so
+the mass accumulator in VMEM scratch sums over heads before flushing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# phase 1: per-row flash stats (m, l)
+# --------------------------------------------------------------------------
+
+def _stats_kernel(q_ref, k_ref, valid_ref, m_out, l_out, m_ref, l_ref, *,
+                  scale, softcap, ns):
+    isl = pl.program_id(2)
+
+    @pl.when(isl == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # [g, D]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)              # [bs, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [g, bs]
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    ok = valid_ref[0] != 0                                 # [bs]
+    s = jnp.where(ok[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    l_ref[...] = l_ref[...] * jnp.exp(m_prev - m_new) + \
+        jnp.sum(jnp.exp(s - m_new[:, None]), axis=1)
+    m_ref[...] = m_new
+
+    @pl.when(isl == ns - 1)
+    def _flush():
+        m_out[0, 0] = m_ref[...]
+        l_out[0, 0] = l_ref[...]
+
+
+# --------------------------------------------------------------------------
+# phase 2: normalized output + fused per-slot mass
+# --------------------------------------------------------------------------
+
+def _out_kernel(q_ref, k_ref, v_ref, valid_ref, m_ref, l_ref, o_ref,
+                mass_ref, acc_ref, mass_acc, *, scale, softcap, ns, nh, H):
+    isl = pl.program_id(1)
+    ih = pl.program_id(2)
+
+    @pl.when(ih == 0)
+    def _init_mass():
+        mass_acc[...] = jnp.zeros_like(mass_acc)
+
+    @pl.when(isl == 0)
+    def _init_acc():
+        # per-kv-head accumulator row (hkv is the innermost grid axis, so
+        # the scratch holds all Hkv rows and each (isl, ih) step updates its
+        # own row)
+        acc_ref[ih] = jnp.zeros_like(acc_ref[ih])
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # [g, D]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)              # [bs, D]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)              # [bs, Dv]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    ok = valid_ref[0] != 0
+    s = jnp.where(ok[None, :], s, NEG_INF)
+
+    m = m_ref[0, 0]                                        # [g]
+    l = jnp.maximum(l_ref[0, 0], 1e-30)
+    p = jnp.exp(s - m[:, None]) / l[:, None]               # [g, bs] final
+
+    acc_ref[ih] += jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+    mass_acc[...] += jnp.sum(p, axis=0) / H
+
+    @pl.when(isl == ns - 1)
+    def _flush_o():
+        o_ref[0, 0] = acc_ref[ih].astype(o_ref.dtype)
+
+    @pl.when(ih == nh - 1)
+    def _flush_mass():
+        mass_ref[0] = mass_acc[...].astype(mass_ref.dtype)
+
+
+def decode_attention_pallas(q, k, v, valid, *, softcap=0.0, scale=None,
+                            block_s: int = 512, interpret: bool = False):
+    """q: [B, H, D]; k/v: [B, S, Hkv, D/Dv]; valid: [B, S] bool.
+
+    Returns (o [B, H, Dv], mass [B, S] f32).
+    """
+    B, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    g = H // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    bs = min(block_s, S)
+    while S % bs:
+        bs -= 1
+    ns = S // bs
+    qg = q.reshape(B, Hkv, g, D)
+    vmask = valid.astype(jnp.int32)
+
+    stats = pl.pallas_call(
+        functools.partial(_stats_kernel, scale=scale, softcap=softcap,
+                          ns=ns),
+        grid=(B, Hkv, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, D), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, bs), lambda b, h, s: (b, s)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g), lambda b, h, s: (b, h, 0)),
+            pl.BlockSpec((1, 1, g), lambda b, h, s: (b, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, g), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, g), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, vmask)
+    m, l = stats
+
+    o, mass = pl.pallas_call(
+        functools.partial(_out_kernel, scale=scale, softcap=softcap, ns=ns,
+                          nh=Hkv, H=H),
+        grid=(B, ns, Hkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, D), lambda b, s, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, s, h: (b, s, h, 0)),
+            pl.BlockSpec((1, bs, 1, Dv), lambda b, s, h: (b, s, h, 0)),
+            pl.BlockSpec((1, bs), lambda b, s, h: (b, s)),
+            pl.BlockSpec((1, 1, g), lambda b, s, h: (b, h, 0)),
+            pl.BlockSpec((1, 1, g), lambda b, s, h: (b, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, Dv), lambda b, s, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs), lambda b, s, h: (b, s)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, g, Dv), q.dtype),
+            jax.ShapeDtypeStruct((B, S), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, g, Dv), jnp.float32),
+            pltpu.VMEM((bs,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, vmask, m, l)
+    return o.reshape(B, H, Dv), mass

@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: causal flash attention (GQA / sliding-window /
+softcap).
+
+Grid (B, H, num_q_blocks, num_kv_blocks); the innermost kv axis iterates
+sequentially on TPU, so the online-softmax accumulators live in VMEM scratch
+and persist across kv blocks (re-initialized at kv==0, flushed to the output
+at the last visited kv block).  Blocks of K/V stream HBM->VMEM; scores,
+the running max/denominator and the f32 accumulator never leave VMEM.
+
+Causal + window structure is exploited two ways:
+  * blocks entirely above the diagonal (or entirely left of the window) are
+    skipped with @pl.when — no MXU work, no accumulator update;
+  * the partial block on the diagonal masks with a lane iota.
+
+MXU alignment: block_q/block_k default to 512/512 and head_dim should be a
+multiple of 128 on real TPU; interpret mode (CPU tests) accepts any shape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale, causal, window, softcap, block_q, block_k, nk, seq_k):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # block-level structure: skip fully-masked kv blocks entirely
+    needed = jnp.bool_(True)
+    if causal:
+        needed &= k_start <= q_start + block_q - 1
+    if window:
+        needed &= k_start + block_k - 1 > q_start - window
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale   # [bq, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)           # [bk, D]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)           # [bk, Dv]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [bq, bk]
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < seq_k
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                                 # [bq]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, window=None, softcap=0.0,
+                           scale=None, block_q=512, block_k=512,
+                           interpret=False):
+    """q: [B, Sq, H, D]; k, v: [B, Sk, Hkv, D/Dv] -> [B, Sq, H, Dv]."""
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    g = H // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+
+    bq = min(block_q, Sq)
+    while Sq % bq:
+        bq -= 1
+    bk = min(block_k, Sk)
+    while Sk % bk:
+        bk -= 1
+    nq, nk = Sq // bq, Sk // bk
+    grid = (B, H, nq, nk)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        block_q=bq, block_k=bk, nk=nk, seq_k=Sk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, iq, ik: (b, ik, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, Dv),
+                         lambda b, h, iq, ik: (b, ik, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, Dv),
+                               lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, Dv), jnp.float32),   # acc
+            pltpu.VMEM((bq,), jnp.float32),      # running max
+            pltpu.VMEM((bq,), jnp.float32),      # running denom
+        ],
+        interpret=interpret,
+    )(q, k, v)

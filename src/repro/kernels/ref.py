@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every Pallas kernel (shape/dtype-sweep targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import attention_dense
+from repro.models.layers import decode_attention as _decode_attention_jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=0.0,
+                        scale=None):
+    """O(S^2) dense attention (repro.models.layers.attention_dense)."""
+    return attention_dense(q, k, v, causal=causal, window=window,
+                           softcap=softcap, scale=scale)
+
+
+def decode_attention_ref(q, k, v, valid, *, softcap=0.0, scale=None):
+    """Materialized decode attention + per-slot mass."""
+    return _decode_attention_jnp(q, k, v, valid, softcap=softcap,
+                                 scale=scale)
+
+
+def adaptive_climb_ref(cache, jump, key):
+    """Batched AdaptiveClimb step — vmap of the repro.core policy."""
+    from repro.core import AdaptiveClimb
+    pol = AdaptiveClimb()
+
+    def one(c, j, k):
+        state, hit = pol.step({"cache": c, "jump": j}, k)
+        return state["cache"], state["jump"], hit.astype(jnp.int32)
+
+    return jax.vmap(one)(cache, jump, key)

@@ -1,0 +1,121 @@
+"""Dry-run profiler: per-instruction HBM/flop/collective attribution with
+JAX op provenance (op_name metadata) — the 'profile' step of the §Perf
+hypothesis->change->measure loop (no real hardware, so the lowered HLO is
+the profile).
+
+  PYTHONPATH=src python -m repro.launch.profile --arch musicgen-medium \
+      --shape prefill_32k --mesh pod --top 15
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse      # noqa: E402
+import re            # noqa: E402
+from collections import defaultdict  # noqa: E402
+
+from repro.launch import roofline as R  # noqa: E402
+
+_METN = re.compile(r'op_name="([^"]+)"')
+
+
+def _mults(comps, entry):
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    changed = True
+    while changed:
+        changed = False
+        for cn in list(comps):
+            m = mult.get(cn, 0.0)
+            if m == 0:
+                continue
+            for ins in comps[cn]:
+                if ins.op == "while" or " while(" in ins.rhs:
+                    mb = re.search(r"body=%?([\w.\-]+)", ins.rhs)
+                    mc = re.search(r"condition=%?([\w.\-]+)", ins.rhs)
+                    trips = R._trip_count(comps.get(mc.group(1), [])) \
+                        if mc else 1
+                    targets = ([(mb.group(1), trips)] if mb else []) + \
+                        ([(mc.group(1), trips + 1)] if mc else [])
+                elif "calls=" in ins.rhs or "to_apply=" in ins.rhs:
+                    targets = [(x, 1) for x in re.findall(
+                        r"(?:calls=|to_apply=)%?([\w.\-]+)", ins.rhs)]
+                else:
+                    continue
+                for cal, f in targets:
+                    if cal in comps and mult[cal] < m * f:
+                        mult[cal] = m * f
+                        changed = True
+    return mult
+
+
+def _opname(ins):
+    m = _METN.search(ins.rhs)
+    if not m:
+        return "<?>"
+    name = m.group(1)
+    return re.sub(r"\[.*?\]", "", name)[-70:]
+
+
+def profile_text(text, top=15, n_chips=256):
+    comps, entry = R.parse_computations(text)
+    sizes = {cn: {i.name: R._span_bytes(i.result_span) for i in instrs}
+             for cn, instrs in comps.items()}
+    mult = _mults(comps, entry)
+    fusion_bodies = set()
+    for cn, instrs in comps.items():
+        for ins in instrs:
+            for cal in re.findall(r"calls=%?([\w.\-]+)", ins.rhs):
+                fusion_bodies.add(cal)
+
+    hbm_rows, coll_rows = [], []
+    for cn, instrs in comps.items():
+        m = mult.get(cn, 0)
+        if m == 0 or cn in fusion_bodies:
+            continue
+        for ins in instrs:
+            is_coll = any(ins.op.startswith(c) for c in R.COLLECTIVES)
+            b = R._span_bytes(ins.result_span) + sum(
+                sizes[cn].get(a, 0) for a in ins.arg_names)
+            if is_coll and not ins.op.endswith("-done"):
+                coll_rows.append((m * b, m, ins.op, _opname(ins)))
+            elif ins.op in R._HBM_OPS or ins.op == "fusion":
+                hbm_rows.append((m * b, m, ins.op, _opname(ins)))
+
+    out = []
+    ana = R.analyze_hlo(text, default_group=n_chips)
+    out.append(f"terms: compute={ana['terms']['compute_s']:.3f}s "
+               f"memory={ana['terms']['memory_s']:.3f}s "
+               f"collective={ana['terms']['collective_s']:.3f}s")
+    out.append(f"hbm_by_op: " + ", ".join(
+        f"{k}={v/1e9:.0f}GB" for k, v in sorted(
+            ana["hbm_by_op"].items(), key=lambda kv: -kv[1])[:6]))
+    out.append("\n== top HBM contributors (upper-bound bytes x trips) ==")
+    for b, m, op, name in sorted(hbm_rows, reverse=True)[:top]:
+        out.append(f"  {b/1e9:9.1f}GB x{m:7.0f} {op:22s} {name}")
+    out.append("\n== top collectives ==")
+    for b, m, op, name in sorted(coll_rows, reverse=True)[:top]:
+        out.append(f"  {b/1e9:9.1f}GB x{m:7.0f} {op:22s} {name}")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--n-micro", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import lower_cell
+    extra = {"n_micro": args.n_micro} if args.n_micro else None
+    lowered, n, meta = lower_cell(args.arch, args.shape, args.mesh,
+                                  remat=args.remat, extra=extra)
+    print(profile_text(lowered.compile().as_text(), top=args.top,
+                       n_chips=n))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Summarize dry-run JSONs into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_):
+    cells = {}
+    for f in glob.glob(os.path.join(dir_, "*.json")):
+        r = json.load(open(f))
+        tag = r.get("tag", "")
+        key = (r["arch"], r["shape"], r["mesh"])
+        if "__" in os.path.basename(f)[:-5].replace(
+                f"{r['arch']}__{r['shape']}__{r['mesh']}", ""):
+            continue  # tagged perf-iteration files are reported separately
+        if os.path.basename(f) == f"{r['arch']}__{r['shape']}__{r['mesh']}.json":
+            cells[key] = r
+    return cells
+
+
+def fmt_s(x):
+    if x >= 100:
+        return f"{x:.0f}"
+    if x >= 1:
+        return f"{x:.2f}"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}m"
+    return f"{x*1e6:.0f}u"
+
+
+def table(cells, mesh="pod", out=None):
+    lines = []
+    lines.append(
+        "| arch | shape | compute_s | memory_s | coll_s | dominant | "
+        "mem_s (kernel) | frac | frac (kernel) | MODEL/HLO |")
+    lines.append("|---|---|---|---|---|---|---|---|---|---|")
+    for (arch, shape, m), r in sorted(cells.items()):
+        if m != mesh or not r.get("ok"):
+            continue
+        rf = r["roofline"]
+        kc = rf.get("kernel_credited", {})
+        lines.append(
+            f"| {arch} | {shape} "
+            f"| {fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} "
+            f"| {fmt_s(rf['collective_s'])} | {rf['dominant'][:-2]} "
+            f"| {fmt_s(kc['memory_s']) if kc else '-'} "
+            f"| {rf['roofline_fraction']:.4f} "
+            f"| {kc.get('roofline_fraction', 0):.4f} "
+            f"| {rf['useful_flops_ratio']:.3f} |")
+    text = "\n".join(lines)
+    if out:
+        with open(out, "w") as f:
+            f.write(text)
+    return text
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod")
+    args = ap.parse_args()
+    cells = load(args.dir)
+    ok = sum(1 for r in cells.values() if r.get("ok"))
+    print(f"# {ok}/{len(cells)} cells ok ({args.mesh} mesh shown)\n")
+    print(table(cells, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,437 @@
+"""Roofline analysis from the compiled (SPMD-partitioned) HLO.
+
+Why not ``compiled.cost_analysis()`` alone: XLA's HloCostAnalysis counts a
+``while`` body ONCE, but every model here scans over layer periods (and the
+train step scans over microbatches), so flops / bytes / collective counts
+must be multiplied by loop trip counts.  This module parses
+``compiled.as_text()`` into computations, recovers each while's trip count
+from its condition (scan conditions compare the counter against a constant),
+propagates multipliers through fusion/call/while edges from ENTRY, and
+accumulates:
+
+  * flops            — dot ops: 2 * prod(out) * contracted_size
+                       (+1 flop/output element for fusions; minor)
+  * hbm bytes        — operand + result bytes of *top-level* instructions
+                       (fusion internals stay in registers/VMEM)
+  * collective bytes — per collective kind, with ring wire-cost factors:
+                         all-gather      (N-1)/N * result
+                         all-reduce    2*(N-1)/N * result
+                         reduce-scatter  (N-1)/N * operand
+                         all-to-all      (N-1)/N * operand
+                         collective-permute      operand
+                       N parsed from replica_groups.
+
+Everything is per-device (the compiled module is the per-device program).
+Validated against cost_analysis on scan-free graphs (tests/test_roofline).
+
+Hardware constants (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_TYPE_RE = re.compile(r"\b(" + "|".join(DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONST_RE = re.compile(r"\bconstant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_HBM_OPS = {
+    "copy", "transpose", "reshape", "broadcast", "slice", "dynamic-slice",
+    "dynamic-update-slice", "concatenate", "gather", "scatter", "reduce",
+    "pad", "select", "convert", "iota", "sort", "reduce-window",
+    "bitcast-convert", "dot", "rng-bit-generator", "cumsum",
+}
+
+
+def _span_bytes(span: str) -> int:
+    """Sum byte sizes of every dtype[shape] token in `span`."""
+    total = 0
+    for dt, dims in _TYPE_RE.findall(span):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(span: str):
+    """(elems, dims) of the first type token in `span`."""
+    m = _TYPE_RE.search(span)
+    if not m:
+        return 0, []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return (math.prod(dims) if dims else 1), dims
+
+
+class _Instr:
+    __slots__ = ("name", "rhs", "op", "result_span", "arg_names")
+
+    def __init__(self, name, rhs):
+        self.name = name
+        self.rhs = rhs
+        mop = re.search(r"\b([a-z][\w\-]*)\(", rhs)
+        self.op = mop.group(1) if mop else ""
+        self.result_span = rhs[: mop.start()] if mop else rhs
+        if mop:
+            depth = 0
+            end = mop.end() - 1
+            for j in range(mop.end() - 1, len(rhs)):
+                if rhs[j] == "(":
+                    depth += 1
+                elif rhs[j] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = j
+                        break
+            args_text = rhs[mop.end():end]
+            self.arg_names = re.findall(r"%([\w.\-]+)", args_text)
+        else:
+            self.arg_names = []
+
+
+def parse_computations(text: str):
+    """Returns ({comp_name: [instr]}, entry_name)."""
+    comps: dict[str, list] = {}
+    entry = None
+    cname = None
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line.rstrip())
+        if mc:
+            cname = mc.group(2)
+            comps[cname] = []
+            if mc.group(1):
+                entry = cname
+            continue
+        s = line.strip()
+        if s == "}":
+            cname = None
+            continue
+        if cname is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi:
+            comps[cname].append(_Instr(mi.group(1), mi.group(2)))
+    return comps, entry
+
+
+def _trip_count(cond_instrs) -> int:
+    best = 1
+    for ins in cond_instrs:
+        for c in _CONST_RE.findall(ins.rhs):
+            best = max(best, int(c))
+    return best
+
+
+def _group_size(rhs: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(rhs)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(rhs)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+def analyze_hlo(text: str, default_group: int = 1) -> dict:
+    """Per-device flops / HBM bytes / collective wire bytes, loop-aware."""
+    comps, entry = parse_computations(text)
+    if entry is None:                     # single anonymous computation
+        entry = next(iter(comps)) if comps else ""
+
+    # name -> byte size and (elems, dims), per computation
+    sizes, shapes = {}, {}
+    for cn, instrs in comps.items():
+        sz, sh = {}, {}
+        for ins in instrs:
+            sz[ins.name] = _span_bytes(ins.result_span)
+            sh[ins.name] = _first_shape(ins.result_span)
+        sizes[cn], shapes[cn] = sz, sh
+
+    # Per fused computation: bytes actually READ per parameter index, and
+    # the bytes actually WRITTEN by the fusion.
+    #   * a parameter whose every use is slice/dynamic-slice/gather touches
+    #     only the sliced window;
+    #   * a parameter that is the *buffer* operand of a dynamic-update-slice
+    #     is updated in place: it reads ~the update window, and the fusion
+    #     writes ~the update window (not the whole buffer) — backward-of-
+    #     scan gradient accumulations hit this path every iteration.
+    fusion_param_reads: dict[str, dict[int, int]] = {}
+    fusion_write_bytes: dict[str, int] = {}
+    layout_ops = {"bitcast", "reshape", "copy", "transpose", "convert",
+                  "bitcast-convert"}
+    for cn, instrs in comps.items():
+        params = {}
+        for ins in instrs:
+            mpar = re.search(r"\bparameter\((\d+)\)", ins.rhs)
+            if mpar:
+                params[ins.name] = int(mpar.group(1))
+        if not params:
+            continue
+        uses = defaultdict(list)
+        for ins in instrs:
+            for a in set(ins.arg_names):
+                uses[a].append(ins)
+        reads = {}
+        for pname, pidx in params.items():
+            full = sizes[cn].get(pname, 0)
+            sliced = 0
+            ok_sliced = True
+            used = bool(uses[pname])
+            stack = [pname]
+            seen = {pname}
+            while stack and ok_sliced:
+                nm = stack.pop()
+                for ins in uses[nm]:
+                    if ins.op in ("slice", "dynamic-slice", "gather"):
+                        sliced += _span_bytes(ins.result_span)
+                    elif ins.op == "dynamic-update-slice" and \
+                            ins.arg_names and ins.arg_names[0] == nm:
+                        # in-place RMW of the window only
+                        upd = sizes[cn].get(ins.arg_names[1], 0) \
+                            if len(ins.arg_names) > 1 else 0
+                        sliced += upd
+                    elif ins.op in layout_ops:
+                        if ins.name not in seen:
+                            seen.add(ins.name)
+                            stack.append(ins.name)
+                    else:
+                        ok_sliced = False
+                        break
+            reads[pidx] = min(sliced, full) if (used and ok_sliced) else \
+                (full if used else 0)
+        fusion_param_reads[cn] = reads
+
+        # write bytes: dus roots write their update window, not the buffer
+        dus_updates = {}
+        produced = {}
+        for ins in instrs:
+            produced[ins.name] = ins
+            if ins.op == "dynamic-update-slice" and len(ins.arg_names) > 1:
+                dus_updates[ins.name] = sizes[cn].get(ins.arg_names[1], 0)
+        root = instrs[-1] if instrs else None
+        if root is not None:
+            names = [root.name]
+            if root.op == "tuple" or root.rhs.lstrip().startswith("("):
+                names = root.arg_names or [root.name]
+            wb = 0
+            shrunk = False
+            for nm in names:
+                if nm in dus_updates:
+                    wb += dus_updates[nm]
+                    shrunk = True
+                else:
+                    src = produced.get(nm)
+                    wb += _span_bytes(src.result_span) if src else 0
+            if shrunk:
+                fusion_write_bytes[cn] = wb
+
+    # computations that are fusion bodies: their instructions live in
+    # VMEM/registers — only their dots' flops count, never HBM traffic
+    fusion_bodies = set()
+    for cn, instrs in comps.items():
+        for ins in instrs:
+            for cal in re.findall(r"calls=%?([\w.\-]+)", ins.rhs):
+                fusion_bodies.add(cal)
+
+    # multipliers via fixpoint over call edges
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    changed = True
+    while changed:
+        changed = False
+        for cn in list(comps):
+            m = mult.get(cn, 0.0)
+            if m == 0.0:
+                continue
+            for ins in comps[cn]:
+                if ins.op == "while" or " while(" in ins.rhs:
+                    mb = re.search(r"body=%?([\w.\-]+)", ins.rhs)
+                    mc = re.search(r"condition=%?([\w.\-]+)", ins.rhs)
+                    trips = _trip_count(comps.get(mc.group(1), [])) \
+                        if mc else 1
+                    targets = []
+                    if mb:
+                        targets.append((mb.group(1), trips))
+                    if mc:
+                        targets.append((mc.group(1), trips + 1))
+                elif ins.op in ("fusion", "call") or "to_apply=" in ins.rhs \
+                        or "calls=" in ins.rhs:
+                    targets = [(c, 1) for c in re.findall(
+                        r"(?:calls=|to_apply=)%?([\w.\-]+)", ins.rhs)]
+                elif ins.op == "conditional":
+                    targets = [(c, 1) for c in re.findall(
+                        r"branch_computations=\{([^}]*)\}", ins.rhs)
+                        for c in re.findall(r"%?([\w.\-]+)", c)]
+                else:
+                    continue
+                for callee, factor in targets:
+                    if callee in comps and mult[callee] < m * factor:
+                        mult[callee] = m * factor
+                        changed = True
+
+    flops = 0.0
+    hbm = 0.0
+    coll = defaultdict(float)
+    counts = defaultdict(float)
+    hbm_by_op = defaultdict(float)
+    hbm_attn_inner = 0.0
+
+    # attention-inner computations: their intermediates (scores, softmax
+    # stats, p@v partials) are HBM traffic in the jnp-lowered program but
+    # VMEM-resident in the Pallas flash/flash-decode kernels.  Tagged by
+    # the attention einsum labels in op_name metadata.
+    _ATTN_PAT = re.compile(
+        r"op_name=\"[^\"]*(flash_attention_jnp|decode_attention_jnp"
+        r"|bqhgk|bqhgd|bhgs,|bhgd,|bhst|bhs,bsr)")
+    # Tagging granularity: an instruction is attention-inner if (a) its own
+    # op_name carries the scope, or (b) it has no metadata (XLA-synthesized
+    # wrappers like wrapped_reduce-window) / is a fusion, and the majority
+    # of metadata-carrying instructions in the relevant computation (fusion
+    # body, else enclosing computation) are scope-tagged.  This catches the
+    # softmax reduce-windows inside the pure-attention kv-scan bodies while
+    # leaving mixed layer bodies (MLP + cache writes) untagged.
+    comp_tag_frac = {}
+    for cn, instrs in comps.items():
+        tagged = sum(1 for i in instrs if _ATTN_PAT.search(i.rhs))
+        meta = sum(1 for i in instrs if "op_name=" in i.rhs)
+        comp_tag_frac[cn] = (tagged / meta) if meta else -1.0
+
+    def _is_attn_instr(ins, cn):
+        if _ATTN_PAT.search(ins.rhs):
+            return True
+        ref = None
+        if ins.op == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", ins.rhs)
+            if m and comp_tag_frac.get(m.group(1), -1.0) >= 0.0:
+                ref = comp_tag_frac[m.group(1)]
+        if ref is None and "op_name=" not in ins.rhs:
+            ref = comp_tag_frac.get(cn, -1.0)
+        return ref is not None and ref >= 0.5
+
+    def op_bytes(cn, ins):
+        sz = sizes[cn]
+        return sum(sz.get(a, 0) for a in ins.arg_names)
+
+    for cn, instrs in comps.items():
+        m = mult.get(cn, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = cn in fusion_bodies
+        for ins in instrs:
+            is_attn = _is_attn_instr(ins, cn)
+            if in_fusion:
+                if ins.op == "dot":       # dots fused via output fusion
+                    out_elems, _ = _first_shape(ins.result_span)
+                    k = 1
+                    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}",
+                                   ins.rhs)
+                    if mc and ins.arg_names:
+                        _, lhs_dims = shapes[cn].get(ins.arg_names[0],
+                                                     (0, []))
+                        if mc.group(1) and lhs_dims:
+                            for d in mc.group(1).split(","):
+                                if int(d) < len(lhs_dims):
+                                    k *= lhs_dims[int(d)]
+                    flops += m * 2.0 * out_elems * k
+                continue
+            hbm_before = hbm
+            if ins.op == "dot":
+                out_elems, _ = _first_shape(ins.result_span)
+                k = 1
+                mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}",
+                               ins.rhs)
+                if mc and ins.arg_names:
+                    _, lhs_dims = shapes[cn].get(ins.arg_names[0], (0, []))
+                    if mc.group(1) and lhs_dims:
+                        for d in mc.group(1).split(","):
+                            if int(d) < len(lhs_dims):
+                                k *= lhs_dims[int(d)]
+                flops += m * 2.0 * out_elems * k
+                hbm += m * (_span_bytes(ins.result_span) + op_bytes(cn, ins))
+            elif ins.op == "fusion":
+                out_elems, _ = _first_shape(ins.result_span)
+                flops += m * out_elems
+                mcal = re.search(r"calls=%?([\w.\-]+)", ins.rhs)
+                callee = mcal.group(1) if mcal else None
+                reads = fusion_param_reads.get(callee, None)
+                if reads is not None:
+                    opb = sum(
+                        min(sizes[cn].get(a, 0), reads.get(i, 1 << 62))
+                        for i, a in enumerate(ins.arg_names))
+                else:
+                    opb = op_bytes(cn, ins)
+                wb = fusion_write_bytes.get(
+                    callee, _span_bytes(ins.result_span))
+                hbm += m * (wb + opb)
+            elif any(ins.op.startswith(c) for c in COLLECTIVES):
+                if ins.op.endswith("-done"):
+                    continue
+                kind = next(c for c in COLLECTIVES if ins.op.startswith(c))
+                n = _group_size(ins.rhs, default_group)
+                rb = _span_bytes(ins.result_span)
+                ob = op_bytes(cn, ins)
+                ring = (n - 1) / max(n, 1)
+                wire = {"all-gather": rb * ring,
+                        "all-reduce": 2 * rb * ring,
+                        "reduce-scatter": ob * ring,
+                        "all-to-all": ob * ring,
+                        "collective-permute": ob}[kind]
+                coll[kind] += m * wire
+                counts[kind] += m
+                hbm += m * (rb + ob)
+            elif ins.op in ("dynamic-slice", "slice", "gather"):
+                # reads only the sliced/gathered window, then writes it
+                hbm += m * 2 * _span_bytes(ins.result_span)
+            elif ins.op == "dynamic-update-slice":
+                # reads + writes the update region only (in-place alias)
+                upd = sizes[cn].get(ins.arg_names[1], 0) \
+                    if len(ins.arg_names) > 1 else 0
+                hbm += m * 2 * upd
+            elif ins.op == "scatter":
+                upd = sizes[cn].get(ins.arg_names[-1], 0) \
+                    if ins.arg_names else 0
+                hbm += m * 2 * upd
+            elif ins.op in _HBM_OPS:
+                hbm += m * (_span_bytes(ins.result_span) + op_bytes(cn, ins))
+            hbm_by_op[ins.op] += hbm - hbm_before
+            if is_attn:
+                hbm_attn_inner += hbm - hbm_before
+
+    wire_total = sum(coll.values())
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "collective_bytes": dict(coll),
+        "collective_counts": dict(counts),
+        "hbm_by_op": dict(hbm_by_op),
+        "hbm_attention_inner": hbm_attn_inner,
+        "wire_bytes": wire_total,
+        "terms": {
+            "compute_s": flops / PEAK_FLOPS,
+            "memory_s": hbm / HBM_BW,
+            "collective_s": wire_total / ICI_BW,
+        },
+    }
+
+
+def dominant_term(terms: dict) -> str:
+    return max(("compute_s", "memory_s", "collective_s"),
+               key=lambda k: terms[k])

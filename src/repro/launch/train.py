@@ -1,0 +1,67 @@
+"""Training entrypoint.
+
+  PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b --smoke \
+      --steps 200 --batch 8 --seq 128
+
+Full-config multi-pod launches use the same code path with
+``--mesh pod|multipod`` (on real hardware each host runs this program;
+jax.distributed.initialize is called when JAX_COORDINATOR is set).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--moments", default="float32",
+                    choices=["float32", "int8"])
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "pod", "multipod"])
+    args = ap.parse_args()
+
+    if os.environ.get("JAX_COORDINATOR"):
+        import jax
+        jax.distributed.initialize()
+
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_production_mesh, shard_ctx
+    from repro.optim import AdamWConfig
+    from repro.train import TrainConfig, Trainer
+
+    cfg = get_arch(args.arch, smoke=args.smoke)
+    sctx = None
+    if args.mesh != "none":
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+        sctx = shard_ctx(mesh)
+
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                      total_steps=args.steps, moment_dtype=args.moments)
+    tcfg = TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                       ckpt_every=args.ckpt_every,
+                       global_batch=args.batch, seq_len=args.seq,
+                       n_microbatches=args.microbatches, remat=args.remat)
+    trainer = Trainer(cfg, opt, tcfg, sctx=sctx)
+    trainer.run()
+    hist = trainer.history
+    if hist:
+        print(f"[train] {args.arch}: step {hist[0]['step']}..."
+              f"{hist[-1]['step']}  loss {hist[0]['loss']:.4f} -> "
+              f"{hist[-1]['loss']:.4f}  "
+              f"stragglers={trainer.watchdog.flagged}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""LM substrate: composable decoder covering dense / MoE / MLA / SSM /
+hybrid architectures, with sharding rules for the production mesh."""
+from .config import ArchConfig, LayerSpec, MambaSpec, MoESpec, XLSTMSpec
+from .model import (forward, init_params, init_params_shape, lm_loss,
+                    param_count)
+from .sharding import ShardCtx, param_specs, shardings
+
+__all__ = [
+    "ArchConfig", "LayerSpec", "MambaSpec", "MoESpec", "XLSTMSpec",
+    "forward", "init_params", "init_params_shape", "lm_loss", "param_count",
+    "ShardCtx", "param_specs", "shardings",
+]

@@ -1,0 +1,272 @@
+"""Core transformer layers, pure JAX (no flax).
+
+Parameters are plain nested dicts of jnp arrays.  All inits take an explicit
+PRNG key and a dtype.  Attention is a chunked (flash-style) online-softmax
+implementation: O(chunk_q x chunk_k) live scores instead of O(S^2), which is
+what makes the 32k prefill cells compilable and memory-sane; sliding-window
+layers restrict the kv range per q-chunk with dynamic slices so banded
+attention costs O(S x W) FLOPs, not O(S^2).
+
+The Pallas flash kernel in ``repro.kernels.flash_attention`` is the TPU
+drop-in for `chunked_attention` (selected with ``impl='pallas'``); this jnp
+path is also its correctness oracle.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(x, p, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: [..., S, H, D] (D even), positions: [..., S] int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(ang)[..., None, :]                   # [..., S, 1, D/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked flash-style attention (jnp oracle / CPU path)
+# ---------------------------------------------------------------------------
+
+def _softcap(scores, cap):
+    if cap:
+        return jnp.tanh(scores / cap) * cap
+    return scores
+
+
+def attention_dense(q, k, v, *, causal=True, window=None, softcap=0.0,
+                    q_offset=0, scale=None):
+    """Reference O(S^2) attention.  q:[B,Sq,H,D] k:[B,Sk,Hkv,D] v:[B,Sk,Hkv,Dv]."""
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    g = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, g, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf * scale, k.astype(jnp.float32))
+    s = _softcap(s, softcap)
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, softcap=0.0,
+                      chunk_q=512, chunk_k=512, scale=None):
+    """Flash-style chunked attention with online softmax.
+
+    q: [B, Sq, H, D]; k, v: [B, Sk, Hkv, D]; GQA via H % Hkv == 0.
+    Sliding-window layers slice a banded kv range per q-chunk, so the
+    compiled FLOPs are O(Sq*W) rather than O(Sq*Sk).
+    Assumes self-attention alignment: q token i attends to kv <= i.
+    """
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    g = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    cq = min(chunk_q, Sq)
+    while Sq % cq:
+        cq -= 1
+    nq = Sq // cq
+
+    if window:
+        # banded: kv range for q-chunk starting at qs is [qs+cq-band, qs+cq)
+        band = min(Sk, ((window + cq + chunk_k - 1) // chunk_k) * chunk_k)
+    else:
+        band = Sk
+    ck = min(chunk_k, band)
+    while band % ck:
+        ck -= 1
+    nk = band // ck
+
+    q = q.reshape(B, nq, cq, H, D).transpose(1, 0, 2, 3, 4)  # [nq, B, ...]
+
+    def q_chunk_body(qi, q_blk):
+        qs = qi * cq                                    # chunk start
+        base = jnp.maximum(0, qs + cq - band) if window else 0
+        acc = jnp.zeros((B, cq, H, Dv), jnp.float32)
+        m = jnp.full((B, cq, H), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, cq, H), jnp.float32)
+        qf = q_blk.astype(jnp.float32) * scale
+        qf = qf.reshape(B, cq, Hkv, g, D)
+
+        def kv_body(carry, ki):
+            acc, m, l = carry
+            ks = base + ki * ck
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ks, ck, 1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ks, ck, 1)
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, k_blk.astype(jnp.float32))
+            s = _softcap(s, softcap)
+            qpos = qs + jnp.arange(cq)[:, None]
+            kpos = ks + jnp.arange(ck)[None, :]
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= kpos <= qpos
+            if window:
+                mask &= kpos > qpos - window
+            s = jnp.where(mask[None, :, None, None], s, NEG_INF)
+            s = s.reshape(B, cq, H, ck)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            p = p.reshape(B, cq, Hkv, g, ck)
+            pv = jnp.einsum("bqhgk,bkhd->bqhgd", p, v_blk.astype(jnp.float32))
+            acc = acc * corr[..., None] + pv.reshape(B, cq, H, Dv)
+            return (acc, m_new, l_new), None
+
+        (acc, m, l), _ = jax.lax.scan(kv_body, (acc, m, l), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.astype(q_blk.dtype)
+
+    with jax.named_scope("flash_attention_jnp"):
+        out = jax.lax.map(lambda args: q_chunk_body(*args),
+                          (jnp.arange(nq), q))
+        return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, Dv)
+
+
+def decode_attention(q, k_cache, v_cache, valid, *, softcap=0.0, scale=None):
+    """Single-token decode attention over a KV slot table.
+
+    q: [B, H, D]; k_cache/v_cache: [B, Smax, Hkv, Dv]; valid: [B, Smax]
+    bool.  Returns ([B, H, Dv], per-slot attention mass [B, Smax]) — the
+    mass is the DAC hit signal, produced in the same pass (no extra HBM
+    traffic; the Pallas kernel fuses it the same way).
+    """
+    B, H, D = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    Dv = v_cache.shape[-1]
+    g = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    with jax.named_scope("decode_attention_jnp"):
+        qf = (q.astype(jnp.float32) * scale).reshape(B, Hkv, g, D)
+        s = jnp.einsum("bhgd,bshd->bhgs", qf, k_cache.astype(jnp.float32))
+        s = _softcap(s, softcap)
+        s = jnp.where(valid[:, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+        mass = p.reshape(B, H, Smax).mean(axis=1)
+        return o.reshape(B, H, Dv).astype(q.dtype), mass
+
+
+# ---------------------------------------------------------------------------
+# attention block (GQA / SWA / softcap)
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.head_dim
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd), dtype, fan_in=d),
+        "wk": dense_init(ks[1], (d, Hkv, hd), dtype, fan_in=d),
+        "wv": dense_init(ks[2], (d, Hkv, hd), dtype, fan_in=d),
+        "wo": dense_init(ks[3], (H, hd, d), dtype, fan_in=H * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((Hkv, hd), dtype)
+        p["bv"] = jnp.zeros((Hkv, hd), dtype)
+    return p
+
+
+def attn_qkv(x, p, cfg, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(x, p, cfg, spec, positions, impl="jnp"):
+    """Full-sequence (training / prefill) attention block body."""
+    q, k, v = attn_qkv(x, p, cfg, positions)
+    if impl == "pallas":
+        from repro.kernels.ops import flash_attention
+        o = flash_attention(q, k, v, causal=True, window=spec.window,
+                            softcap=cfg.attn_softcap)
+    else:
+        o = chunked_attention(q, k, v, causal=True, window=spec.window,
+                              softcap=cfg.attn_softcap,
+                              chunk_q=cfg.attn_chunk_q,
+                              chunk_k=cfg.attn_chunk_k)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# gated MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d, ff, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, ff), dtype),
+        "w_up": dense_init(ks[1], (d, ff), dtype),
+        "w_down": dense_init(ks[2], (ff, d), dtype, fan_in=ff),
+    }
+
+
+def mlp_apply(x, p, act="silu"):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    a = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    return jnp.einsum("bsf,fd->bsd", a * u, p["w_down"])

@@ -1,0 +1,121 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+KV is compressed into a per-token latent c_kv of rank ``kv_lora_rank`` plus a
+single shared rotary key k_rope of dim ``qk_rope_head_dim``; per-head keys and
+values are up-projected from the latent.  The decode path caches only
+(latent, k_rope) — `(512+64)` floats per token instead of
+`2*H*head_dim` — and uses the *absorbed* formulation (q projected into latent
+space through w_kb) so decode attention is computed directly against the
+latent cache without materializing per-head K/V.
+
+Queries optionally go through a rank-``q_lora_rank`` bottleneck (236B config).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (NEG_INF, apply_rope, chunked_attention, dense_init,
+                     rmsnorm, rmsnorm_init)
+
+
+def mla_init(key, cfg, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    r, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        # kv path: x -> [latent r | k_rope dr]
+        "w_kva": dense_init(ks[0], (d, r + dr), dtype),
+        "kv_norm": rmsnorm_init(r, dtype),
+        # latent -> per-head [k_nope dn | v dv]
+        "w_kvb": dense_init(ks[1], (r, H, dn + dv), dtype, fan_in=r),
+        "wo": dense_init(ks[2], (H, dv, d), dtype, fan_in=H * dv),
+    }
+    if qr:
+        p["w_qa"] = dense_init(ks[3], (d, qr), dtype)
+        p["q_norm"] = rmsnorm_init(qr, dtype)
+        p["w_qb"] = dense_init(ks[4], (qr, H, dn + dr), dtype, fan_in=qr)
+    else:
+        p["w_q"] = dense_init(ks[5], (d, H, dn + dr), dtype)
+    return p
+
+
+def _queries(x, p, cfg, positions):
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        qa = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["w_qa"]), p["q_norm"],
+                     cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", qa, p["w_qb"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_latent(x, p, cfg, positions):
+    """x -> (latent [B,S,r], k_rope [B,S,1,dr]); this pair is the KV cache."""
+    r, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    kva = jnp.einsum("bsd,dr->bsr", x, p["w_kva"])
+    latent = rmsnorm(kva[..., :r], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kva[..., None, r:], positions, cfg.rope_theta)
+    return latent, k_rope
+
+
+def mla_apply(x, p, cfg, positions):
+    """Full-sequence MLA (training / prefill): materialize per-head K/V and
+    run standard chunked attention with the split-softmax-scale trick."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _queries(x, p, cfg, positions)
+    latent, k_rope = mla_latent(x, p, cfg, positions)
+    kvb = jnp.einsum("bsr,rhk->bshk", latent, p["w_kvb"])
+    k_nope, v = kvb[..., :dn], kvb[..., dn:]
+    # concat nope|rope into one (dn+dr)-dim attention; scale uses full dim
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, dr))],
+                        axis=-1)
+    scale = 1.0 / math.sqrt(dn + dr)
+    o = chunked_attention(q, k, v, causal=True, scale=scale,
+                          chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k)
+    return jnp.einsum("bshv,hvd->bsd", o, p["wo"])
+
+
+def mla_attend(x, p, cfg, latent_cache, krope_cache, valid, position):
+    """Absorbed-form single-token decode attention.
+
+    x: [B, 1, d] (pre-normed block input); latent_cache: [B, Smax, r];
+    krope_cache: [B, Smax, dr]; valid: [B, Smax] bool.  The caller writes
+    the new token's (latent, k_rope) — from ``mla_latent`` — into the cache
+    *before* attending, so the token sees itself.  Returns (attn_out [B,d],
+    per-slot attention mass [B, Smax] — the DAC hit signal).
+    """
+    B = x.shape[0]
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    positions = jnp.broadcast_to(position[:, None], (B, 1))
+
+    q_nope, q_rope = _queries(x, p, cfg, positions)       # [B,1,H,*]
+    w_kb = p["w_kvb"][..., :dn]                           # [r, H, dn]
+    w_vb = p["w_kvb"][..., dn:]                           # [r, H, dv]
+    # absorb: q_eff[h] = w_kb[:, h] @ q_nope[h]  -> latent space
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, w_kb)    # [B,1,H,r]
+    scale = 1.0 / math.sqrt(dn + dr)
+    with jax.named_scope("decode_attention_jnp"):
+        s = jnp.einsum("bshr,btr->bhst", q_lat,
+                       latent_cache.astype(q_lat.dtype))
+        s = s + jnp.einsum("bshk,btk->bhst", q_rope,
+                           krope_cache.astype(q_rope.dtype))
+        s = (s.astype(jnp.float32) * scale)[:, :, 0]      # [B,H,Smax]
+        s = jnp.where(valid[:, None, :], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)                   # [B,H,Smax]
+        o_lat = jnp.einsum("bhs,bsr->bhr", pr,
+                           latent_cache.astype(jnp.float32))  # [B,H,r]
+    o = jnp.einsum("bhr,rhv->bhv", o_lat.astype(x.dtype), w_vb)
+    out = jnp.einsum("bhv,hvd->bd", o, p["wo"])
+    mass = pr.mean(axis=1)                                # [B,Smax]
+    return out, mass

@@ -1,0 +1,246 @@
+"""Composable decoder: scan-over-periods, remat, sharding constraints.
+
+``init_params(cfg, key)`` builds the parameter pytree; ``forward`` runs the
+stack for training (logits) or prefill (logits + per-layer caches).  Layer
+parameters are stacked along a leading ``n_periods`` axis and the stack is
+applied with ``lax.scan`` so the HLO size is independent of depth; the scan
+body is wrapped in ``jax.checkpoint`` with a selectable remat policy.
+
+Single-token decode lives in ``repro.serving.serve_step`` (it scans the same
+stacked params with per-period recurrent/KV state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import ssm
+from .config import ArchConfig, LayerSpec
+from .layers import (attn_apply, attn_init, attn_qkv, dense_init, embed_init,
+                     mlp_apply, mlp_init, rmsnorm, rmsnorm_init)
+
+REMAT_POLICIES = {
+    "none": None,                                   # no remat
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ArchConfig, spec: LayerSpec, dtype):
+    ks = jax.random.split(key, 4)
+    p = {}
+    if spec.kind == "attn":
+        p["attn_norm"] = rmsnorm_init(cfg.d_model, dtype)
+        p["attn"] = attn_init(ks[0], cfg, dtype)
+    elif spec.kind == "mla":
+        p["attn_norm"] = rmsnorm_init(cfg.d_model, dtype)
+        p["attn"] = mla_mod.mla_init(ks[0], cfg, dtype)
+    elif spec.kind == "mamba":
+        p["attn_norm"] = rmsnorm_init(cfg.d_model, dtype)
+        p["mamba"] = ssm.mamba_init(ks[0], cfg, dtype)
+    elif spec.kind == "mlstm":
+        p["attn_norm"] = rmsnorm_init(cfg.d_model, dtype)
+        p["mlstm"] = ssm.mlstm_init(ks[0], cfg, dtype)
+    elif spec.kind == "slstm":
+        p["attn_norm"] = rmsnorm_init(cfg.d_model, dtype)
+        p["slstm"] = ssm.slstm_init(ks[0], cfg, dtype)
+    else:  # pragma: no cover
+        raise ValueError(spec.kind)
+
+    if spec.kind in ("attn", "mla", "mamba"):
+        if spec.moe and cfg.moe:
+            p["ffn_norm"] = rmsnorm_init(cfg.d_model, dtype)
+            p["moe"] = moe_mod.moe_init(ks[1], cfg, dtype)
+        elif cfg.d_ff:
+            p["ffn_norm"] = rmsnorm_init(cfg.d_model, dtype)
+            p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dtype = cfg.dtype
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+
+    def period_init(k):
+        pks = jax.random.split(k, len(cfg.period))
+        return {f"l{i}": _layer_init(pks[i], cfg, spec, dtype)
+                for i, spec in enumerate(cfg.period)}
+
+    layer_keys = jax.random.split(k_layers, cfg.n_periods)
+    params = {
+        "embed": embed_init(k_embed, (cfg.vocab, cfg.d_model), dtype),
+        "layers": jax.vmap(period_init)(layer_keys),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, (cfg.d_model, cfg.vocab),
+                                       dtype)
+    return params
+
+
+def init_params_shape(cfg: ArchConfig):
+    """Shape-only init (eval_shape) — no allocation, for the dry-run."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def param_count(cfg: ArchConfig, active_only: bool = False) -> int:
+    """Exact parameter count from shape-only init.
+
+    active_only: subtract the routed-expert parameters a token does NOT
+    touch (MoE), giving N_active for the 6·N_active·D roofline bookkeeping.
+    """
+    import numpy as np
+    shapes = init_params_shape(cfg)
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+    if active_only and cfg.moe is not None:
+        m = cfg.moe
+        per_layer = 3 * cfg.d_model * m.d_ff_expert * (m.n_experts - m.top_k)
+        n_moe = sum(1 for s in cfg.layer_specs() if s.moe)
+        n -= per_layer * n_moe
+    return n
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _apply_layer(x, p, cfg, spec: LayerSpec, positions, sctx, impl,
+                 want_cache):
+    """One layer; returns (x, cache_pytree)."""
+    cache = {}
+    h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    if spec.kind == "attn":
+        if want_cache:
+            q, k, v = attn_qkv(h, p["attn"], cfg, positions)
+            if sctx is not None:
+                q, k, v = sctx.act_heads(q), sctx.act_heads(k), sctx.act_heads(v)
+            from .layers import chunked_attention
+            o = chunked_attention(q, k, v, causal=True, window=spec.window,
+                                  softcap=cfg.attn_softcap,
+                                  chunk_q=cfg.attn_chunk_q,
+                                  chunk_k=cfg.attn_chunk_k)
+            att = jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+            cache = {"k": k, "v": v}
+        else:
+            att = attn_apply(h, p["attn"], cfg, spec, positions, impl=impl)
+        x = x + att
+    elif spec.kind == "mla":
+        if want_cache:
+            latent, krope = mla_mod.mla_latent(h, p["attn"], cfg, positions)
+            cache = {"latent": latent, "krope": krope[:, :, 0]}
+        x = x + mla_mod.mla_apply(h, p["attn"], cfg, positions)
+    elif spec.kind == "mamba":
+        out = ssm.mamba_apply(h, p["mamba"], cfg, return_state=want_cache)
+        out, cache = out if want_cache else (out, {})
+        x = x + out
+    elif spec.kind == "mlstm":
+        out = ssm.mlstm_apply(h, p["mlstm"], cfg, return_state=want_cache)
+        out, cache = out if want_cache else (out, {})
+        x = x + out
+    elif spec.kind == "slstm":
+        out = ssm.slstm_apply(h, p["slstm"], cfg, return_state=want_cache)
+        out, cache = out if want_cache else (out, {})
+        x = x + out
+
+    if "moe" in p:
+        h = rmsnorm(x, p["ffn_norm"], cfg.norm_eps)
+        ep = sctx.ep if sctx is not None else None
+        x = x + moe_mod.moe_apply(h, p["moe"], cfg, ep_constraint=ep)
+    elif "mlp" in p:
+        h = rmsnorm(x, p["ffn_norm"], cfg.norm_eps)
+        x = x + mlp_apply(h, p["mlp"], cfg.act)
+    if sctx is not None:
+        x = sctx.act_btd(x)
+    return x, cache
+
+
+def forward(params, cfg: ArchConfig, tokens=None, embeds=None, sctx=None,
+            impl="jnp", remat="full", want_cache=False, positions=None,
+            last_only=False):
+    """Run the decoder.
+
+    tokens: [B, S] int32 (or embeds: [B, S, d] for stub-frontend archs).
+    Returns logits [B, S, V] (f32) and, if want_cache, the per-period cache
+    pytree (leading dim n_periods).  last_only=True computes logits for the
+    final position only (prefill: avoids materializing [B, S, V]).
+    """
+    if cfg.embeds_input:
+        assert embeds is not None, f"{cfg.name} takes precomputed embeddings"
+        x = embeds.astype(cfg.dtype)
+    else:
+        x = params["embed"][tokens]
+    B, S = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+    if sctx is not None:
+        x = sctx.act_btd(x)
+
+    def body(x, period_params):
+        caches = {}
+        for i, spec in enumerate(cfg.period):
+            x, c = _apply_layer(x, period_params[f"l{i}"], cfg, spec,
+                                positions, sctx, impl, want_cache)
+            caches[f"l{i}"] = c
+        return x, caches
+
+    policy = REMAT_POLICIES[remat]
+    if remat != "none":
+        body = jax.checkpoint(body, policy=policy)
+    x, caches = jax.lax.scan(body, x, params["layers"])
+
+    if last_only:
+        x = x[:, -1:]
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    if sctx is not None:
+        tp = sctx.tp if cfg.vocab % sctx.axis_size(sctx.tp) == 0 else None
+        logits = sctx.cons(logits, sctx.batch_axes, None, tp)
+    return (logits, caches) if want_cache else logits
+
+
+def lm_loss(params, cfg, batch, sctx=None, impl="jnp", remat="full"):
+    """Next-token cross-entropy.  batch: {tokens or embeds, labels, mask?}."""
+    logits = forward(params, cfg, tokens=batch.get("tokens"),
+                     embeds=batch.get("embeds"), sctx=sctx, impl=impl,
+                     remat=remat)
+    labels = batch["labels"]
+    # label log-prob via masked reduction (NOT take_along_axis: gathering
+    # along the vocab axis would force an all-gather of the vocab-sharded
+    # logits; the iota-compare/select/reduce partitions cleanly)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    v_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    label_logit = jnp.sum(
+        jnp.where(v_iota == labels[..., None], logits, 0.0), axis=-1)
+    ll = label_logit - lse
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(ll)
+    loss = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    if cfg.moe is not None:
+        # aux load-balance loss on the first MoE layer's router of each period
+        aux = 0.0
+        n = 0
+        x = (batch["embeds"].astype(cfg.dtype) if cfg.embeds_input
+             else params["embed"][batch["tokens"]])
+        for i, spec in enumerate(cfg.period):
+            if spec.moe:
+                router0 = jax.tree.map(lambda a: a[0],
+                                       params["layers"][f"l{i}"]["moe"]["router"])
+                aux = aux + moe_mod.aux_load_balance_loss(x, router0, cfg)
+                n += 1
+        if n:
+            loss = loss + 0.01 * aux / n
+    return loss

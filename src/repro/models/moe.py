@@ -1,0 +1,126 @@
+"""Mixture-of-Experts FFN with grouped capacity dispatch (GShard-style).
+
+Tokens are grouped per sequence ([B] is the dispatch group dim), and each
+group scatters its tokens into a dense per-expert buffer ``[B, E, C, d]``
+followed by one *batched* expert matmul.  Keeping the group dim leading means
+every dispatch-side op is batched over B — which stays sharded over the data
+axis — while the expert dim shards over the mesh 'model' axis (expert
+parallelism).  XLA inserts the EP collectives from sharding constraints
+alone; the §Perf hillclimb replaces them with an explicit shard_map
+all-to-all where the auto-SPMD choice is wasteful.
+
+Tokens beyond an expert's per-group capacity C = ceil(S*k/E * cf) are
+dropped (classic capacity-factor dropping); the residual stream carries them
+unchanged.  DeepSeek-style shared experts are a dense gated MLP of width
+``n_shared * d_ff_expert``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, mlp_apply, mlp_init
+
+
+def moe_init(key, cfg, dtype):
+    d = cfg.d_model
+    m = cfg.moe
+    E, ff = m.n_experts, m.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "w_gate": dense_init(ks[1], (E, d, ff), dtype),
+        "w_up": dense_init(ks[2], (E, d, ff), dtype),
+        "w_down": dense_init(ks[3], (E, ff, d), dtype, fan_in=ff),
+    }
+    if m.n_shared:
+        p["shared"] = mlp_init(ks[4], d, m.n_shared * ff, dtype)
+    return p
+
+
+def capacity(group_tokens: int, cfg) -> int:
+    m = cfg.moe
+    c = int(group_tokens * m.top_k / m.n_experts * m.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to 8 lanes
+
+
+def route(x, router_w, cfg):
+    """Router.  x: [B,S,d] -> (idx [B,S,k], gates [B,S,k], probs [B,S,E])."""
+    m = cfg.moe
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, m.top_k)
+    if m.router_norm_topk:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return idx, gates, probs
+
+
+def moe_apply(x, p, cfg, ep_constraint=None):
+    """x: [B, S, d] -> [B, S, d].
+
+    ep_constraint: optional fn applied to the [B, E, C, *] dispatch buffers
+    to pin them to the expert-parallel sharding (supplied by the model
+    wrapper; identity when running unsharded).
+
+    Decode (S == 1): the whole batch is one dispatch group — per-sequence
+    capacity would allocate E x C_min rows per token (~200x waste for
+    top-6-of-160); batch-grouping shrinks the dispatch/combine buffers and
+    their collectives by the same factor (§Perf cell C, iteration 2).
+    """
+    B, S, d = x.shape
+    if S == 1 and B > 1:
+        out = moe_apply(x.reshape(1, B, d), p, cfg,
+                        ep_constraint=ep_constraint)
+        return out.reshape(B, 1, d)
+    m = cfg.moe
+    E, k = m.n_experts, m.top_k
+    C = capacity(S, cfg)
+
+    idx, gates, _ = route(x, p["router"], cfg)            # [B,S,k]
+
+    # arrival-order position of each (token, choice) within its expert,
+    # computed per group
+    oh = jax.nn.one_hot(idx.reshape(B, S * k), E, dtype=jnp.int32)
+    pos_excl = jnp.cumsum(oh, axis=1) - oh                # [B, S*k, E]
+    pos = (pos_excl * oh).sum(-1)                         # [B, S*k]
+    keep = pos < C
+    e_flat = idx.reshape(B, S * k)
+    slot = e_flat * C + jnp.minimum(pos, C - 1)           # [B, S*k]
+
+    # dispatch: batched scatter-add of (duplicated) tokens into [B, E*C, d]
+    src = jnp.repeat(x, k, axis=1) * keep[..., None].astype(x.dtype)
+
+    def scatter_one(src_b, slot_b):
+        return jnp.zeros((E * C, d), x.dtype).at[slot_b].add(src_b, mode="drop")
+
+    xe = jax.vmap(scatter_one)(src, slot).reshape(B, E, C, d)
+    if ep_constraint is not None:
+        xe = ep_constraint(xe)
+
+    # batched expert MLP (B and E are pure batch dims)
+    g = jnp.einsum("becd,edf->becf", xe, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", xe, p["w_up"])
+    a = jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g)
+    ye = jnp.einsum("becf,efd->becd", a * u, p["w_down"])
+    if ep_constraint is not None:
+        ye = ep_constraint(ye)
+
+    # combine: batched gather of each (token, choice) row, weighted
+    yf = jax.vmap(lambda ye_b, sl: ye_b.reshape(E * C, d)[sl])(ye, slot)
+    w = (gates.reshape(B, S * k) * keep).astype(jnp.float32)
+    out = (yf.astype(jnp.float32) * w[..., None]).reshape(B, S, k, d).sum(2)
+    out = out.astype(x.dtype)
+
+    if m.n_shared:
+        out = out + mlp_apply(x, p["shared"], cfg.act)
+    return out
+
+
+def aux_load_balance_loss(x, router_w, cfg):
+    """Switch-style load-balance auxiliary loss (sum_e f_e * P_e * E)."""
+    m = cfg.moe
+    idx, _, probs = route(x, router_w, cfg)
+    frac = jnp.mean(
+        jax.nn.one_hot(idx[..., 0], m.n_experts, dtype=jnp.float32),
+        axis=(0, 1))
+    return jnp.sum(frac * probs.mean((0, 1))) * m.n_experts

@@ -1,0 +1,254 @@
+"""Logical sharding rules: parameter/activation PartitionSpecs for the
+production mesh.
+
+Mesh axes (see launch/mesh.py):
+  * ``data``  — FSDP + batch data parallelism (within a pod, fast ICI)
+  * ``model`` — tensor / expert / sequence parallelism
+  * ``pod``   — pure data parallelism across pods (slow DCN): parameters are
+                replicated per pod, gradients all-reduce over it.
+
+Rules are name-based over the param tree.  Every rule degrades gracefully:
+if a dimension is not divisible by its target axis size, that dimension is
+replicated instead (``_div`` guard) — so the same model code runs on the
+1-device CPU test mesh, the 256-chip pod, and the 512-chip two-pod mesh.
+
+Parameters under the scanned period stack carry a leading ``n_periods`` dim
+that is never sharded (prepended ``None``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Static sharding context threaded through the model code.
+
+    mode="train": FSDP over 'data' (weights gathered per layer — amortized
+    over a big token batch).  mode="serve": weights fully *resident*,
+    model-parallel over BOTH axes where divisible — decode moves ~KB of
+    activations per layer instead of re-gathering GBs of weights per token.
+    """
+    mesh: Mesh
+    fsdp: str = "data"
+    tp: str = "model"
+    pod: Optional[str] = None       # set on the multi-pod mesh
+    mode: str = "train"             # train | serve
+
+    @property
+    def batch_axes(self):
+        return (self.pod, self.fsdp) if self.pod else (self.fsdp,)
+
+    def axis_size(self, name) -> int:
+        return self.mesh.shape[name]
+
+    def cons(self, x, *spec):
+        """with_sharding_constraint against this mesh."""
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    # activation constraints used by the model ---------------------------
+    def act_btd(self, x, seq_tp=True):
+        """[B, S, d] between blocks: batch over (pod, data), seq over model
+        (sequence parallelism) when the length divides."""
+        sp = self.tp if (seq_tp and x.shape[1] % self.axis_size(self.tp) == 0) \
+            else None
+        b = self.batch_axes if x.shape[0] % self._bsz() == 0 else None
+        return self.cons(x, b, sp, None)
+
+    def act_heads(self, x):
+        """[B, S, H, hd] inside attention: heads over model."""
+        h = self.tp if x.shape[2] % self.axis_size(self.tp) == 0 else None
+        b = self.batch_axes if x.shape[0] % self._bsz() == 0 else None
+        return self.cons(x, b, None, h, None)
+
+    def ep(self, x):
+        """[B, E, C, *] MoE dispatch buffers: experts over model.
+
+        serve mode: batch replicated — decode activations are tiny, and
+        batch-sharding them over 'data' would force the expert weights
+        (whose d/ff dims own 'data' in serve mode) to be re-gathered every
+        step (the cell-C baseline pathology, EXPERIMENTS.md §Perf)."""
+        e = self.tp if x.shape[1] % self.axis_size(self.tp) == 0 else None
+        if self.mode == "serve":
+            return self.cons(x, None, e, *([None] * (x.ndim - 2)))
+        b = self.batch_axes if x.shape[0] % self._bsz() == 0 else None
+        return self.cons(x, b, e, *([None] * (x.ndim - 2)))
+
+    def _bsz(self):
+        n = self.axis_size(self.fsdp)
+        if self.pod:
+            n *= self.axis_size(self.pod)
+        return n
+
+
+def _div(n, size):
+    return n % size == 0
+
+
+def _serve_rule(name: str, shape: Tuple[int, ...], cfg, sctx: "ShardCtx"):
+    """Inference-mode placement: weights fully *resident* (model-parallel
+    over both axes where divisible), never FSDP-gathered — a decode step
+    moves KBs of activations per layer instead of GBs of weights.
+    Returns None to fall through to the train rule (small/neutral leaves).
+    """
+    tp, fsdp = sctx.tp, sctx.fsdp
+    tp_n = sctx.axis_size(tp)
+    flat_n = tp_n * sctx.axis_size(fsdp)
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+
+    def flat_if(dim):
+        if dim % flat_n == 0:
+            return (tp, fsdp)
+        return tp if dim % tp_n == 0 else None
+
+    if len(shape) == 1 or name in ("bq", "bk", "bv", "router"):
+        return P(*([None] * len(shape)))
+    if name == "embed":
+        return P(flat_if(shape[0]), None)
+    if name == "lm_head":
+        return P(None, flat_if(shape[1]))
+    if name == "wq":
+        return P(None, tp if _div(H, tp_n) else None, None)
+    if name in ("wk", "wv") and len(shape) == 3:
+        return P(None, tp if _div(Hkv, tp_n) else None, None)
+    if name == "wo" and len(shape) == 3:
+        return P(tp if _div(shape[0], tp_n) else None, None, None)
+    if name in ("w_kva", "w_qa"):
+        return P(None, None)
+    if name in ("w_kvb", "w_qb", "w_q"):
+        return P(None, tp if _div(H, tp_n) else None, None)
+    if name in ("w_gate", "w_up") and len(shape) == 3:    # [E, d, ff]
+        if _div(shape[0], tp_n):
+            return P(tp, None, fsdp if _div(shape[2],
+                                            sctx.axis_size(fsdp)) else None)
+        return P(None, None, flat_if(shape[2]))
+    if name == "w_down" and len(shape) == 3:              # [E, ff, d]
+        if _div(shape[0], tp_n):
+            return P(tp, fsdp if _div(shape[1],
+                                      sctx.axis_size(fsdp)) else None, None)
+        return P(None, flat_if(shape[1]), None)
+    if name in ("w_gate", "w_up"):                        # dense [d, ff]
+        return P(None, flat_if(shape[1]))
+    if name == "w_down":                                  # [ff, d]
+        return P(flat_if(shape[0]), None)
+    if name in ("in_proj", "up_proj", "W"):
+        return P(None, flat_if(shape[1]))
+    if name in ("out_proj", "down_proj"):
+        return P(flat_if(shape[0]), None)
+    return None
+
+
+def _rule(name: str, shape: Tuple[int, ...], cfg, tp_size: int,
+          fsdp: str, tp: str):
+    """PartitionSpec for one (unstacked) param leaf, by name + rank."""
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+
+    def tp_if(dim_ok):
+        return tp if dim_ok else None
+
+    if len(shape) == 1:
+        return P(None)                                   # norms, biases: tiny
+    if name in ("bq", "bk", "bv"):
+        return P(None, None)
+
+    if name == "embed":
+        return P(tp_if(_div(shape[0], tp_size)), fsdp)
+    if name == "lm_head":
+        return P(fsdp, tp_if(_div(shape[1], tp_size)))
+
+    # attention ----------------------------------------------------------
+    if name == "wq":
+        return P(fsdp, tp_if(_div(H, tp_size)), None)
+    if name in ("wk", "wv") and len(shape) == 3:
+        return P(fsdp, tp_if(_div(Hkv, tp_size)), None)
+    if name == "wo" and len(shape) == 3:
+        return P(tp_if(_div(shape[0], tp_size)), None, fsdp)
+
+    # MLA ------------------------------------------------------------------
+    if name == "w_kva":
+        return P(fsdp, None)
+    if name == "w_kvb":
+        return P(None, tp_if(_div(H, tp_size)), None)
+    if name == "w_qa":
+        return P(fsdp, None)
+    if name in ("w_qb", "w_q"):
+        return P(None if name == "w_qb" else fsdp,
+                 tp_if(_div(H, tp_size)), None)
+
+    # MoE --------------------------------------------------------------
+    if name == "router":
+        return P(fsdp, None)
+    if name in ("w_gate", "w_up") and len(shape) == 3:   # [E, d, ff]
+        if _div(shape[0], tp_size):
+            return P(tp, fsdp, None)
+        return P(None, fsdp, tp_if(_div(shape[2], tp_size)))
+    if name == "w_down" and len(shape) == 3:             # [E, ff, d]
+        if _div(shape[0], tp_size):
+            return P(tp, None, fsdp)
+        return P(None, tp_if(_div(shape[1], tp_size)), fsdp)
+
+    # dense MLP ---------------------------------------------------------
+    if name in ("w_gate", "w_up"):                        # [d, ff]
+        return P(fsdp, tp_if(_div(shape[1], tp_size)))
+    if name == "w_down":                                  # [ff, d]
+        return P(tp_if(_div(shape[0], tp_size)), fsdp)
+
+    # mamba / xlstm ------------------------------------------------------
+    if name in ("in_proj", "up_proj", "W"):               # [d, k*di]
+        return P(fsdp, tp_if(_div(shape[1], tp_size)))
+    if name == "conv_w":                                  # [dc, di]
+        return P(None, tp_if(_div(shape[1], tp_size)))
+    if name in ("x_proj", "out_proj", "down_proj"):       # [di, *]
+        return P(tp_if(_div(shape[0], tp_size)), fsdp
+                 if name != "x_proj" else None)
+    if name == "dt_w":                                    # [dtr, di]
+        return P(None, tp_if(_div(shape[1], tp_size)))
+    if name == "A_log":                                   # [di, ds]
+        return P(tp_if(_div(shape[0], tp_size)), None)
+    if name in ("wq2", "wk2", "wv2"):                     # mlstm [di, di]
+        return P(fsdp, tp_if(_div(shape[1], tp_size)))
+    if name in ("w_i", "w_f"):                            # [di, H]
+        return P(fsdp, None)
+    if name == "R":                                       # slstm [H, dh, 4dh]
+        return P(None, None, None)
+
+    # default: replicate (correct, never wrong, maybe slow — rules above
+    # should cover every large tensor)
+    return P(*([None] * len(shape)))
+
+
+def param_specs(params, cfg, sctx: ShardCtx):
+    """Pytree of PartitionSpec matching `params` (period stack handled)."""
+    tp_size = sctx.axis_size(sctx.tp)
+
+    def visit(path, leaf):
+        keys = [getattr(p, "key", None) for p in path]
+        keys = [k for k in keys if isinstance(k, str)]
+        stacked = "layers" in keys
+        # leaf name = last non-structural key ("scale" folds into its norm)
+        name = keys[-1] if keys[-1] != "scale" else keys[-2]
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        # mlstm q/k/v are square [di,di]; disambiguate from attention wq
+        if name in ("wq", "wk", "wv") and len(shape) == 2:
+            name = name[0:2] + "2"
+        spec = None
+        if sctx.mode == "serve":
+            spec = _serve_rule(name, shape, cfg, sctx)
+        if spec is None:
+            spec = _rule(name, shape, cfg, tp_size, sctx.fsdp, sctx.tp)
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def shardings(params, cfg, sctx: ShardCtx):
+    """NamedShardings for params (device placement / in_shardings)."""
+    return jax.tree.map(lambda s: NamedSharding(sctx.mesh, s),
+                        param_specs(params, cfg, sctx))

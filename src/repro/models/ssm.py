@@ -1,0 +1,445 @@
+"""Recurrent blocks: Mamba selective SSM (jamba) and xLSTM cells (sLSTM +
+mLSTM).
+
+TPU adaptation notes (see DESIGN.md):
+  * Mamba's CUDA selective-scan kernel fuses the recurrence to avoid
+    materializing h[B,S,d_inner,d_state].  The TPU-native equivalent here is
+    *chunking*: an outer `lax.scan` over time-chunks carries h[B,di,ds] while
+    an inner `associative_scan` parallelizes within the chunk, so the live
+    state tensor is [B,chunk,di,ds] and the chunk body is remat-able.
+  * mLSTM trains in a chunkwise-parallel form (gated-linear-attention style):
+    intra-chunk terms are masked matmuls on the MXU, inter-chunk terms carry
+    the (C, n, m) matrix-memory state.  Exponential gating is stabilized in
+    log space with a running max `m` exactly as in the xLSTM paper; the
+    sequential cell (`mlstm_seq`) is the correctness oracle.
+  * sLSTM has hidden-to-gate recurrence, so it is inherently sequential; its
+    per-step state is O(d) and the scan body is a few small matmuls.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, mlp_apply, mlp_init, rmsnorm, rmsnorm_init
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv.  x: [B,S,C], w: [dc,C], b: [C]."""
+    dc = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(dc))
+    return out + b
+
+
+def conv1d_step(conv_state, x_t, w, b):
+    """One decode step.  conv_state: [B,dc-1,C], x_t: [B,C].
+
+    Tap-by-tap sum in the same order as ``causal_conv1d`` so bf16 rounding
+    matches the parallel path bit-for-bit (routing decisions downstream are
+    rounding-sensitive)."""
+    full = jnp.concatenate([conv_state, x_t[:, None]], axis=1)   # [B,dc,C]
+    out = sum(full[:, i] * w[i] for i in range(w.shape[0])) + b
+    return full[:, 1:], out
+
+
+# ===========================================================================
+# Mamba (selective SSM)
+# ===========================================================================
+
+def _mamba_dims(cfg):
+    ms = cfg.mamba
+    di = ms.expand * cfg.d_model
+    dtr = ms.dt_rank or -(-cfg.d_model // 16)
+    return ms, di, dtr
+
+
+def mamba_init(key, cfg, dtype):
+    ms, di, dtr = _mamba_dims(cfg)
+    d, ds = cfg.d_model, ms.d_state
+    ks = jax.random.split(key, 6)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba paper)
+    u = jax.random.uniform(ks[0], (di,), jnp.float32)
+    dt = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))          # inverse softplus
+    A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": dense_init(ks[1], (d, 2 * di), dtype),
+        "conv_w": dense_init(ks[2], (ms.d_conv, di), dtype, fan_in=ms.d_conv),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[3], (di, dtr + 2 * ds), dtype, fan_in=di),
+        "dt_w": dense_init(ks[4], (dtr, di), dtype, fan_in=dtr),
+        "dt_b": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], (di, d), dtype, fan_in=di),
+    }
+
+
+def _mamba_inner(xc, p, cfg):
+    """xc: conv+silu output [B,L,di] -> (dA [B,L,di,ds], dBu, C [B,L,ds])."""
+    ms, di, dtr = _mamba_dims(cfg)
+    ds = ms.d_state
+    dbc = jnp.einsum("bld,de->ble", xc, p["x_proj"]).astype(jnp.float32)
+    dt_raw, Bm, Cm = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("blr,rd->bld", dt_raw, p["dt_w"].astype(jnp.float32))
+                         + p["dt_b"])               # [B,L,di]
+    A = -jnp.exp(p["A_log"])                         # [di,ds]
+    dA = jnp.exp(dt[..., None] * A)                  # [B,L,di,ds]
+    dBu = (dt * xc.astype(jnp.float32))[..., None] * Bm[:, :, None, :]
+    return dA, dBu, Cm
+
+
+def _scan_chunk(h0, dA, dBu):
+    """Parallel intra-chunk recurrence h_t = dA_t h_{t-1} + dBu_t.
+
+    h0: [B,di,ds]; dA/dBu: [B,L,di,ds].  Returns (h_all [B,L,di,ds], h_L).
+    """
+    def op(a, b):
+        return (a[0] * b[0], a[1] * b[0] + b[1])
+    pA, pB = jax.lax.associative_scan(op, (dA, dBu), axis=1)
+    h_all = pA * h0[:, None] + pB
+    return h_all, h_all[:, -1]
+
+
+def mamba_apply(x, p, cfg, return_state=False):
+    """Training/prefill pass.  x: [B,S,d] -> [B,S,d] (+ decode state)."""
+    B, S, d = x.shape
+    ms, di, _ = _mamba_dims(cfg)
+    chunk = min(ms.chunk, S)
+    while S % chunk:                 # largest divisor <= configured chunk
+        chunk -= 1
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(causal_conv1d(xin, p["conv_w"], p["conv_b"]))
+
+    nck = S // chunk
+    xc_c = xc.reshape(B, nck, chunk, di).transpose(1, 0, 2, 3)
+
+    def body(h, xck):
+        dA, dBu, Cm = _mamba_inner(xck, p, cfg)
+        h_all, h_new = _scan_chunk(h, dA, dBu)
+        y = jnp.einsum("blds,bls->bld", h_all, Cm)
+        y = y + p["D"] * xck.astype(jnp.float32)
+        return h_new, y
+
+    h0 = jnp.zeros((B, di, ms.d_state), jnp.float32)
+    h_fin, ys = jax.lax.scan(jax.remat(body), h0, xc_c)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"])
+    if return_state:
+        tail = xin[:, S - (ms.d_conv - 1):] if S >= ms.d_conv - 1 else \
+            jnp.pad(xin, ((0, 0), (ms.d_conv - 1 - S, 0), (0, 0)))
+        return out, {"conv": tail, "h": h_fin}
+    return out
+
+
+def mamba_state_init(cfg, B, dtype):
+    ms, di, _ = _mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((B, ms.d_conv - 1, di), dtype),
+        "h": jnp.zeros((B, di, ms.d_state), jnp.float32),
+    }
+
+
+def mamba_decode_step(x_t, p, cfg, state):
+    """x_t: [B,d] -> ([B,d], new state)."""
+    xz = jnp.einsum("bd,de->be", x_t, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    conv_state, xc = conv1d_step(state["conv"], xin, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    dA, dBu, Cm = _mamba_inner(xc[:, None], p, cfg)
+    h = state["h"] * dA[:, 0] + dBu[:, 0]
+    y = jnp.einsum("bds,bs->bd", h, Cm[:, 0]) + p["D"] * xc.astype(jnp.float32)
+    y = y.astype(x_t.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bd,de->be", y, p["out_proj"])
+    return out, {"conv": conv_state, "h": h}
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix-memory cell)
+# ===========================================================================
+
+def mlstm_init(key, cfg, dtype):
+    xs = cfg.xlstm
+    d = cfg.d_model
+    di = int(xs.m_proj_factor * d)
+    H = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up_proj": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], (xs.m_conv, di), dtype, fan_in=xs.m_conv),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": dense_init(ks[2], (di, di), dtype),
+        "wk": dense_init(ks[3], (di, di), dtype),
+        "wv": dense_init(ks[4], (di, di), dtype),
+        "w_i": dense_init(ks[5], (di, H), jnp.float32),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "w_f": dense_init(ks[6], (di, H), jnp.float32),
+        # forget bias init positive => gates start mostly-remember
+        "b_f": jnp.full((H,), 3.0, jnp.float32),
+        "skip": jnp.ones((di,), dtype),
+        "gn": rmsnorm_init(di, dtype),
+        "down_proj": dense_init(ks[7], (di, d), dtype, fan_in=di),
+    }
+
+
+def _mlstm_qkvif(xc, xv, p, H):
+    """Project conv output / value path to per-head q,k,v and gate preacts."""
+    B, L, di = xc.shape
+    dh = di // H
+    q = jnp.einsum("bld,de->ble", xc, p["wq"]).reshape(B, L, H, dh)
+    k = jnp.einsum("bld,de->ble", xc, p["wk"]).reshape(B, L, H, dh)
+    v = jnp.einsum("bld,de->ble", xv, p["wv"]).reshape(B, L, H, dh)
+    xf = xc.astype(jnp.float32)
+    i_pre = jnp.einsum("bld,dh->blh", xf, p["w_i"]) + p["b_i"]   # [B,L,H]
+    f_pre = jnp.einsum("bld,dh->blh", xf, p["w_f"]) + p["b_f"]
+    return q, k, v, i_pre, f_pre
+
+
+def mlstm_cell_chunked(q, k, v, i_pre, f_pre, C0, n0, m0, chunk):
+    """Chunkwise-parallel stabilized mLSTM cell.
+
+    q,k,v: [B,S,H,dh]; i_pre,f_pre: [B,S,H]; carries C0 [B,H,dh,dh] (kv^T),
+    n0 [B,H,dh], m0 [B,H].  Returns (h [B,S,H,dh], C, n, m).
+    """
+    B, S, H, dh = q.shape
+    chunk = min(chunk, S)
+    while S % chunk:                 # largest divisor <= configured chunk
+        chunk -= 1
+    L, N = chunk, S // chunk
+    scale = 1.0 / math.sqrt(dh)
+
+    def body(carry, blk):
+        C, n, m = carry
+        qb, kb, vb, ib, fb = blk                        # [B,L,H,*]/[B,L,H]
+        logf = jax.nn.log_sigmoid(fb)                    # [B,L,H]
+        b = jnp.cumsum(logf, axis=1)                     # inclusive cumsum
+        a = ib - b                                       # [B,L,H]
+        M = jax.lax.cummax(a, axis=1)                    # running max of a
+        m_i = b + jnp.maximum(m[:, None], M)             # [B,L,H]
+        # intra-chunk decay matrix D[i,j] = exp(a_j + b_i - m_i), j <= i
+        Dlog = a[:, None, :, :] + b[:, :, None, :] - m_i[:, :, None, :]
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        Dm = jnp.where(mask[None, :, :, None], jnp.exp(Dlog), 0.0)  # [B,i,j,H]
+        qf = q_ = qb.astype(jnp.float32) * scale
+        kf = kb.astype(jnp.float32)
+        vf = vb.astype(jnp.float32)
+        S_ij = jnp.einsum("bihd,bjhd->bijh", qf, kf) * Dm
+        h_intra = jnp.einsum("bijh,bjhd->bihd", S_ij, vf)
+        n_intra = jnp.einsum("bijh,bjhd->bihd", Dm, kf)
+        # inter-chunk: carry decays by exp(b_i + m_prev - m_i)
+        dec = jnp.exp(b + m[:, None] - m_i)              # [B,L,H]
+        h_inter = jnp.einsum("bihd,bhde->bihe", qf, C) * dec[..., None]
+        n_inter = n[:, None] * dec[..., None]            # [B,L,H,dh]
+        n_all = n_intra + n_inter
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bihd,bihd->bih", q_, n_all)),
+            jnp.exp(-m_i))
+        h = (h_intra + h_inter) / denom[..., None]
+        # carry update to chunk end (position L-1)
+        G = b[:, -1]                                     # [B,H]
+        m_new = m_i[:, -1]
+        w_j = jnp.exp(ib + (G[:, None] - b) - m_new[:, None])  # [B,L,H]
+        C_new = (C * jnp.exp(G + m - m_new)[..., None, None]
+                 + jnp.einsum("bjh,bjhd,bjhe->bhde", w_j, kf, vf))
+        n_new = (n * jnp.exp(G + m - m_new)[..., None]
+                 + jnp.einsum("bjh,bjhd->bhd", w_j, kf))
+        return (C_new, n_new, m_new), h
+
+    blocks = [t.reshape(B, N, L, *t.shape[2:]).transpose(
+        1, 0, 2, *range(3, t.ndim + 1)) for t in (q, k, v, i_pre, f_pre)]
+    (C, n, m), hs = jax.lax.scan(jax.remat(body), (C0, n0, m0), tuple(blocks))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+    return h.astype(q.dtype), C, n, m
+
+
+def mlstm_seq(q, k, v, i_pre, f_pre, C0, n0, m0):
+    """Sequential oracle for the chunked cell (identical math, step by step)."""
+    B, S, H, dh = q.shape
+    scale = 1.0 / math.sqrt(dh)
+
+    def body(carry, t):
+        C, n, m = carry
+        qt = q[:, t].astype(jnp.float32) * scale
+        kt = k[:, t].astype(jnp.float32)
+        vt = v[:, t].astype(jnp.float32)
+        logf = jax.nn.log_sigmoid(f_pre[:, t])
+        m_new = jnp.maximum(logf + m, i_pre[:, t])
+        fp = jnp.exp(logf + m - m_new)
+        ip = jnp.exp(i_pre[:, t] - m_new)
+        C = C * fp[..., None, None] + ip[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n = n * fp[..., None] + ip[..., None] * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)),
+                          jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(body, (C0, n0, m0), jnp.arange(S))
+    return hs.transpose(1, 0, 2, 3).astype(q.dtype), C, n, m
+
+
+def mlstm_apply(x, p, cfg, return_state=False):
+    """mLSTM block (post-up-projection): x [B,S,d] -> [B,S,d] (+ state)."""
+    B, S, d = x.shape
+    xs = cfg.xlstm
+    H = cfg.n_heads
+    xz = jnp.einsum("bsd,de->bse", x, p["up_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(causal_conv1d(xin, p["conv_w"], p["conv_b"]))
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(xc, xin, p, H)
+    di = xc.shape[-1]
+    C0 = jnp.zeros((B, H, di // H, di // H), jnp.float32)
+    n0 = jnp.zeros((B, H, di // H), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    h, C, n, m = mlstm_cell_chunked(q, k, v, i_pre, f_pre, C0, n0, m0,
+                                    min(xs.m_chunk, S))
+    h = h.reshape(B, S, di)
+    h = rmsnorm(h, p["gn"], cfg.norm_eps) + p["skip"] * xc
+    h = h * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", h, p["down_proj"])
+    if return_state:
+        dc = xs.m_conv - 1
+        tail = xin[:, S - dc:] if S >= dc else \
+            jnp.pad(xin, ((0, 0), (dc - S, 0), (0, 0)))
+        return out, {"conv": tail, "C": C, "n": n, "m": m}
+    return out
+
+
+def mlstm_state_init(cfg, B, dtype):
+    xs = cfg.xlstm
+    di = int(xs.m_proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    dh = di // H
+    return {
+        "conv": jnp.zeros((B, xs.m_conv - 1, di), dtype),
+        "C": jnp.zeros((B, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((B, H, dh), jnp.float32),
+        "m": jnp.zeros((B, H), jnp.float32),
+    }
+
+
+def mlstm_decode_step(x_t, p, cfg, state):
+    B, d = x_t.shape
+    H = cfg.n_heads
+    xz = jnp.einsum("bd,de->be", x_t, p["up_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    conv_state, xc = conv1d_step(state["conv"], xin, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(xc[:, None], xin[:, None], p, H)
+    h, C, n, m = mlstm_seq(q, k, v, i_pre, f_pre,
+                           state["C"], state["n"], state["m"])
+    di = xc.shape[-1]
+    h = h.reshape(B, di)
+    h = rmsnorm(h, p["gn"], cfg.norm_eps) + p["skip"] * xc
+    h = h * jax.nn.silu(z)
+    out = jnp.einsum("bd,de->be", h, p["down_proj"])
+    return out, {"conv": conv_state, "C": C, "n": n, "m": m}
+
+
+# ===========================================================================
+# sLSTM (xLSTM scalar-memory cell; sequential by construction)
+# ===========================================================================
+
+def slstm_init(key, cfg, dtype):
+    xs = cfg.xlstm
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    df = int(xs.s_proj_factor * d)
+    df = -(-df // 8) * 8
+    ks = jax.random.split(key, 5)
+    return {
+        "conv_w": dense_init(ks[0], (xs.s_conv, d), dtype, fan_in=xs.s_conv),
+        "conv_b": jnp.zeros((d,), dtype),
+        # input weights for (z, i, f, o) and block-diag recurrent weights
+        "W": dense_init(ks[1], (d, 4 * d), dtype),
+        "R": dense_init(ks[2], (H, dh, 4 * dh), jnp.float32, fan_in=dh),
+        "b": jnp.concatenate([jnp.zeros((2 * d,), jnp.float32),
+                              jnp.full((d,), 3.0, jnp.float32),
+                              jnp.zeros((d,), jnp.float32)]),
+        "gn": rmsnorm_init(d, dtype),
+        "ffn": mlp_init(ks[3], d, df, dtype),
+        "ffn_norm": rmsnorm_init(d, dtype),
+    }
+
+
+def _slstm_cell(Wx_t, h_prev, c_prev, n_prev, m_prev, R, H):
+    """One sLSTM step.  Wx_t: [B,4d] precomputed input part; states [B,d]."""
+    B, d4 = Wx_t.shape
+    d = d4 // 4
+    dh = d // H
+    hh = h_prev.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hh, R).reshape(B, 4 * d)
+    pre = Wx_t + rec
+    z_pre, i_pre, f_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m_prev, i_pre)
+    ip = jnp.exp(i_pre - m_new)
+    fp = jnp.exp(logf + m_prev - m_new)
+    c = fp * c_prev + ip * z
+    n = fp * n_prev + ip
+    h = o * c / jnp.maximum(n, 1e-6)
+    return h, c, n, m_new
+
+
+def slstm_apply(x, p, cfg, return_state=False):
+    """sLSTM block: conv -> cell scan -> groupnorm -> gated FFN."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    xs = cfg.xlstm
+    xc = jax.nn.silu(causal_conv1d(x, p["conv_w"], p["conv_b"]))
+    Wx = (jnp.einsum("bsd,de->bse", xc, p["W"]).astype(jnp.float32)
+          + p["b"])                                       # [B,S,4d]
+    R = p["R"]
+
+    def body(carry, wx_t):
+        h, c, n, m = carry
+        h, c, n, m = _slstm_cell(wx_t, h, c, n, m, R, H)
+        return (h, c, n, m), h
+
+    z0 = jnp.zeros((B, d), jnp.float32)
+    (hf, cf, nf, mf), hs = jax.lax.scan(body, (z0, z0, z0, z0),
+                                        Wx.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    h = rmsnorm(h, p["gn"], cfg.norm_eps)
+    out = x + h                                           # cell residual
+    ff = mlp_apply(rmsnorm(out, p["ffn_norm"], cfg.norm_eps), p["ffn"],
+                   act="gelu")
+    y = out + ff - x   # block wrapper adds x back (model adds residual)
+    if return_state:
+        dc = xs.s_conv - 1
+        tail = x[:, S - dc:] if S >= dc else \
+            jnp.pad(x, ((0, 0), (dc - S, 0), (0, 0)))
+        return y, {"conv": tail, "h": hf, "c": cf, "n": nf, "m": mf}
+    return y
+
+
+def slstm_state_init(cfg, B, dtype):
+    d = cfg.d_model
+    xs = cfg.xlstm
+    z = jnp.zeros((B, d), jnp.float32)
+    return {"conv": jnp.zeros((B, xs.s_conv - 1, d), dtype),
+            "h": z, "c": z, "n": z, "m": z}
+
+
+def slstm_decode_step(x_t, p, cfg, state):
+    B, d = x_t.shape
+    H = cfg.n_heads
+    conv_state, xc = conv1d_step(state["conv"], x_t, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    Wx = jnp.einsum("bd,de->be", xc, p["W"]).astype(jnp.float32) + p["b"]
+    h, c, n, m = _slstm_cell(Wx, state["h"], state["c"], state["n"],
+                             state["m"], p["R"], H)
+    hn = rmsnorm(h.astype(x_t.dtype), p["gn"], cfg.norm_eps)
+    out = x_t + hn
+    ff = mlp_apply(rmsnorm(out[:, None], p["ffn_norm"], cfg.norm_eps),
+                   p["ffn"], act="gelu")[:, 0]
+    new_state = {"conv": conv_state, "h": h, "c": c, "n": n, "m": m}
+    return out + ff - x_t, new_state

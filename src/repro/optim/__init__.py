@@ -1,0 +1,5 @@
+from .adamw import AdamWConfig, dequantize, global_norm, init, quantize, \
+    schedule, update
+
+__all__ = ["AdamWConfig", "init", "update", "schedule", "global_norm",
+           "quantize", "dequantize"]

@@ -1,0 +1,144 @@
+"""AdamW with cosine schedule, global-norm clipping, and optional 8-bit
+block-quantized moments (for the >=100B archs, Adam m/v at f32 dominates
+HBM: 8 bytes/param -> 2 bytes/param + 1/64 block scales).
+
+Pure-functional: ``init(params) -> state``, ``update(grads, state, params)
+-> (params, state, stats)``.  The moment quantization is symmetric blockwise
+(block 64 along the flattened last axis) with f32 scales — the standard
+bnb-style scheme, exact enough that smoke-training loss curves match f32
+moments to ~1e-3.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"     # float32 | int8
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(math.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+# --- blockwise int8 moment quantization ------------------------------------
+
+def _pad_len(n):
+    return -(-n // BLOCK) * BLOCK
+
+
+def quantize(x, sqrt_domain: bool = False):
+    """f32 array -> {'q': int8, 'scale': f32[blocks]} (flat blocks).
+
+    sqrt_domain=True quantizes sqrt(x) (x >= 0) — used for the second
+    moment, whose *quadratic* dynamic range otherwise rounds small-|g|
+    elements to v=0 while their m survives, exploding m/(sqrt(v)+eps)."""
+    flat = x.reshape(-1)
+    if sqrt_domain:
+        flat = jnp.sqrt(jnp.maximum(flat, 0.0))
+    pad = _pad_len(flat.size) - flat.size
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(flat), axis=1) / 127.0
+    q = jnp.round(flat / jnp.maximum(scale[:, None], 1e-20))
+    return {"q": q.astype(jnp.int8), "scale": scale}
+
+
+def dequantize(qd, shape, sqrt_domain: bool = False):
+    flat = qd["q"].astype(jnp.float32) * qd["scale"][:, None]
+    if sqrt_domain:
+        flat = jnp.square(flat)
+    return flat.reshape(-1)[: math.prod(shape)].reshape(shape)
+
+
+def _wrap_moment(x, dtype, sqrt_domain=False):
+    return quantize(x, sqrt_domain) if dtype == "int8" else x
+
+
+def _unwrap_moment(m, shape, dtype, sqrt_domain=False):
+    return dequantize(m, shape, sqrt_domain) if dtype == "int8" else m
+
+
+# --- optimizer --------------------------------------------------------------
+
+def init(params, cfg: AdamWConfig):
+    def zero_like(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return _wrap_moment(z, cfg.moment_dtype)
+
+    return {
+        "m": jax.tree.map(zero_like, params),
+        "v": jax.tree.map(zero_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(grads, state, params, cfg: AdamWConfig):
+    """One AdamW step.  Returns (new_params, new_state, stats)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.clip_norm else 1.0
+
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def leaf(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_f = _unwrap_moment(m, p.shape, cfg.moment_dtype)
+        v_f = _unwrap_moment(v, p.shape, cfg.moment_dtype, sqrt_domain=True)
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * jnp.square(g)
+        upd = (m_f / bc1) / (jnp.sqrt(v_f / bc2) + cfg.eps)
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        return new_p, _wrap_moment(m_f, cfg.moment_dtype), \
+            _wrap_moment(v_f, cfg.moment_dtype, sqrt_domain=True)
+
+    is_q = cfg.moment_dtype == "int8"
+
+    def is_leaf(x):
+        return isinstance(x, dict) and set(x) == {"q", "scale"}
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = jax.tree.flatten(state["m"], is_leaf=is_leaf)[0] if is_q \
+        else treedef.flatten_up_to(state["m"])
+    flat_v = jax.tree.flatten(state["v"], is_leaf=is_leaf)[0] if is_q \
+        else treedef.flatten_up_to(state["v"])
+
+    out = [leaf(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    stats = {"lr": lr, "grad_norm": gnorm}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, stats

@@ -1,0 +1,175 @@
+"""Bounded KV-cache slot pool managed by DynamicAdaptiveClimb.
+
+The paper's control law, mapped 1:1 onto KV-cache management (DESIGN.md §2):
+
+  * The per-layer slot table is the cache.  ``rank2slot`` is the paper's
+    rank-ordered list; its entries are *physical slot ids* into the KV slot
+    arrays (rank 0 = top).
+  * Every decoded token inserts its KV — a **miss** event (Alg. 2 miss
+    path: jump += 1, insert at rank k - actualJump, evict the bottom rank's
+    slot when the active budget is full).
+  * The top-attended slot of the decode-attention pass is a **hit** event
+    (Alg. 2 hit path: jump -= 1, promote by actualJump, jump' tracks
+    whether hits concentrate in the top half).
+  * DAC resizing drives the *active budget* ``k_active``: jump hitting 2k
+    doubles it (attention is diffuse — the cache thrashes); jump and jump'
+    both saturating at -k/2 halves it (hits concentrate in the top half —
+    the bottom half is dead weight, HBM is returned to the pool).
+
+Everything is fixed-shape: the slot arrays are allocated at ``budget``
+(=K_max) and ``k_active <= budget`` masks the live region, exactly like the
+``k`` scalar in repro.core.dynamicadaptiveclimb.  All ops are batched over
+the request batch B — each sequence runs its own independent DAC instance.
+
+State layout (one attention layer):
+  rank2slot [B, Bmax] int32   rank -> physical slot (-1 past ``length``)
+  free      [B, Bmax] bool    physical-slot free bitmap
+  length    [B] int32         occupied slots
+  k_active  [B] int32         DAC active budget (k_min..Bmax, power-of-2 steps)
+  jump      [B] int32         Alg. 2 jump  (in [-k/2, 2k])
+  jump2     [B] int32         Alg. 2 jump' (in [-k/2, 0])
+  slot_pos  [B, Bmax] int32   original token position of each slot (rope'd
+                              keys are stored; this drives window masks)
+plus the KV payload arrays indexed by physical slot:
+  k/v       [B, Bmax, Hkv, hd]        (attention layers)
+  latent    [B, Bmax, r], krope [B, Bmax, dr]   (MLA layers)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = jnp.int32(-1)
+
+
+def control_init(B: int, budget: int, k0: int | None = None):
+    """DAC control state for a batch of B caches with Bmax=budget slots."""
+    k0 = k0 if k0 is not None else max(2, budget // 4)
+    return {
+        "rank2slot": jnp.full((B, budget), EMPTY, jnp.int32),
+        "free": jnp.ones((B, budget), jnp.bool_),
+        "length": jnp.zeros((B,), jnp.int32),
+        "k_active": jnp.full((B,), k0, jnp.int32),
+        "jump": jnp.full((B,), k0, jnp.int32),
+        "jump2": jnp.zeros((B,), jnp.int32),
+        "slot_pos": jnp.full((B, budget), -1, jnp.int32),
+    }
+
+
+# --- single-cache primitives (vmapped over B) ------------------------------
+
+def _promote(rank2slot, i, t, slot):
+    """Move `slot` from rank i to rank t (t <= i), shifting [t, i-1] down."""
+    r = jnp.arange(rank2slot.shape[0], dtype=jnp.int32)
+    rolled = jnp.roll(rank2slot, 1)
+    return jnp.where(r == t, slot,
+                     jnp.where((r > t) & (r <= i), rolled, rank2slot))
+
+
+def _insert_one(rank2slot, free, length, k, jump, jump2, pos, slot_pos):
+    """Alg. 2 miss path for one cache; returns new state + chosen slot."""
+    Bmax = rank2slot.shape[0]
+    jump_m = jnp.minimum(jump + 1, 2 * k)
+    jump2_m = jnp.where(jump2 < 0, jump2 + 1, jump2)
+    actual = jnp.maximum(1, jnp.minimum(k - 1, jump_m))
+
+    full = length >= k
+    # victim: bottom-ranked slot (only used when full)
+    victim = rank2slot[jnp.maximum(length - 1, 0)]
+    # fresh: first free physical slot (only used when not full)
+    fresh = jnp.argmax(free).astype(jnp.int32)
+    slot = jnp.where(full, victim, fresh)
+
+    t = jnp.maximum(k - actual, 0)
+    t = jnp.minimum(t, length)               # no gaps while filling
+    bottom = jnp.where(full, length - 1, length)
+    rank2slot = _promote(rank2slot, bottom, t, slot)
+    free = free.at[slot].set(False)
+    slot_pos = slot_pos.at[slot].set(pos)
+    length = jnp.where(full, length, length + 1)
+    return rank2slot, free, length, jump_m, jump2_m, slot, slot_pos
+
+
+def _hit_one(rank2slot, length, k, jump, jump2, slot):
+    """Alg. 2 hit path: promote `slot` (top-attended) by actualJump."""
+    valid = (slot >= 0) & (length > 0)
+    eq = rank2slot == slot
+    i = jnp.argmax(eq).astype(jnp.int32)
+    found = jnp.any(eq) & valid
+    half = k // 2
+    jump_h = jnp.where(jump > -half, jump - 1, jump)
+    top_half = i < half
+    jump2_h = jnp.where(
+        top_half,
+        jnp.where(jump2 > -half, jump2 - 1, jump2),
+        jnp.where(jump2 < 0, jump2 + 1, jump2),
+    )
+    actual = jnp.maximum(1, jnp.minimum(jump_h, i))
+    t = i - actual
+    r2s_h = jnp.where(i > 0, _promote(rank2slot, i, t, slot), rank2slot)
+    return (jnp.where(found, r2s_h, rank2slot),
+            jnp.where(found, jump_h, jump),
+            jnp.where(found, jump2_h, jump2))
+
+
+def _resize_one(rank2slot, free, length, k, jump, jump2, eps, k_min, Bmax):
+    """Alg. 2 lines 2.30-2.38: grow / shrink the active budget."""
+    half = k // 2
+    jump2 = jnp.where(jump == 0, 0, jump2)
+    shrink_thresh = -jnp.ceil(eps * half.astype(jnp.float32)).astype(jnp.int32)
+    grow = (jump >= 2 * k) & (2 * k <= Bmax)
+    shrink = (~grow) & (jump <= -half) & (jump2 <= shrink_thresh) \
+        & (half >= k_min)
+    k_new = jnp.where(grow, 2 * k, jnp.where(shrink, half, k))
+
+    # shrink: free the physical slots of ranks >= k_new
+    r = jnp.arange(rank2slot.shape[0], dtype=jnp.int32)
+    evict_mask = shrink & (r >= k_new) & (r < length) & (rank2slot >= 0)
+    evicted = jnp.where(evict_mask, rank2slot, 0)
+    freed = jnp.zeros_like(free).at[evicted].max(evict_mask)
+    free = free | freed
+    rank2slot = jnp.where(evict_mask, EMPTY, rank2slot)
+    length = jnp.where(shrink, jnp.minimum(length, k_new), length)
+
+    resized = grow | shrink
+    jump = jnp.where(shrink, 0, jnp.clip(jump, -(k_new // 2), 2 * k_new))
+    jump2 = jnp.where(resized, 0, jump2)
+    return rank2slot, free, length, k_new, jump, jump2
+
+
+def insert(ctrl, pos):
+    """Batched miss event (new token KV).  pos: [B] logical positions.
+    Returns (ctrl, slot [B]) — callers scatter the new KV at `slot`."""
+    out = jax.vmap(_insert_one)(
+        ctrl["rank2slot"], ctrl["free"], ctrl["length"], ctrl["k_active"],
+        ctrl["jump"], ctrl["jump2"], pos, ctrl["slot_pos"])
+    r2s, free, length, jump, jump2, slot, slot_pos = out
+    new = dict(ctrl, rank2slot=r2s, free=free, length=length, jump=jump,
+               jump2=jump2, slot_pos=slot_pos)
+    return new, slot
+
+
+def hit(ctrl, slot):
+    """Batched hit event: `slot` [B] = top-attended physical slot (-1 = no
+    hit this step)."""
+    r2s, jump, jump2 = jax.vmap(_hit_one)(
+        ctrl["rank2slot"], ctrl["length"], ctrl["k_active"], ctrl["jump"],
+        ctrl["jump2"], slot)
+    return dict(ctrl, rank2slot=r2s, jump=jump, jump2=jump2)
+
+
+def resize(ctrl, eps: float = 0.5, k_min: int = 16):
+    """Batched DAC resize check (after every request)."""
+    Bmax = ctrl["rank2slot"].shape[1]
+    r2s, free, length, k, jump, jump2 = jax.vmap(
+        lambda a, b, c, d, e, f: _resize_one(a, b, c, d, e, f, eps, k_min,
+                                             Bmax))(
+        ctrl["rank2slot"], ctrl["free"], ctrl["length"], ctrl["k_active"],
+        ctrl["jump"], ctrl["jump2"])
+    return dict(ctrl, rank2slot=r2s, free=free, length=length, k_active=k,
+                jump=jump, jump2=jump2)
+
+
+def valid_slots(ctrl):
+    """[B, Bmax] bool — physical slots holding live entries."""
+    return ~ctrl["free"]

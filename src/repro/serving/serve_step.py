@@ -1,0 +1,335 @@
+"""Serving steps: prefill + single-token decode for every architecture.
+
+Two cache regimes, selected by ``budget``:
+  * budget == 0  — unbounded contiguous KV buffers of ``max_len`` slots
+    (decode_32k cells); slot index == token position.
+  * budget > 0   — the paper's bounded slot pool (long_500k cells): each
+    attention/MLA layer holds ``budget`` physical slots managed per-sequence
+    by DynamicAdaptiveClimb (repro.serving.kv_cache).  Per decoded token the
+    attention cost is O(budget), independent of logical context length —
+    this is the sub-quadratic mechanism for long-context decode.
+
+Recurrent layers (mamba / mlstm / slstm) carry O(1) state and ignore the
+budget.  The decode step scans the period-stacked params with the
+period-stacked cache state, exactly mirroring ``model.forward``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.config import ArchConfig, LayerSpec
+from repro.models.layers import (attn_qkv, decode_attention, mlp_apply,
+                                 rmsnorm)
+from repro.models.model import forward
+from . import kv_cache as kvc
+
+
+# ---------------------------------------------------------------------------
+# state construction
+# ---------------------------------------------------------------------------
+
+def _layer_state(cfg: ArchConfig, spec: LayerSpec, B, max_len, budget,
+                 dtype):
+    hd = cfg.head_dim
+    Hkv = cfg.n_kv_heads
+    L = budget if budget else max_len
+    if spec.kind == "attn":
+        st = {"k": jnp.zeros((B, L, Hkv, hd), dtype),
+              "v": jnp.zeros((B, L, Hkv, hd), dtype)}
+        if budget:
+            # serving starts at the full pool: DAC *shrinks* when hits
+            # concentrate (returning HBM) rather than evicting from a
+            # quarter-size start
+            st["ctrl"] = kvc.control_init(B, budget, k0=budget)
+        return st
+    if spec.kind == "mla":
+        st = {"latent": jnp.zeros((B, L, cfg.kv_lora_rank), dtype),
+              "krope": jnp.zeros((B, L, cfg.qk_rope_head_dim), dtype)}
+        if budget:
+            st["ctrl"] = kvc.control_init(B, budget, k0=budget)
+        return st
+    if spec.kind == "mamba":
+        return ssm.mamba_state_init(cfg, B, dtype)
+    if spec.kind == "mlstm":
+        return ssm.mlstm_state_init(cfg, B, dtype)
+    if spec.kind == "slstm":
+        return ssm.slstm_state_init(cfg, B, dtype)
+    raise ValueError(spec.kind)
+
+
+def init_serve_state(cfg: ArchConfig, B: int, max_len: int, budget: int = 0):
+    """Fresh serve state (period-stacked).  budget>0 => bounded DAC pool."""
+    dtype = cfg.dtype
+    period_state = {
+        f"l{i}": _layer_state(cfg, spec, B, max_len, budget, dtype)
+        for i, spec in enumerate(cfg.period)}
+    P = cfg.n_periods
+    layers = jax.tree.map(
+        lambda x: jnp.tile(x[None], (P,) + (1,) * x.ndim), period_state)
+    return {"pos": jnp.zeros((B,), jnp.int32), "layers": layers}
+
+
+def serve_state_specs(cfg: ArchConfig, B: int, max_len: int,
+                      budget: int = 0):
+    """ShapeDtypeStructs of the serve state — nothing allocated (dry-run)."""
+    return jax.eval_shape(
+        partial(init_serve_state, cfg, B, max_len, budget))
+
+
+def serve_state_shardings(cfg: ArchConfig, sctx, state_tree):
+    """PartitionSpec pytree for a serve state (period-stacked leaves).
+
+    Policy: batch over (pod,)data when divisible; KV-heads over model when
+    divisible, else slots over model; recurrent inner dims over model; DAC
+    control rows [B, Bmax] slot-sharded over model.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    tp_n = sctx.axis_size(sctx.tp)
+
+    def b_axes(B):
+        return sctx.batch_axes if B % sctx._bsz() == 0 else None
+
+    def tp_if(n):
+        return sctx.tp if n % tp_n == 0 else None
+
+    def visit(path, leaf):
+        keys = [getattr(p, "key", None) for p in path]
+        keys = [k for k in keys if isinstance(k, str)]
+        name = keys[-1]
+        sh = leaf.shape
+        if name == "pos":
+            return P(b_axes(sh[0]))
+        b = b_axes(sh[1])                      # leading dim = period stack
+        if name in ("k", "v"):                  # [P,B,L,Hkv,hd]
+            if sh[3] % tp_n == 0:
+                return P(None, b, None, sctx.tp, None)
+            return P(None, b, tp_if(sh[2]), None, None)
+        if name in ("latent", "krope"):         # [P,B,L,r]
+            return P(None, b, tp_if(sh[2]), None)
+        if name in ("rank2slot", "free", "slot_pos"):   # [P,B,Bmax]
+            return P(None, b, tp_if(sh[2]))
+        if name in ("length", "k_active", "jump", "jump2"):
+            return P(None, b)
+        if name == "conv":                      # [P,B,dc-1,di]
+            return P(None, b, None, tp_if(sh[3]))
+        if name == "h" and len(sh) == 4:        # mamba h [P,B,di,ds]
+            return P(None, b, tp_if(sh[2]), None)
+        if name == "C":                         # mlstm [P,B,H,dh,dh]
+            return P(None, b, tp_if(sh[2]), None, None)
+        if name == "n" and len(sh) == 4:        # mlstm n [P,B,H,dh]
+            return P(None, b, tp_if(sh[2]), None)
+        if name == "m" and len(sh) == 3:        # mlstm m [P,B,H]
+            return P(None, b, tp_if(sh[2]))
+        if len(sh) == 3:                        # slstm h/c/n/m [P,B,d]
+            return P(None, b, tp_if(sh[2]))
+        return P(*([None] * len(sh)))
+
+    specs = jax.tree_util.tree_map_with_path(visit, state_tree)
+    return jax.tree.map(lambda s: NamedSharding(sctx.mesh, s), specs,
+                        is_leaf=lambda x: isinstance(
+                            x, jax.sharding.PartitionSpec))
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _sharded_cache(st, sctx):
+    """Constrain KV buffers: batch over data, slots over model."""
+    if sctx is None:
+        return st
+    out = dict(st)
+    for key in ("k", "v", "latent", "krope"):
+        if key in st:
+            x = st[key]
+            b = sctx.batch_axes if x.shape[0] % sctx._bsz() == 0 else None
+            s = sctx.tp if x.shape[1] % sctx.axis_size(sctx.tp) == 0 else None
+            out[key] = sctx.cons(x, b, s, *([None] * (x.ndim - 2)))
+    return out
+
+
+def _decode_attn(x, p, st, cfg, spec, pos, sctx, eps, k_min):
+    """Attention layer decode (bounded or unbounded).  x: [B, 1, d]."""
+    B = x.shape[0]
+    h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    q, k, v = attn_qkv(h, p["attn"], cfg, pos[:, None])   # [B,1,H|Hkv,hd]
+    bidx = jnp.arange(B)
+    new_st = dict(st)
+    if "ctrl" in st:                                       # bounded (DAC)
+        ctrl, slot = kvc.insert(st["ctrl"], pos)           # miss event
+        k_cache = st["k"].at[bidx, slot].set(k[:, 0])
+        v_cache = st["v"].at[bidx, slot].set(v[:, 0])
+        valid = kvc.valid_slots(ctrl)
+        if spec.window:
+            valid &= ctrl["slot_pos"] > (pos[:, None] - spec.window)
+        o, mass = decode_attention(q[:, 0], k_cache, v_cache, valid,
+                                   softcap=cfg.attn_softcap)
+        masked = jnp.where(valid, mass, -jnp.inf)
+        top = jnp.argmax(masked, axis=-1).astype(jnp.int32)
+        top = jnp.where(jnp.any(valid, axis=-1), top, -1)
+        ctrl = kvc.hit(ctrl, top)                          # hit event
+        ctrl = kvc.resize(ctrl, eps=eps, k_min=k_min)
+        new_st.update(k=k_cache, v=v_cache, ctrl=ctrl)
+    else:                                                  # unbounded
+        k_cache = st["k"].at[bidx, pos].set(k[:, 0])
+        v_cache = st["v"].at[bidx, pos].set(v[:, 0])
+        ar = jnp.arange(k_cache.shape[1])[None]
+        valid = ar <= pos[:, None]
+        if spec.window:
+            valid &= ar > pos[:, None] - spec.window
+        o, _ = decode_attention(q[:, 0], k_cache, v_cache, valid,
+                                softcap=cfg.attn_softcap)
+        new_st.update(k=k_cache, v=v_cache)
+    att = jnp.einsum("bhk,hkd->bd", o, p["attn"]["wo"])
+    return x + att[:, None], _sharded_cache(new_st, sctx)
+
+
+def _decode_mla(x, p, st, cfg, spec, pos, sctx, eps, k_min):
+    B = x.shape[0]
+    h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    latent, krope = mla_mod.mla_latent(h, p["attn"], cfg, pos[:, None])
+    bidx = jnp.arange(B)
+    new_st = dict(st)
+    if "ctrl" in st:
+        ctrl, slot = kvc.insert(st["ctrl"], pos)
+        lat_cache = st["latent"].at[bidx, slot].set(latent[:, 0])
+        kr_cache = st["krope"].at[bidx, slot].set(krope[:, 0, 0])
+        valid = kvc.valid_slots(ctrl)
+        o, mass = mla_mod.mla_attend(h, p["attn"], cfg, lat_cache, kr_cache,
+                                     valid, pos)
+        masked = jnp.where(valid, mass, -jnp.inf)
+        top = jnp.argmax(masked, axis=-1).astype(jnp.int32)
+        top = jnp.where(jnp.any(valid, axis=-1), top, -1)
+        ctrl = kvc.hit(ctrl, top)
+        ctrl = kvc.resize(ctrl, eps=eps, k_min=k_min)
+        new_st.update(latent=lat_cache, krope=kr_cache, ctrl=ctrl)
+    else:
+        lat_cache = st["latent"].at[bidx, pos].set(latent[:, 0])
+        kr_cache = st["krope"].at[bidx, pos].set(krope[:, 0, 0])
+        valid = jnp.arange(lat_cache.shape[1])[None] <= pos[:, None]
+        o, _ = mla_mod.mla_attend(h, p["attn"], cfg, lat_cache, kr_cache,
+                                  valid, pos)
+        new_st.update(latent=lat_cache, krope=kr_cache)
+    return x + o[:, None], _sharded_cache(new_st, sctx)
+
+
+def _decode_layer(x, p, st, cfg, spec, pos, sctx, eps, k_min):
+    if spec.kind == "attn":
+        x, new_st = _decode_attn(x, p, st, cfg, spec, pos, sctx, eps, k_min)
+    elif spec.kind == "mla":
+        x, new_st = _decode_mla(x, p, st, cfg, spec, pos, sctx, eps, k_min)
+    else:
+        h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)[:, 0]
+        if spec.kind == "mamba":
+            out, new_st = ssm.mamba_decode_step(h, p["mamba"], cfg, st)
+        elif spec.kind == "mlstm":
+            out, new_st = ssm.mlstm_decode_step(h, p["mlstm"], cfg, st)
+        else:
+            out, new_st = ssm.slstm_decode_step(h, p["slstm"], cfg, st)
+        x = x + out[:, None]
+
+    if "moe" in p:
+        h = rmsnorm(x, p["ffn_norm"], cfg.norm_eps)
+        ep = sctx.ep if sctx is not None else None
+        x = x + moe_mod.moe_apply(h, p["moe"], cfg, ep_constraint=ep)
+    elif "mlp" in p:
+        h = rmsnorm(x, p["ffn_norm"], cfg.norm_eps)
+        x = x + mlp_apply(h, p["mlp"], cfg.act)
+    return x, new_st
+
+
+def decode_step(params, cfg: ArchConfig, state, token=None, embed=None,
+                sctx=None, eps: float = 0.5, k_min: int = 16):
+    """One decode step.  token: [B] int32 (or embed: [B, d] for stub-frontend
+    archs).  Returns (new_state, logits [B, V] f32)."""
+    pos = state["pos"]
+    if cfg.embeds_input:
+        x = embed.astype(cfg.dtype)[:, None]
+    else:
+        x = params["embed"][token][:, None]                # [B, 1, d]
+
+    def body(x, scanned):
+        pp, ss = scanned
+        new_ss = {}
+        for i, spec in enumerate(cfg.period):
+            x, ns = _decode_layer(x, pp[f"l{i}"], ss[f"l{i}"], cfg, spec,
+                                  pos, sctx, eps, k_min)
+            new_ss[f"l{i}"] = ns
+        return x, new_ss
+
+    x, new_layers = jax.lax.scan(body, x, (params["layers"],
+                                           state["layers"]))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0].astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    return {"pos": pos + 1, "layers": new_layers}, logits
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def _bounded_fill(ctrl, kbuf, vbuf, ks, vs):
+    """Replay S insert-only DAC steps to load a prompt into the slot pool.
+    ks/vs: [B, S, ...] prompt KV.  Returns (ctrl, kbuf, vbuf)."""
+    B, S = ks.shape[:2]
+
+    def body(carry, t):
+        ctrl, kbuf, vbuf = carry
+        pos = jnp.full((B,), t, jnp.int32)
+        ctrl, slot = kvc.insert(ctrl, pos)
+        bidx = jnp.arange(B)
+        kbuf = kbuf.at[bidx, slot].set(ks[:, t])
+        vbuf = vbuf.at[bidx, slot].set(vs[:, t])
+        return (ctrl, kbuf, vbuf), None
+
+    (ctrl, kbuf, vbuf), _ = jax.lax.scan(body, (ctrl, kbuf, vbuf),
+                                         jnp.arange(S))
+    return ctrl, kbuf, vbuf
+
+
+def prefill(params, cfg: ArchConfig, tokens=None, embeds=None,
+            max_len: int = 0, budget: int = 0, sctx=None, impl="jnp",
+            remat="full"):
+    """Run the prompt through the stack and build the serve state.
+
+    Returns (serve_state, last_logits [B, V]).
+    """
+    B, S = (tokens.shape if tokens is not None else embeds.shape[:2])
+    max_len = max_len or 2 * S
+    logits, caches = forward(params, cfg, tokens=tokens, embeds=embeds,
+                             sctx=sctx, impl=impl, remat=remat,
+                             want_cache=True, last_only=True)
+    state = init_serve_state(cfg, B, max_len, budget)
+    layers = dict(state["layers"])
+    for i, spec in enumerate(cfg.period):
+        li = f"l{i}"
+        st, ca = dict(layers[li]), caches[li]
+        if spec.kind == "attn":
+            if budget:
+                st["ctrl"], st["k"], st["v"] = jax.vmap(_bounded_fill)(
+                    st["ctrl"], st["k"], st["v"], ca["k"], ca["v"])
+            else:
+                st["k"] = st["k"].at[:, :, :S].set(ca["k"])
+                st["v"] = st["v"].at[:, :, :S].set(ca["v"])
+        elif spec.kind == "mla":
+            if budget:
+                st["ctrl"], st["latent"], st["krope"] = jax.vmap(
+                    _bounded_fill)(st["ctrl"], st["latent"], st["krope"],
+                                   ca["latent"], ca["krope"])
+            else:
+                st["latent"] = st["latent"].at[:, :, :S].set(ca["latent"])
+                st["krope"] = st["krope"].at[:, :, :S].set(ca["krope"])
+        else:
+            st = ca                                       # recurrent state
+        layers[li] = st
+    return ({"pos": jnp.full((B,), S, jnp.int32), "layers": layers},
+            logits[:, -1])

@@ -1,0 +1,6 @@
+from .train_step import (init_ef_state, make_compressed_train_step,
+                         make_train_step)
+from .trainer import StragglerWatchdog, TrainConfig, Trainer
+
+__all__ = ["make_train_step", "make_compressed_train_step", "init_ef_state",
+           "Trainer", "TrainConfig", "StragglerWatchdog"]

@@ -1,0 +1,123 @@
+"""Training steps: grad-accumulation scan, donation-friendly signature,
+optional cross-pod int8 error-feedback gradient compression.
+
+``make_train_step`` builds the plain (single- or multi-pod) step: XLA
+inserts every gradient collective from the sharding constraints.
+
+``make_compressed_train_step`` builds the multi-pod variant where the *pod*
+axis gradient sync is manual (shard_map, axis_names={'pod'}) and compressed
+to int8+error-feedback — the DCN links between pods are ~10x slower than
+ICI, so this is where compression pays (see train/compression.py).  Within a
+pod, data/model axes stay with the compiler.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.model import lm_loss
+from repro.optim import adamw
+from . import compression
+
+
+def _accumulated_grads(loss_fn, params, batch, n_micro):
+    """Mean loss/grads over n_micro microbatches via lax.scan."""
+    if n_micro == 1:
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        return loss, grads
+
+    def split(x):
+        return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+    mbs = jax.tree.map(split, batch)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(acc, mb):
+        loss_acc, g_acc = acc
+        loss, g = jax.value_and_grad(loss_fn)(params, mb)
+        g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                             g_acc, g)
+        return (loss_acc + loss, g_acc), None
+
+    (loss_sum, g_sum), _ = jax.lax.scan(body, (jnp.float32(0.0), zeros), mbs)
+    inv = 1.0 / n_micro
+    return loss_sum * inv, jax.tree.map(lambda g: g * inv, g_sum)
+
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, sctx=None,
+                    n_microbatches: int = 1, remat: str = "full",
+                    impl: str = "jnp"):
+    """Plain train step: (params, opt_state, batch) -> (params, opt_state,
+    metrics).  Collectives from sharding constraints only."""
+
+    def loss_fn(p, mb):
+        return lm_loss(p, cfg, mb, sctx=sctx, impl=impl, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = _accumulated_grads(loss_fn, params, batch,
+                                         n_microbatches)
+        params, opt_state, stats = adamw.update(grads, opt_state, params,
+                                                opt_cfg)
+        return params, opt_state, {"loss": loss, **stats}
+
+    return train_step
+
+
+def make_compressed_train_step(cfg, opt_cfg: adamw.AdamWConfig, mesh,
+                               sctx=None, n_microbatches: int = 1,
+                               remat: str = "full", pod_axis: str = "pod"):
+    """Multi-pod train step with int8+EF compressed cross-pod grad sync.
+
+    State carries a per-pod error-feedback pytree (leading dim = n_pods,
+    sharded over the pod axis).  Inside the shard_map only the pod axis is
+    manual; FSDP/TP collectives within each pod stay compiler-inserted.
+
+    Toolchain note: the partial-manual form (manual 'pod' + auto
+    data/model) trips an XLA:CPU SPMD-partitioner check on some inner
+    collectives (spmd_partitioner_util.cc); the pure-pod-mesh form is
+    exercised in tests and carries the identical compression numerics and
+    int8 wire format.  Track the Shardy partitioner migration for the
+    partial-manual path.
+    """
+    import dataclasses
+
+    n_pods = mesh.shape[pod_axis]
+    # inside the manual-pod region, activation constraints must not mention
+    # the (manual) pod axis — each pod shards its slice over 'data' only
+    inner_sctx = dataclasses.replace(sctx, pod=None) if sctx else None
+
+    def loss_fn(p, mb):
+        return lm_loss(p, cfg, mb, sctx=inner_sctx, remat=remat)
+
+    def per_pod(params, opt_state, ef, batch):
+        # batch arrives with the global batch dim pre-split over pods
+        loss, grads = _accumulated_grads(loss_fn, params, batch,
+                                         n_microbatches)
+        loss = jax.lax.pmean(loss, pod_axis)
+        synced = jax.tree.map(
+            lambda g, e: compression.ef_allgather_mean(g, e[0], pod_axis),
+            grads, ef,
+            is_leaf=lambda x: isinstance(x, jax.Array) and not isinstance(
+                x, dict))
+        grads = jax.tree.map(lambda t: t[0], synced,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_ef = jax.tree.map(lambda t: t[1][None], synced,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        params, opt_state, stats = adamw.update(grads, opt_state, params,
+                                                opt_cfg)
+        return params, opt_state, new_ef, {"loss": loss, **stats}
+
+    def train_step(params, opt_state, ef, batch):
+        return jax.shard_map(
+            per_pod, mesh=mesh,
+            in_specs=(P(), P(), P(pod_axis), P(pod_axis)),
+            out_specs=(P(), P(), P(pod_axis), P()),
+            axis_names={pod_axis}, check_vma=False,
+        )(params, opt_state, ef, batch)
+
+    return train_step
+
+
+def init_ef_state(params, n_pods: int):
+    return compression.init_ef(params, n_pods)

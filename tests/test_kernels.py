@@ -1,0 +1,97 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _qkv(B, S, H, Hkv, D, Dv, dtype):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    return (jax.random.normal(k1, (B, S, H, D), dtype),
+            jax.random.normal(k2, (B, S, Hkv, D), dtype),
+            jax.random.normal(k3, (B, S, Hkv, Dv), dtype))
+
+
+FLASH_CASES = [
+    # B, S, H, Hkv, D, Dv, window, softcap, dtype, bq, bk
+    (2, 128, 8, 2, 64, 64, None, 0.0, jnp.float32, 32, 32),
+    (1, 256, 4, 4, 32, 32, 64, 0.0, jnp.float32, 64, 32),
+    (2, 64, 8, 4, 64, 64, None, 50.0, jnp.bfloat16, 16, 16),
+    (1, 96, 6, 2, 48, 48, 32, 30.0, jnp.float32, 32, 16),
+    (1, 128, 4, 1, 64, 32, None, 0.0, jnp.float32, 32, 64),  # MLA-ish Dv!=D
+    (3, 80, 2, 2, 16, 16, None, 0.0, jnp.float32, 16, 16),   # ragged S
+]
+
+
+@pytest.mark.parametrize(
+    "B,S,H,Hkv,D,Dv,win,cap,dtype,bq,bk", FLASH_CASES)
+def test_flash_attention_matches_ref(B, S, H, Hkv, D, Dv, win, cap, dtype,
+                                     bq, bk):
+    q, k, v = _qkv(B, S, H, Hkv, D, Dv, dtype)
+    got = ops.flash_attention(q, k, v, window=win, softcap=cap,
+                              block_q=bq, block_k=bk, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, window=win, softcap=cap)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+DECODE_CASES = [
+    (2, 256, 8, 2, 64, 64, 0.0, 64),
+    (3, 128, 4, 4, 32, 32, 50.0, 32),
+    (1, 512, 8, 1, 64, 64, 0.0, 128),
+    (2, 96, 4, 2, 32, 16, 0.0, 32),      # Dv != D
+]
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,D,Dv,cap,bs", DECODE_CASES)
+def test_decode_attention_matches_ref(B, S, H, Hkv, D, Dv, cap, bs):
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    q = jax.random.normal(k1, (B, H, D))
+    k = jax.random.normal(k2, (B, S, Hkv, D))
+    v = jax.random.normal(k3, (B, S, Hkv, Dv))
+    valid = jax.random.bernoulli(k4, 0.7, (B, S)).at[:, 0].set(True)
+    got_o, got_m = ops.decode_attention(q, k, v, valid, softcap=cap,
+                                        block_s=bs, interpret=True)
+    want_o, want_m = ref.decode_attention_ref(q, k, v, valid, softcap=cap)
+    np.testing.assert_allclose(np.asarray(got_o), np.asarray(want_o),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(got_m), np.asarray(want_m),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_mass_is_hit_signal():
+    """Masked slots get zero mass; mass sums to ~1 over valid slots."""
+    B, S, H, Hkv, D = 2, 128, 4, 2, 32
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (B, H, D))
+    k = jax.random.normal(k2, (B, S, Hkv, D))
+    v = jax.random.normal(k3, (B, S, Hkv, D))
+    valid = jnp.zeros((B, S), bool).at[:, :40].set(True)
+    _, mass = ops.decode_attention(q, k, v, valid, block_s=32,
+                                   interpret=True)
+    assert float(jnp.abs(mass[:, 40:]).max()) < 1e-6
+    np.testing.assert_allclose(np.asarray(mass.sum(-1)), 1.0, rtol=1e-4)
+
+
+@pytest.mark.parametrize("K", [16, 64, 129])
+@pytest.mark.parametrize("B", [4, 10])
+def test_adaptive_climb_kernel_matches_policy(K, B):
+    rng = np.random.default_rng(0)
+    cache = jnp.full((B, K), -1, jnp.int32)
+    jump = jnp.full((B,), K, jnp.int32)
+    cache_r, jump_r = cache, jump
+    for t in range(300):
+        keys = jnp.asarray(rng.integers(0, 2 * K, B).astype(np.int32))
+        cache, jump, hit = ops.adaptive_climb(cache, jump, keys,
+                                              interpret=True)
+        cache_r, jump_r, hit_r = ref.adaptive_climb_ref(cache_r, jump_r,
+                                                        keys)
+        assert bool((hit == hit_r).all()), t
+    assert bool((cache == cache_r).all())
+    assert bool((jump == jump_r).all())

@@ -1,0 +1,54 @@
+"""Every vectorized policy must reproduce the literal-pseudocode oracle
+hit-for-hit on adversarial traces."""
+import numpy as np
+import pytest
+
+from repro.core import POLICIES
+from repro.core.oracle import ORACLES
+from repro.core.simulator import replay
+from repro.data.traces import scan_mix_trace, shifting_zipf_trace, zipf_trace
+
+POLICY_NAMES = sorted(POLICIES.keys())
+
+
+def _traces():
+    out = {
+        "zipf_small_universe": zipf_trace(N=32, T=1500, alpha=0.9, seed=1),
+        "zipf_big_universe": zipf_trace(N=4096, T=1500, alpha=0.8, seed=2),
+        "shifting": shifting_zipf_trace(N=256, T=1500, alpha=1.1, phases=5,
+                                        seed=3),
+        "scans": scan_mix_trace(N=128, T=1500, alpha=1.0, scan_frac=0.3,
+                                scan_len=64, seed=4),
+        "uniform": np.random.default_rng(5).integers(
+            0, 64, size=1500).astype(np.int32),
+        "repeat_heavy": np.tile(np.arange(7, dtype=np.int32), 200),
+    }
+    return out
+
+
+@pytest.mark.parametrize("policy_name", POLICY_NAMES)
+@pytest.mark.parametrize("K", [4, 16, 33])
+def test_matches_oracle(policy_name, K):
+    policy = POLICIES[policy_name]()
+    oracle_cls = ORACLES[policy_name]
+    for tname, trace in _traces().items():
+        oracle = oracle_cls(K)
+        expected = np.array([oracle.step(int(k)) for k in trace])
+        got = np.asarray(replay(policy, trace, K))
+        mism = np.nonzero(expected != got)[0]
+        assert mism.size == 0, (
+            f"{policy_name} K={K} trace={tname}: first mismatch at "
+            f"t={mism[0] if mism.size else None} "
+            f"(oracle={expected[mism[:5]]}, jax={got[mism[:5]]})")
+
+
+@pytest.mark.parametrize("eps", [0.25, 0.5, 1.0])
+def test_dac_eps_matches_oracle(eps):
+    from repro.core import DynamicAdaptiveClimb
+    from repro.core.oracle import OracleDynamicAdaptiveClimb
+    K = 16
+    trace = shifting_zipf_trace(N=200, T=3000, alpha=1.2, phases=6, seed=7)
+    oracle = OracleDynamicAdaptiveClimb(K, eps=eps)
+    expected = np.array([oracle.step(int(k)) for k in trace])
+    got = np.asarray(replay(DynamicAdaptiveClimb(eps=eps), trace, K))
+    assert (expected == got).all()

@@ -1,0 +1,143 @@
+"""Property-based tests (hypothesis) on system invariants of the policies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (POLICIES, AdaptiveClimb, DynamicAdaptiveClimb, EMPTY)
+
+SMALL_TRACE = st.lists(st.integers(min_value=0, max_value=40),
+                       min_size=1, max_size=300)
+
+
+def _cache_key_field(state):
+    for f in ("cache", "keys"):
+        if f in state:
+            return np.asarray(state[f])
+    return None
+
+
+@settings(max_examples=15, deadline=None)
+@given(trace=SMALL_TRACE, K=st.sampled_from([2, 5, 8]))
+def test_no_duplicates_and_hit_is_membership(trace, K):
+    """For every policy: cached keys stay unique; hit <=> pre-step membership."""
+    for name, ctor in POLICIES.items():
+        if name in ("twoq", "arc", "lirs"):
+            continue  # multi-list/ghost-keeping policies checked below
+        pol = ctor()
+        st_ = pol.init(K)
+        step = jax.jit(pol.step)
+        for k in trace:
+            pre = _cache_key_field(st_)
+            member = bool((pre == k).any())
+            st_, hit = step(st_, jnp.int32(k))
+            assert bool(hit) == member, (name, k)
+            post = _cache_key_field(st_)
+            real = post[post != int(EMPTY)]
+            assert len(np.unique(real)) == len(real), (name, post)
+
+
+@settings(max_examples=15, deadline=None)
+@given(trace=SMALL_TRACE, K=st.sampled_from([4, 8]))
+def test_multilist_invariants(trace, K):
+    """TwoQ/ARC: resident lists are disjoint; ARC |T1|+|T2| <= K, 0<=p<=K."""
+    for name in ("twoq", "arc"):
+        pol = POLICIES[name]()
+        st_ = pol.init(K)
+        step = jax.jit(pol.step)
+        for k in trace:
+            st_, hit = step(st_, jnp.int32(k))
+            if name == "arc":
+                t1 = set(np.asarray(st_["t1k"])) - {int(EMPTY)}
+                t2 = set(np.asarray(st_["t2k"])) - {int(EMPTY)}
+                b1 = set(np.asarray(st_["b1k"])) - {int(EMPTY)}
+                b2 = set(np.asarray(st_["b2k"])) - {int(EMPTY)}
+                assert not (t1 & t2) and not (b1 & b2)
+                assert not ((t1 | t2) & (b1 | b2))
+                assert len(t1) + len(t2) <= K
+                assert 0 <= int(st_["p"]) <= K
+            else:
+                a1 = set(np.asarray(st_["in_keys"])) - {int(EMPTY)}
+                am = set(np.asarray(st_["am_keys"])) - {int(EMPTY)}
+                assert not (a1 & am)
+
+
+@settings(max_examples=15, deadline=None)
+@given(trace=SMALL_TRACE, K=st.sampled_from([2, 6, 16]))
+def test_adaptiveclimb_jump_bounds(trace, K):
+    pol = AdaptiveClimb()
+    st_ = pol.init(K)
+    step = jax.jit(pol.step)
+    for k in trace:
+        st_, _ = step(st_, jnp.int32(k))
+        assert 1 <= int(st_["jump"]) <= K
+
+
+@settings(max_examples=15, deadline=None)
+@given(trace=SMALL_TRACE, K=st.sampled_from([4, 8, 16]),
+       eps=st.sampled_from([0.25, 0.5, 1.0]))
+def test_dac_invariants(trace, K, eps):
+    """DAC: k stays in [k_min, K_max] and is K*2^j; jump in [-k/2, 2k];
+    jump' in [-k/2, 0]; inactive ranks are EMPTY."""
+    pol = DynamicAdaptiveClimb(eps=eps)
+    st_ = pol.init(K)
+    K_max = K * pol.growth
+    step = jax.jit(pol.step)
+    valid_ks = {K * 2**j for j in range(-10, 10)
+                if 1 <= K * 2**j <= K_max and (K * 2**j) % 1 == 0}
+    for k in trace:
+        st_, _ = step(st_, jnp.int32(k))
+        kk = int(st_["k"])
+        jump, jump2 = int(st_["jump"]), int(st_["jump2"])
+        assert kk in valid_ks
+        assert -(kk // 2) <= jump <= 2 * kk
+        assert -(kk // 2) <= jump2 <= 0
+        cache = np.asarray(st_["cache"])
+        assert (cache[kk:] == int(EMPTY)).all()
+
+
+def test_dac_grows_under_thrash_and_shrinks_under_concentration():
+    """End-to-end behavioural check of the resizing control law."""
+    pol = DynamicAdaptiveClimb(eps=1.0, growth=8)
+    K = 16
+    # thrash: cyclic scan over 10*K distinct keys -> all misses -> jump rises
+    scan = np.tile(np.arange(10 * K, dtype=np.int32), 20)
+    st_ = pol.init(K)
+    step = jax.jit(pol.step)
+    for k in scan[:600]:
+        st_, _ = step(st_, jnp.int32(k))
+    assert int(st_["k"]) > K, "cache should grow under thrashing"
+
+    # concentration: two hot keys only -> hits at the very top -> shrink
+    hot = np.tile(np.arange(2, dtype=np.int32), 400)
+    st_ = pol.init(K)
+    for k in hot:
+        st_, _ = step(st_, jnp.int32(k))
+    assert int(st_["k"]) < K, "cache should shrink when top half owns all hits"
+
+
+@settings(max_examples=10, deadline=None)
+@given(trace=SMALL_TRACE, K=st.sampled_from([4, 8, 16]))
+def test_lirs_invariants(trace, K):
+    """LIRS: residents <= K; LIR count <= K - K_hir; ghosts bounded; a hit
+    implies pre-step LIR/HIR residency (ghost hits are misses)."""
+    from repro.core.lirs_lhd import FREE, GHOST, HIR, LIR
+    pol = POLICIES["lirs"]()
+    st_ = pol.init(K)
+    step = jax.jit(pol.step)
+    k_hir = max(1, int(K * pol.hir_frac))
+    for k in trace:
+        pre_state = np.asarray(st_["state"])
+        pre_keys = np.asarray(st_["keys"])
+        resident_pre = bool(
+            ((pre_keys == k) & ((pre_state == LIR)
+                                | (pre_state == HIR))).any())
+        st_, hit = step(st_, jnp.int32(k))
+        assert bool(hit) == resident_pre
+        s = np.asarray(st_["state"])
+        keys = np.asarray(st_["keys"])
+        assert ((s == LIR) | (s == HIR)).sum() <= K
+        assert (s == LIR).sum() <= K - k_hir
+        assert (s == GHOST).sum() <= pol.ghost_factor * K
+        tracked = keys[s != FREE]
+        assert len(np.unique(tracked)) == len(tracked)

@@ -1,0 +1,152 @@
+"""Serving-layer tests: decode == forward, bounded-pool semantics, the DAC
+KV controller's invariants (hypothesis) and control behavior."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import SMOKE_ARCHS
+from repro.models import forward, init_params
+from repro.serving import decode_step, init_serve_state, kv_cache, prefill
+
+KEY = jax.random.PRNGKey(3)
+
+
+def _nodrop(cfg):
+    if cfg.moe:
+        return dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    return cfg
+
+
+@pytest.mark.parametrize("name,tol", [
+    ("deepseek-7b", 1e-4), ("gemma2-27b", 1e-4), ("qwen1.5-110b", 1e-4),
+    ("codeqwen1.5-7b", 1e-4), ("mixtral-8x22b", 1e-3),
+    ("musicgen-medium", 1e-4), ("llava-next-mistral-7b", 1e-4),
+    ("deepseek-v2-236b", 0.25), ("jamba-1.5-large-398b", 0.25),
+    ("xlstm-125m", 0.05),
+])
+def test_prefill_decode_matches_forward(name, tol):
+    """Decode continuation reproduces full-forward logits (bf16 paths with
+    MoE routing / recurrent chains carry wider tolerances)."""
+    cfg = _nodrop(SMOKE_ARCHS[name])
+    params = init_params(cfg, KEY)
+    B, S, G = 2, 24, 4
+    toks = jax.random.randint(KEY, (B, S + G), 0, cfg.vocab)
+    emb = jax.random.normal(KEY, (B, S + G, cfg.d_model), jnp.float32) * .05
+    kw = dict(embeds=emb[:, :S]) if cfg.embeds_input else \
+        dict(tokens=toks[:, :S])
+    state, last = prefill(params, cfg, max_len=S + G + 2, **kw)
+    fkw = dict(embeds=emb) if cfg.embeds_input else dict(tokens=toks)
+    ref = forward(params, cfg, **fkw)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(ref[:, S - 1]),
+                               atol=max(tol, 1e-2), rtol=0)
+    if cfg.embeds_input:
+        step = jax.jit(lambda p, s, e: decode_step(p, cfg, s, embed=e))
+    else:
+        step = jax.jit(lambda p, s, t: decode_step(p, cfg, s, token=t))
+    for t in range(S, S + G):
+        inp = emb[:, t] if cfg.embeds_input else toks[:, t]
+        state, logits = step(params, state, inp)
+        err = float(jnp.max(jnp.abs(logits - ref[:, t])))
+        assert err < tol + 5e-3, (name, t, err)
+
+
+def test_bounded_equals_unbounded_when_no_eviction():
+    """budget >= context and k_active pinned => bit-identical decode."""
+    cfg = SMOKE_ARCHS["deepseek-7b"]
+    params = init_params(cfg, KEY)
+    B, S = 2, 20
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    su = init_serve_state(cfg, B, max_len=S, budget=0)
+    sb = init_serve_state(cfg, B, max_len=S, budget=32)
+    step = jax.jit(lambda p, s, t: decode_step(p, cfg, s, token=t))
+    for t in range(S):
+        su, lu = step(params, su, toks[:, t])
+        sb, lb = step(params, sb, toks[:, t])
+        np.testing.assert_array_equal(np.asarray(lu), np.asarray(lb))
+
+
+def test_bounded_budget_respected_under_long_decode():
+    """Decoding far past the budget: occupied slots never exceed k_active,
+    and the length/free bitmaps stay consistent."""
+    cfg = SMOKE_ARCHS["deepseek-7b"]
+    params = init_params(cfg, KEY)
+    B, budget, steps = 2, 16, 40
+    state = init_serve_state(cfg, B, max_len=steps + 2, budget=budget)
+    step = jax.jit(lambda p, s, t: decode_step(p, cfg, s, token=t))
+    tok = jnp.zeros((B,), jnp.int32)
+    for t in range(steps):
+        state, logits = step(params, state, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        assert bool(jnp.isfinite(logits).all()), t
+    for st in state["layers"].values():
+        if not (isinstance(st, dict) and "ctrl" in st):
+            continue
+        ctrl = st["ctrl"]
+        occupied = (~np.asarray(ctrl["free"])).sum(-1)
+        length = np.asarray(ctrl["length"])
+        k_act = np.asarray(ctrl["k_active"])
+        assert (occupied == length).all()
+        assert (length <= k_act).all()
+
+
+# --- DAC slot-pool controller: property tests ------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), budget=st.sampled_from([8, 16, 32]),
+       steps=st.integers(5, 60))
+def test_kv_ctrl_invariants(seed, budget, steps):
+    """rank2slot entries unique & consistent with free bitmap; jump/jump'
+    within Alg. 2 bounds; k_active within [k_min, budget]."""
+    rng = np.random.default_rng(seed)
+    B = 3
+    ctrl = kv_cache.control_init(B, budget)
+    for t in range(steps):
+        ctrl, slot = kv_cache.insert(ctrl, jnp.full((B,), t, jnp.int32))
+        if rng.random() < 0.7:      # random hit on an occupied slot
+            valid = np.asarray(kv_cache.valid_slots(ctrl))
+            hits = []
+            for b in range(B):
+                occ = np.nonzero(valid[b])[0]
+                hits.append(rng.choice(occ) if occ.size else -1)
+            ctrl = kv_cache.hit(ctrl, jnp.asarray(hits, jnp.int32))
+        ctrl = kv_cache.resize(ctrl, eps=0.5, k_min=2)
+
+        r2s = np.asarray(ctrl["rank2slot"])
+        free = np.asarray(ctrl["free"])
+        length = np.asarray(ctrl["length"])
+        k_act = np.asarray(ctrl["k_active"])
+        jump = np.asarray(ctrl["jump"])
+        jump2 = np.asarray(ctrl["jump2"])
+        for b in range(B):
+            live = r2s[b, :length[b]]
+            assert (live >= 0).all()
+            assert len(np.unique(live)) == len(live)
+            assert (~free[b][live]).all()
+            assert (~free[b]).sum() == length[b]
+            assert (r2s[b, length[b]:] == -1).all()
+            assert 2 <= k_act[b] <= budget
+            assert length[b] <= k_act[b]
+            assert -(k_act[b] // 2) <= jump[b] <= 2 * k_act[b]
+            assert -(k_act[b] // 2) <= jump2[b] <= 0
+
+
+def test_kv_ctrl_grows_when_thrashing_shrinks_when_concentrated():
+    B, budget = 1, 64
+    ctrl = kv_cache.control_init(B, budget, k0=8)
+    # all misses, no hits -> jump saturates -> budget doubles toward 64
+    for t in range(200):
+        ctrl, _ = kv_cache.insert(ctrl, jnp.full((B,), t, jnp.int32))
+        ctrl = kv_cache.resize(ctrl)
+    assert int(ctrl["k_active"][0]) == budget
+
+    # hammer the top slot with hits -> shrink
+    for t in range(300):
+        top = ctrl["rank2slot"][:, 0]
+        ctrl = kv_cache.hit(ctrl, top)
+        ctrl = kv_cache.resize(ctrl, eps=0.5, k_min=2)
+    assert int(ctrl["k_active"][0]) < budget
