@@ -10,13 +10,14 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import DynamicAdaptiveClimb, replay_observed
+from repro.core import Engine, make_policy
 from repro.data.traces import shifting_zipf_trace, zipf_trace
 from .common import fmt_row, save
 
 
 def run(N: int = 4096, T: int = 60_000, K: int = 256, seed: int = 0,
         quiet: bool = False):
+    engine = Engine()
     traces = {
         "zipf(1.0)": zipf_trace(N, T, 1.0, seed=seed),
         "shifting": shifting_zipf_trace(N, T, 1.1, phases=6, seed=seed),
@@ -25,11 +26,11 @@ def run(N: int = 4096, T: int = 60_000, K: int = 256, seed: int = 0,
     for tname, trace in traces.items():
         for eps in (0.25, 0.5, 1.0):
             for growth in (1, 4):
-                pol = DynamicAdaptiveClimb(eps=eps, growth=growth)
-                hits, obs = replay_observed(pol, trace, K)
+                pol = make_policy(f"dac(eps={eps},growth={growth})")
+                res = engine.replay(pol, trace, K, observe=True)
                 rows[f"{tname}|eps={eps}|growth={growth}"] = {
-                    "miss": float(1.0 - np.asarray(hits).mean()),
-                    "avg_k_frac": float(np.asarray(obs["k"]).mean() / K),
+                    "miss": res.miss_ratio,
+                    "avg_k_frac": float(np.asarray(res.obs["k"]).mean() / K),
                 }
     if not quiet:
         print(fmt_row(["config", "miss", "avg_k/K"], [36, 10, 10]))

@@ -12,8 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (POLICIES, DynamicAdaptiveClimb, replay,
-                        replay_observed)
+from repro.core import Engine
 from repro.data.traces import zipf_trace
 from .common import fmt_row, save
 
@@ -22,6 +21,7 @@ POLS = ["lru", "lfu", "adaptiveclimb", "dynamicadaptiveclimb"]
 
 def run(N: int = 4096, T: int = 80_000, alpha: float = 1.0, seed: int = 0,
         quiet: bool = False):
+    engine = Engine()
     trace = zipf_trace(N=N, T=T, alpha=alpha, seed=seed)
     fracs = [0.005, 0.01, 0.02, 0.05, 0.10, 0.20]
     rows = {}
@@ -31,14 +31,13 @@ def run(N: int = 4096, T: int = 80_000, alpha: float = 1.0, seed: int = 0,
         row = {}
         for p in POLS:
             if p == "dynamicadaptiveclimb":
-                hits, obs = replay_observed(DynamicAdaptiveClimb(), trace, K)
-                row[p] = float(1.0 - np.asarray(hits).mean())
-                avg_k = float(np.asarray(obs["k"]).mean())
+                res = engine.replay(p, trace, K, observe=True)
+                row[p] = res.miss_ratio
+                avg_k = float(np.asarray(res.obs["k"]).mean())
                 row["dac_avg_k"] = avg_k
                 pareto.append((avg_k / N, row[p]))
             else:
-                row[p] = float(1.0 - np.asarray(
-                    replay(POLICIES[p](), trace, K)).mean())
+                row[p] = engine.replay(p, trace, K).miss_ratio
         rows[frac] = row
     if not quiet:
         print(fmt_row(["K/N"] + POLS + ["dac_avg_k/N"],

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import POLICIES, miss_ratio, mrr, replay_batch
+from repro.core import Engine, mrr
 from repro.data.traces import DATASET_FAMILIES, dataset_family
 from .common import fmt_row, k_for, save
 
@@ -25,6 +25,7 @@ POLICY_ORDER = [
 
 def run(T: int = 60_000, n_traces: int = 3, seed: int = 0,
         quiet: bool = False):
+    engine = Engine()
     datasets = list(DATASET_FAMILIES)
     table = {}
     wins = {}
@@ -36,9 +37,8 @@ def run(T: int = 60_000, n_traces: int = 3, seed: int = 0,
             col = f"{ds}({regime})"
             mrs = {}
             for name in POLICY_ORDER:
-                hits = replay_batch(POLICIES[name](), np.asarray(traces), K)
-                per_trace = 1.0 - np.asarray(hits).mean(axis=1)
-                mrs[name] = per_trace
+                res = engine.replay(name, np.asarray(traces), K)
+                mrs[name] = np.atleast_1d(res.miss_ratio)  # [n_traces]
             fifo = mrs["fifo"]
             table[col] = {
                 name: float(np.mean([mrr(m, f) for m, f in

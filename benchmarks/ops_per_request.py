@@ -11,17 +11,21 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import POLICIES
-from repro.core.simulator import replay
+from repro.core import Engine, Request, make_policy
 from repro.launch import roofline
 from .common import fmt_row, save
 
 POLS = ["lru", "adaptiveclimb", "dynamicadaptiveclimb"]
 
+ENGINE = Engine()
+
 
 def _per_request(policy, K: int, T: int = 1024):
-    fn = jax.jit(lambda tr: replay(policy, tr, K))
-    lowered = fn.lower(jax.ShapeDtypeStruct((T,), jnp.int32))
+    fn = jax.jit(lambda reqs: ENGINE.replay(policy, reqs, K))
+    reqs = Request(key=jax.ShapeDtypeStruct((T,), jnp.int32),
+                   size=jax.ShapeDtypeStruct((T,), jnp.int32),
+                   cost=jax.ShapeDtypeStruct((T,), jnp.float32))
+    lowered = fn.lower(reqs)
     ana = roofline.analyze_hlo(lowered.compile().as_text())
     return ana["flops"] / T, ana["hbm_bytes"] / T
 
@@ -30,7 +34,7 @@ def run(quiet: bool = False):
     rows = {}
     for regime, K in (("small", 64), ("large", 1024)):
         for p in POLS:
-            fl, by = _per_request(POLICIES[p](), K)
+            fl, by = _per_request(make_policy(p), K)
             rows[f"{p}({regime})"] = {"flops_per_req": fl,
                                       "bytes_per_req": by}
     if not quiet:

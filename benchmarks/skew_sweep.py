@@ -1,9 +1,7 @@
 """Fig. 11: miss ratio vs Zipf skewness alpha for DAC / AC / LFU / LRU."""
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import POLICIES, replay
+from repro.core import Engine
 from repro.data.traces import zipf_trace
 from .common import fmt_row, save
 
@@ -12,12 +10,12 @@ POLS = ["lru", "lfu", "adaptiveclimb", "dynamicadaptiveclimb"]
 
 def run(N: int = 4096, T: int = 60_000, K: int = 256, seed: int = 0,
         quiet: bool = False):
+    engine = Engine()
     alphas = [0.2, 0.4, 0.6, 0.8, 1.0, 1.2, 1.4]
     rows = {}
     for a in alphas:
         trace = zipf_trace(N=N, T=T, alpha=a, seed=seed)
-        rows[a] = {p: float(1.0 - np.asarray(
-            replay(POLICIES[p](), trace, K)).mean()) for p in POLS}
+        rows[a] = {p: engine.replay(p, trace, K).miss_ratio for p in POLS}
     if not quiet:
         print(fmt_row(["alpha"] + POLS, [8] + [22] * len(POLS)))
         for a, row in rows.items():

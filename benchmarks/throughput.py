@@ -4,15 +4,16 @@ The paper replays disjoint traces on 1..16 threads; the SPMD-native
 equivalent replays 1..16 *parallel cache lanes* (vmap) per step — same
 embarrassingly-parallel structure, measured in Mops on this host.  On a
 real pod the lanes additionally spread over the data axis via
-``replay_sharded`` (examples/trace_study.py).
+``Engine.replay(..., mesh=...)`` (examples/trace_study.py).
 """
 from __future__ import annotations
 
 import time
 
+import jax
 import numpy as np
 
-from repro.core import POLICIES, replay_batch
+from repro.core import Engine, make_policy
 from repro.data.traces import zipf_trace
 from .common import fmt_row, save
 
@@ -21,17 +22,19 @@ POLS = ["adaptiveclimb", "dynamicadaptiveclimb", "tinylfu", "clock",
 
 
 def run(K: int = 256, T: int = 30_000, quiet: bool = False):
+    engine = Engine()
     lanes_list = [1, 2, 4, 8, 16]
     table = {}
     for p in POLS:
-        pol = POLICIES[p]()
+        pol = make_policy(p)
         row = {}
         for lanes in lanes_list:
             traces = np.stack([zipf_trace(8192, T, 1.1, seed=s)
                                for s in range(lanes)])
-            replay_batch(pol, traces, K)            # compile + warm
+            jax.block_until_ready(
+                engine.replay(pol, traces, K).info.hit)   # compile + warm
             t0 = time.perf_counter()
-            np.asarray(replay_batch(pol, traces, K))
+            jax.block_until_ready(engine.replay(pol, traces, K).info.hit)
             dt = time.perf_counter() - t0
             row[lanes] = lanes * T / dt / 1e6       # Mops
         table[p] = row

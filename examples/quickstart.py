@@ -1,20 +1,22 @@
 """Quickstart: the paper's policies on synthetic traces.
 
 Replays Zipf / shifting-Zipf traces through AdaptiveClimb,
-DynamicAdaptiveClimb and the strongest baselines, printing miss-ratio
-reduction vs FIFO (the paper's headline metric) and DAC's cache-size
-trajectory under working-set shifts.
+DynamicAdaptiveClimb and the strongest baselines via the unified
+``Engine.replay`` entrypoint, printing miss-ratio reduction vs FIFO (the
+paper's headline metric) and DAC's cache-size trajectory under working-set
+shifts.  Policies come from ``make_policy`` spec strings — no hand
+construction.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (POLICIES, DynamicAdaptiveClimb, miss_ratio, mrr,
-                        replay, replay_observed)
+from repro.core import Engine, mrr
 from repro.data.traces import shifting_zipf_trace, zipf_trace
 
 
 def main():
+    engine = Engine()
     K = 64
     T = 60_000
     traces = {
@@ -26,10 +28,10 @@ def main():
                   "adaptiveclimb", "dynamicadaptiveclimb"]
 
     for tname, trace in traces.items():
-        mr_fifo = miss_ratio(replay(POLICIES["fifo"](), trace, K))
+        mr_fifo = engine.replay("fifo", trace, K).miss_ratio
         print(f"\n=== {tname}  (K={K}, T={T}, fifo miss={mr_fifo:.3f}) ===")
         for name in contenders:
-            mr = miss_ratio(replay(POLICIES[name](), trace, K))
+            mr = engine.replay(name, trace, K).miss_ratio
             print(f"  {name:22s} miss={mr:.3f}  MRR={mrr(mr, mr_fifo):+.3f}")
 
     # DAC resizing trajectory under a working-set expansion
@@ -37,12 +39,13 @@ def main():
     small = zipf_trace(N=64, T=20_000, alpha=1.2, seed=1)      # fits easily
     big = zipf_trace(N=8192, T=20_000, alpha=0.4, seed=2)      # thrashes
     trace = np.concatenate([small, big, small])
-    hits, obs = replay_observed(DynamicAdaptiveClimb(growth=8), trace, K)
-    ks = np.asarray(obs["k"])
+    res = engine.replay("dac(growth=8)", trace, K, observe=True)
+    hits = np.asarray(res.info.hit)
+    ks = np.asarray(res.obs["k"])
     for t in range(0, len(trace), 6000):
         seg = slice(max(0, t - 3000), t + 3000)
         print(f"  t={t:6d}  k_active={ks[t]:5d}  "
-              f"hit_rate~{np.asarray(hits)[seg].mean():.2f}")
+              f"hit_rate~{hits[seg].mean():.2f}")
     print(f"  (cache grew to {ks.max()} under thrash, "
           f"returned to {ks[-1]} on the stable tail)")
 

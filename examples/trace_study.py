@@ -1,10 +1,11 @@
 """Fleet-scale trace study: the paper's 1067-trace evaluation pattern as a
 single SPMD program — thousands of independent caches replayed in parallel
-lanes (vmap) across the device mesh (shard_map).
+lanes (vmap) across the device mesh.
 
-On this CPU container it runs on 1 device; on a pod the same code spreads
-the trace batch over the data axis (the TPU-native version of the paper's
-multi-threaded libCacheSim replay, Tables IV/V).
+On this CPU container it runs on 1 device; on a pod the same
+``Engine.replay(..., mesh=...)`` call spreads the trace batch over the data
+axis (the TPU-native version of the paper's multi-threaded libCacheSim
+replay, Tables IV/V).
 
   PYTHONPATH=src python examples/trace_study.py --n-traces 64
 """
@@ -14,8 +15,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import POLICIES, miss_ratio, mrr, replay_batch, \
-    replay_sharded
+from repro.core import Engine, mrr
 from repro.data.traces import DATASET_FAMILIES, dataset_family
 
 
@@ -30,7 +30,9 @@ def main():
 
     names = args.policies.split(",")
     datasets = list(DATASET_FAMILIES)
-    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    mesh = (jax.make_mesh((jax.device_count(),), ("data",))
+            if jax.device_count() > 1 else None)
+    engine = Engine(mesh=mesh)
 
     print(f"[trace_study] {len(datasets)} dataset families x "
           f"{args.n_traces} traces x {len(names)} policies "
@@ -40,12 +42,8 @@ def main():
         row = {}
         t0 = time.perf_counter()
         for name in names:
-            pol = POLICIES[name]()
-            if jax.device_count() > 1:
-                hits = replay_sharded(pol, traces, args.K, mesh)
-            else:
-                hits = replay_batch(pol, np.asarray(traces), args.K)
-            row[name] = float(1.0 - np.asarray(hits).mean())
+            res = engine.replay(name, np.asarray(traces), args.K)
+            row[name] = float(np.mean(res.miss_ratio))
         dt = time.perf_counter() - t0
         reqs = len(names) * traces.size
         base = row.get("fifo", max(row.values()))

@@ -1,13 +1,21 @@
 """The paper's contribution: AdaptiveClimb / DynamicAdaptiveClimb cache
-replacement, 12 baselines, and the vectorized trace-replay engine."""
+replacement, 12 baselines, and the unified vectorized trace-replay engine.
+
+The public surface is small::
+
+    policy = make_policy("dac(eps=0.5,growth=4)")   # registry + spec parser
+    result = Engine().replay(policy, Request.of(keys, sizes), K)
+    result.miss_ratio, result.byte_miss_ratio, result.penalty_ratio
+"""
+import re
+
 from .adaptiveclimb import AdaptiveClimb
 from .baselines import (ARC, BLRU, Clock, Climb, FIFO, Hyperbolic, LFU, LRU,
                         Sieve, TinyLFU, TwoQ)
 from .dynamicadaptiveclimb import DynamicAdaptiveClimb
 from .lirs_lhd import LHD, LIRS
-from .policy import EMPTY, Policy
-from .simulator import (miss_ratio, mrr, replay, replay_batch,
-                        replay_observed, replay_sharded)
+from .policy import EMPTY, Policy, Request, StepInfo, step_info
+from .simulator import Engine, Metrics, ReplayResult, miss_ratio, mrr
 
 POLICIES = {
     "adaptiveclimb": AdaptiveClimb,
@@ -27,10 +35,57 @@ POLICIES = {
     "hyperbolic": Hyperbolic,
 }
 
+ALIASES = {
+    "ac": "adaptiveclimb",
+    "dac": "dynamicadaptiveclimb",
+    "2q": "twoq",
+}
+
+_SPEC_RE = re.compile(r"([a-z0-9_]+)\s*(?:\((.*)\))?\s*", re.I | re.S)
+
+
+def _coerce(text: str):
+    low = text.lower()
+    if low in ("true", "false"):
+        return low == "true"
+    for cast in (int, float):
+        try:
+            return cast(text)
+        except ValueError:
+            pass
+    return text.strip("'\"")
+
+
+def make_policy(spec) -> Policy:
+    """Build a policy from a spec string: ``"lru"``, ``"dac"``,
+    ``"dac(eps=0.5,growth=4)"``, ... — registry name (or alias) plus
+    optional constructor kwargs.  Policy instances pass through."""
+    if isinstance(spec, Policy):
+        return spec
+    m = _SPEC_RE.fullmatch(spec.strip())
+    if not m:
+        raise ValueError(f"unparseable policy spec {spec!r}")
+    name, argstr = m.group(1).lower(), m.group(2)
+    name = ALIASES.get(name, name)
+    if name not in POLICIES:
+        raise ValueError(
+            f"unknown policy {name!r}; known: {sorted(POLICIES)} "
+            f"(aliases: {sorted(ALIASES)})")
+    kwargs = {}
+    if argstr and argstr.strip():
+        for part in argstr.split(","):
+            k, sep, v = part.partition("=")
+            if not sep:
+                raise ValueError(
+                    f"policy spec args must be k=v, got {part!r} in {spec!r}")
+            kwargs[k.strip()] = _coerce(v.strip())
+    return POLICIES[name](**kwargs)
+
+
 __all__ = [
     "AdaptiveClimb", "DynamicAdaptiveClimb", "ARC", "BLRU", "Clock", "Climb",
     "FIFO", "Hyperbolic", "LFU", "LHD", "LIRS", "LRU", "Sieve", "TinyLFU", "TwoQ",
-    "EMPTY", "Policy", "POLICIES",
-    "miss_ratio", "mrr", "replay", "replay_batch", "replay_observed",
-    "replay_sharded",
+    "EMPTY", "Policy", "Request", "StepInfo", "step_info",
+    "POLICIES", "ALIASES", "make_policy",
+    "Engine", "Metrics", "ReplayResult", "miss_ratio", "mrr",
 ]

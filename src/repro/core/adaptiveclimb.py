@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .policy import EMPTY, Policy, find, promote
+from .policy import EMPTY, Policy, Request, find, promote, step_info
 
 
 class AdaptiveClimb(Policy):
@@ -29,7 +29,8 @@ class AdaptiveClimb(Policy):
             "jump": jnp.int32(K),
         }
 
-    def step(self, state, key):
+    def step(self, state, req: Request):
+        key = req.key
         cache, jump = state["cache"], state["jump"]
         K = cache.shape[0]
         hit, i = find(cache, key)
@@ -48,4 +49,4 @@ class AdaptiveClimb(Policy):
             "cache": jnp.where(hit, cache_h, cache_m),
             "jump": jnp.where(hit, jump_h, jump_m),
         }
-        return new_state, hit
+        return new_state, step_info(hit, req, evicted_key=cache[K - 1])

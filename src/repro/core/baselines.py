@@ -32,7 +32,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .policy import EMPTY, Policy, find, promote
+from .policy import EMPTY, Policy, Request, find, promote, step_info
 
 INF32 = jnp.int32(2**31 - 1)
 
@@ -52,7 +52,8 @@ class FIFO(Policy):
     def init(self, K: int) -> dict:
         return {"keys": jnp.full((K,), EMPTY, jnp.int32), "head": jnp.int32(0)}
 
-    def step(self, state, key):
+    def step(self, state, req: Request):
+        key = req.key
         keys, head = state["keys"], state["head"]
         K = keys.shape[0]
         hit, _ = find(keys, key)
@@ -61,7 +62,7 @@ class FIFO(Policy):
         return {
             "keys": jnp.where(hit, keys, keys_m),
             "head": jnp.where(hit, head, head_m),
-        }, hit
+        }, step_info(hit, req, evicted_key=keys[head])
 
 
 class LRU(Policy):
@@ -74,14 +75,17 @@ class LRU(Policy):
             "t": jnp.int32(0),
         }
 
-    def step(self, state, key):
+    def step(self, state, req: Request):
+        key = req.key
         keys, last, t = state["keys"], state["last"], state["t"]
         hit, i = find(keys, key)
         v = jnp.argmin(last).astype(jnp.int32)  # empties (-1) evicted first
         slot = jnp.where(hit, i, v)
+        evicted = keys[v]
         keys = keys.at[slot].set(key)
         last = last.at[slot].set(t)
-        return {"keys": keys, "last": last, "t": t + 1}, hit
+        return {"keys": keys, "last": last, "t": t + 1}, \
+            step_info(hit, req, evicted_key=evicted)
 
 
 class BLRU(Policy):
@@ -96,7 +100,8 @@ class BLRU(Policy):
     def init(self, K: int) -> dict:
         return LRU().init(K)
 
-    def step(self, state, key):
+    def step(self, state, req: Request):
+        key = req.key
         keys, last, t = state["keys"], state["last"], state["t"]
         K = keys.shape[0]
         lag = max(1, K // self.lag_div)
@@ -104,9 +109,11 @@ class BLRU(Policy):
         v = jnp.argmin(last).astype(jnp.int32)
         do_update = (~hit) | (t - last[i] > lag)
         slot = jnp.where(hit, i, v)
+        evicted = keys[v]
         keys = keys.at[slot].set(key)
         last = jnp.where(do_update, last.at[slot].set(t), last)
-        return {"keys": keys, "last": last, "t": t + 1}, hit
+        return {"keys": keys, "last": last, "t": t + 1}, \
+            step_info(hit, req, evicted_key=evicted)
 
 
 class Climb(Policy):
@@ -117,14 +124,16 @@ class Climb(Policy):
     def init(self, K: int) -> dict:
         return {"cache": jnp.full((K,), EMPTY, jnp.int32)}
 
-    def step(self, state, key):
+    def step(self, state, req: Request):
+        key = req.key
         cache = state["cache"]
         K = cache.shape[0]
         hit, i = find(cache, key)
         t_h = jnp.maximum(i - 1, 0)
         cache_h = promote(cache, i, t_h, key)
         cache_m = cache.at[K - 1].set(key)
-        return {"cache": jnp.where(hit, cache_h, cache_m)}, hit
+        return {"cache": jnp.where(hit, cache_h, cache_m)}, \
+            step_info(hit, req, evicted_key=cache[K - 1])
 
 
 class LFU(Policy):
@@ -136,14 +145,17 @@ class LFU(Policy):
             "cnt": jnp.zeros((K,), jnp.int32),
         }
 
-    def step(self, state, key):
+    def step(self, state, req: Request):
+        key = req.key
         keys, cnt = state["keys"], state["cnt"]
         hit, i = find(keys, key)
         v = jnp.argmin(cnt).astype(jnp.int32)  # empties (cnt=0) evicted first
         slot = jnp.where(hit, i, v)
+        evicted = keys[v]
         keys = keys.at[slot].set(key)
         cnt = jnp.where(hit, cnt.at[slot].add(1), cnt.at[slot].set(1))
-        return {"keys": keys, "cnt": cnt}, hit
+        return {"keys": keys, "cnt": cnt}, \
+            step_info(hit, req, evicted_key=evicted)
 
 
 class Clock(Policy):
@@ -156,7 +168,8 @@ class Clock(Policy):
             "hand": jnp.int32(0),
         }
 
-    def step(self, state, key):
+    def step(self, state, req: Request):
+        key = req.key
         keys, ref, hand = state["keys"], state["ref"], state["hand"]
         K = keys.shape[0]
         hit, i = find(keys, key)
@@ -179,7 +192,7 @@ class Clock(Policy):
             "keys": jnp.where(hit, keys, keys_m),
             "ref": jnp.where(hit, ref.at[i].set(True), ref_m),
             "hand": jnp.where(hit, hand, hand_m),
-        }, hit
+        }, step_info(hit, req, evicted_key=keys[victim])
 
 
 class Sieve(Policy):
@@ -197,7 +210,8 @@ class Sieve(Policy):
             "ctr": jnp.int32(0),
         }
 
-    def step(self, state, key):
+    def step(self, state, req: Request):
+        key = req.key
         keys, vis, seq = state["keys"], state["vis"], state["seq"]
         hand_seq, ctr = state["hand_seq"], state["ctr"]
         hit, i = find(keys, key)
@@ -236,7 +250,8 @@ class Sieve(Policy):
             "seq": jnp.where(hit, seq, seq_m),
             "hand_seq": jnp.where(hit, hand_seq, hand_m),
             "ctr": jnp.where(hit, ctr, ctr + 1),
-        }, hit
+        }, step_info(hit, req,
+                     evicted_key=jnp.where(has_empty, EMPTY, keys[victim]))
 
 
 class TwoQ(Policy):
@@ -258,7 +273,8 @@ class TwoQ(Policy):
             "t": jnp.int32(0),
         }
 
-    def step(self, state, key):
+    def step(self, state, req: Request):
+        key = req.key
         s = dict(state)
         t = s["t"]
         in_am, i_am = find(s["am_keys"], key)
@@ -273,6 +289,7 @@ class TwoQ(Policy):
         out_keys_r = s["out_keys"].at[i_out].set(EMPTY)
         out_seq_r = s["out_seq"].at[i_out].set(-1)
         am_slot = jnp.argmin(s["am_last"]).astype(jnp.int32)
+        am_evicted = s["am_keys"][am_slot]       # EMPTY while Am has room
         am_keys_r = s["am_keys"].at[am_slot].set(key)
         am_last_r = s["am_last"].at[am_slot].set(t)
 
@@ -295,6 +312,10 @@ class TwoQ(Policy):
 
         reclaim = (~hit) & in_out
         cold = (~hit) & (~in_out)
+        # residency = A1in ∪ Am; a displaced A1in entry becomes a ghost, so
+        # it leaves residency and counts as evicted
+        evicted = jnp.where(reclaim, am_evicted,
+                            jnp.where(cold, displaced, EMPTY))
         return {
             "in_keys": jnp.where(cold, in_keys_c, s["in_keys"]),
             "in_seq": jnp.where(cold, in_seq_c, s["in_seq"]),
@@ -306,7 +327,7 @@ class TwoQ(Policy):
             "am_last": jnp.where(in_am, am_last_h,
                                  jnp.where(reclaim, am_last_r, s["am_last"])),
             "t": t + 1,
-        }, hit
+        }, step_info(hit, req, evicted_key=evicted)
 
 
 class ARC(Policy):
@@ -357,7 +378,9 @@ class ARC(Policy):
         return keys.at[i].set(EMPTY), ts.at[i].set(-1)
 
     def _replace(self, s, in_b2, t):
-        """ARC's REPLACE: demote from T1 or T2 into its ghost list."""
+        """ARC's REPLACE: demote from T1 or T2 into its ghost list.
+        Returns (state, demoted_key) — the key that left residency
+        (EMPTY if both lists were empty)."""
         n1 = self._size(s["t1k"])
         use_t1 = (n1 >= 1) & ((in_b2 & (n1 == s["p"])) | (n1 > s["p"]))
         # guard: if chosen list is empty, fall back to the other
@@ -378,9 +401,10 @@ class ARC(Policy):
         out["t2t"] = jnp.where(use_t1, s["t2t"], t2t)
         out["b2k"] = jnp.where(use_t1 | (mov2 == EMPTY), s["b2k"], b2k)
         out["b2t"] = jnp.where(use_t1 | (mov2 == EMPTY), s["b2t"], b2t)
-        return out
+        return out, jnp.where(use_t1, mov1, mov2)
 
-    def step(self, state, key):
+    def step(self, state, req: Request):
+        key = req.key
         s = dict(state)
         t = s["t"]
         K = s["t1k"].shape[0]
@@ -412,7 +436,7 @@ class ARC(Policy):
         s2 = dict(s)
         s2["p"] = p2
         s2["b1k"], s2["b1t"] = self._remove(s2["b1k"], s2["b1t"], i_b1)
-        s2 = self._replace(s2, jnp.bool_(False), t)
+        s2, ev2 = self._replace(s2, jnp.bool_(False), t)
         s2["t2k"], s2["t2t"] = self._ins_mru(s2["t2k"], s2["t2t"], key, t)
 
         # ---- Case III: ghost hit in B2 ----
@@ -421,7 +445,7 @@ class ARC(Policy):
         s3 = dict(s)
         s3["p"] = p3
         s3["b2k"], s3["b2t"] = self._remove(s3["b2k"], s3["b2t"], i_b2)
-        s3 = self._replace(s3, jnp.bool_(True), t)
+        s3, ev3 = self._replace(s3, jnp.bool_(True), t)
         s3["t2k"], s3["t2t"] = self._ins_mru(s3["t2k"], s3["t2t"], key, t)
 
         # ---- Case IV: true miss ----
@@ -435,23 +459,25 @@ class ARC(Policy):
         # A1: |T1| < K -> delete LRU of B1, REPLACE
         sA1 = dict(sA)
         sA1["b1k"], sA1["b1t"], _ = self._del_lru(sA["b1k"], sA["b1t"])
-        sA1 = self._replace(sA1, jnp.bool_(False), t)
+        sA1, evA1 = self._replace(sA1, jnp.bool_(False), t)
         # A2: |T1| == K -> delete LRU of T1 outright
         sA2 = dict(sA)
-        sA2["t1k"], sA2["t1t"], _ = self._del_lru(sA["t1k"], sA["t1t"])
+        sA2["t1k"], sA2["t1t"], evA2 = self._del_lru(sA["t1k"], sA["t1t"])
         condA1 = n_t1 < K
         sA = {k: jnp.where(condA1, sA1[k], sA2[k]) for k in sA}
+        evA = jnp.where(condA1, evA1, evA2)
         # branch B: L1 < K and total >= K
         sB = dict(s4)
         sB1 = dict(sB)
         sB1["b2k"], sB1["b2t"], _ = self._del_lru(sB["b2k"], sB["b2t"])
         condB1 = total == 2 * K
         sB = {k: jnp.where(condB1, sB1[k], sB[k]) for k in sB}
-        sB = self._replace(sB, jnp.bool_(False), t)
+        sB, evB = self._replace(sB, jnp.bool_(False), t)
         condA = L1 == K
         condB = (L1 < K) & (total >= K)
         s4 = {k: jnp.where(condA, sA[k], jnp.where(condB, sB[k], s4[k]))
               for k in s4}
+        ev4 = jnp.where(condA, evA, jnp.where(condB, evB, EMPTY))
         s4["t1k"], s4["t1t"] = self._ins_mru(s4["t1k"], s4["t1t"], key, t)
 
         out = {}
@@ -460,7 +486,8 @@ class ARC(Policy):
                 hit, s1[k],
                 jnp.where(in_b1, s2[k], jnp.where(in_b2, s3[k], s4[k])))
         out["t"] = t + 1
-        return out, hit
+        evicted = jnp.where(in_b1, ev2, jnp.where(in_b2, ev3, ev4))
+        return out, step_info(hit, req, evicted_key=evicted)
 
 
 class TinyLFU(Policy):
@@ -504,7 +531,8 @@ class TinyLFU(Policy):
         vals = sketch[jnp.arange(self.rows), h]
         return jnp.min(vals)
 
-    def step(self, state, key):
+    def step(self, state, req: Request):
+        key = req.key
         keys, last, sketch = state["keys"], state["last"], state["sketch"]
         adds, t = state["adds"], state["t"]
         K = keys.shape[0]
@@ -528,11 +556,14 @@ class TinyLFU(Policy):
 
         keys_m = jnp.where(admit, keys.at[slot].set(key), keys)
         last_m = jnp.where(admit, last.at[slot].set(t), last)
+        # a rejected candidate evicts nothing (the admission filter bounces
+        # the request, the victim stays resident)
+        evicted = jnp.where(admit & ~has_empty, victim_key, EMPTY)
         return {
             "keys": jnp.where(hit, keys, keys_m),
             "last": jnp.where(hit, last.at[i].set(t), last_m),
             "sketch": sketch, "adds": adds, "t": t + 1,
-        }, hit
+        }, step_info(hit, req, evicted_key=evicted)
 
 
 class Hyperbolic(Policy):
@@ -548,12 +579,14 @@ class Hyperbolic(Policy):
             "t": jnp.int32(0),
         }
 
-    def step(self, state, key):
+    def step(self, state, req: Request):
+        key = req.key
         keys, cnt, ins, t = state["keys"], state["cnt"], state["ins"], state["t"]
         hit, i = find(keys, key)
         age = (t - ins + 1).astype(jnp.float32)
         prio = jnp.where(keys == EMPTY, -jnp.inf, cnt.astype(jnp.float32) / age)
         v = jnp.argmin(prio).astype(jnp.int32)
+        evicted = keys[v]
         keys_m = keys.at[v].set(key)
         cnt_m = cnt.at[v].set(1)
         ins_m = ins.at[v].set(t)
@@ -562,4 +595,4 @@ class Hyperbolic(Policy):
             "cnt": jnp.where(hit, cnt.at[i].add(1), cnt_m),
             "ins": jnp.where(hit, ins, ins_m),
             "t": t + 1,
-        }, hit
+        }, step_info(hit, req, evicted_key=evicted)

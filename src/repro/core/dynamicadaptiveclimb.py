@@ -39,7 +39,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .policy import EMPTY, Policy, find, promote
+from .policy import EMPTY, Policy, Request, find, promote, step_info
 
 
 class DynamicAdaptiveClimb(Policy):
@@ -62,7 +62,8 @@ class DynamicAdaptiveClimb(Policy):
     def observables(self, state):
         return {"k": state["k"], "jump": state["jump"]}
 
-    def step(self, state, key):
+    def step(self, state, req: Request):
+        key = req.key
         cache, jump, jump2, k = (
             state["cache"], state["jump"], state["jump2"], state["k"])
         K_max = cache.shape[0]
@@ -87,6 +88,9 @@ class DynamicAdaptiveClimb(Policy):
         actual_m = jnp.maximum(1, jnp.minimum(k - 1, jump_m))
         t_m = k - actual_m
         cache_m = promote(cache, k - 1, t_m, key)
+        # replacement victim (EMPTY while filling); entries wiped by a shrink
+        # below are a resize side-effect, not a per-request eviction event
+        evicted = cache[k - 1]
 
         cache = jnp.where(hit, cache_h, cache_m)
         jump = jnp.where(hit, jump_h, jump_m)
@@ -114,4 +118,4 @@ class DynamicAdaptiveClimb(Policy):
         jump2 = jnp.where(resized, 0, jump2)
 
         new_state = {"cache": cache, "jump": jump, "jump2": jump2, "k": k_new}
-        return new_state, hit
+        return new_state, step_info(hit, req, evicted_key=evicted)

@@ -24,7 +24,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .policy import EMPTY, Policy, find
+from .policy import EMPTY, Policy, Request, find, step_info
 
 INF32 = jnp.int32(2**31 - 1)
 
@@ -53,7 +53,8 @@ class LIRS(Policy):
             "t": jnp.int32(0),
         }
 
-    def step(self, state, key):
+    def step(self, state, req: Request):
+        key = req.key
         keys, t_last, st = state["keys"], state["t_last"], state["state"]
         t = state["t"] + 1
         K = (keys.shape[0]) // (1 + self.ghost_factor)
@@ -96,6 +97,11 @@ class LIRS(Policy):
         # --- case 3: miss ---------------------------------------------------
         n_res = jnp.sum((st == LIR) | (st == HIR))
         full = n_res >= K
+        # residency eviction: the demoted-to-ghost HIR (or dropped LIR)
+        evicted = jnp.where(full,
+                            jnp.where(has_hir, keys[hir_lru],
+                                      keys[lir_bottom]),
+                            EMPTY)
 
         # 3a. make room when full: evict LRU resident HIR -> ghost
         #     (if no HIR exists — unreachable after warmup, kept safe —
@@ -134,7 +140,7 @@ class LIRS(Policy):
             jnp.where(is_lir_hit, a, jnp.where(hit, b, c))
             for a, b, c in zip(s1, s2, s3))
         return {"keys": out[0], "t_last": out[1], "state": out[2],
-                "t": t}, hit
+                "t": t}, step_info(hit, req, evicted_key=evicted)
 
 
 class LHD(Policy):
@@ -166,7 +172,8 @@ class LHD(Policy):
         den = (hits + evs + 1).astype(jnp.float32) * jnp.exp2(b)
         return num / den
 
-    def step(self, state, key):
+    def step(self, state, req: Request):
+        key = req.key
         keys, t_ins = state["keys"], state["t_ins"]
         hits_c, evs_c = state["hits"], state["evs"]
         t = state["t"] + 1
@@ -188,6 +195,7 @@ class LHD(Policy):
         victim_occupied = keys[v] != EMPTY
         evs_m = jnp.where(victim_occupied,
                           evs_c.at[self._bin(t - t_ins[v])].add(1), evs_c)
+        evicted = jnp.where(victim_occupied, keys[v], EMPTY)
         keys_m = keys.at[v].set(key)
         t_ins_m = t_ins.at[v].set(t)
 
@@ -201,4 +209,5 @@ class LHD(Policy):
         hits_c = jnp.where(decay, hits_c // 2, hits_c)
         evs_c = jnp.where(decay, evs_c // 2, evs_c)
         return {"keys": keys, "t_ins": t_ins, "hits": hits_c,
-                "evs": evs_c, "t": t}, hit
+                "evs": evs_c, "t": t}, step_info(hit, req,
+                                                 evicted_key=evicted)

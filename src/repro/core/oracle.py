@@ -10,6 +10,13 @@ Conventions shared with the JAX side (so hit sequences are comparable):
   * keys are ints >= 0; -1 is the EMPTY sentinel.
   * tie-breaks: lowest slot index / first minimum.
   * Hyperbolic priorities computed in float32 (matching the TPU arithmetic).
+
+The oracles deliberately keep the scalar ``step(key) -> hit`` shape: they
+validate replacement *decisions*, which are size/cost-oblivious for every
+policy here.  ``oracle_replay`` lifts an oracle over a trace (optionally
+with per-request sizes/costs) into the same (hits, bytes_missed, penalty)
+aggregates the JAX engine reports, so engine metrics are checkable
+end-to-end against plain Python.
 """
 from __future__ import annotations
 
@@ -18,6 +25,24 @@ import math
 import numpy as np
 
 EMPTY = -1
+
+
+def oracle_replay(name: str, trace, K: int, sizes=None, costs=None, **kw):
+    """Replay `trace` through oracle `name`; returns a dict with the hit
+    mask plus the engine's aggregate metrics computed in plain Python."""
+    oracle = ORACLES[name](K, **kw)
+    trace = np.asarray(trace)
+    hits = np.array([oracle.step(int(k)) for k in trace], dtype=bool)
+    sizes = np.ones(len(trace)) if sizes is None else np.asarray(sizes)
+    costs = np.ones(len(trace)) if costs is None else np.asarray(costs)
+    total = sizes.sum()
+    return {
+        "hits": hits,
+        "miss_ratio": float((~hits).mean()) if len(trace) else 0.0,
+        "byte_miss_ratio": (float(((~hits) * sizes).sum() / total)
+                            if total > 0 else 0.0),
+        "penalty": float(((~hits) * costs).sum()),
+    }
 
 
 class OracleAdaptiveClimb:

@@ -10,18 +10,85 @@ data-dependent pointer splice.
 
 Every policy is a pure-functional object::
 
-    state = policy.init(K)                  # pytree of fixed-shape arrays
-    state, hit = policy.step(state, key)    # key: int32 scalar, hit: bool
+    state = policy.init(K)                      # pytree of fixed-shape arrays
+    state, info = policy.step(state, request)   # Request -> StepInfo
+
+``Request`` carries ``(key, size, cost)`` so size-aware (byte miss ratio)
+and cost-aware (miss penalty) objectives flow through the engine natively;
+``size``/``cost`` default to 1/1.0, so plain key traces reproduce the
+classic unit-object model bit-for-bit.  ``StepInfo`` reports, per request,
+the hit bit, the key that left residency this step (``EMPTY`` if none), and
+the size/cost charged on a miss.
 
 ``step`` is traceable (scan/vmap/jit safe).  Policy instances are hashable
 (static) so ``jax.jit(..., static_argnames='policy')`` works.
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 EMPTY = jnp.int32(-1)
+
+
+class Request(NamedTuple):
+    """One cache request: object key + size (bytes/pages/slots) + miss cost
+    (latency, backend load, ...).  A pytree, so a ``Request`` of ``[T]`` (or
+    ``[B, T]``) arrays scans/vmaps exactly like a bare key trace."""
+
+    key: jax.Array    # int32
+    size: jax.Array   # int32
+    cost: jax.Array   # float32
+
+    @classmethod
+    def of(cls, keys, sizes=None, costs=None) -> "Request":
+        """Build a ``Request`` from keys, broadcasting ``sizes``/``costs``
+        (scalars or per-key arrays; default 1 / 1.0)."""
+        if isinstance(keys, Request):
+            if sizes is not None or costs is not None:
+                raise ValueError("pass sizes/costs inside the Request")
+            return keys
+        key = jnp.asarray(keys, jnp.int32)
+        # sizes are int32 on device; reject concrete values that would
+        # silently wrap (an object >= 2 GiB corrupts every byte-miss
+        # metric).  Tracers can't be inspected — they stay caller-checked.
+        if sizes is not None and not isinstance(sizes, jax.core.Tracer):
+            smax = np.max(np.asarray(sizes)) if np.size(sizes) else 0
+            if smax > np.iinfo(np.int32).max:
+                raise ValueError(
+                    f"sizes exceed int32 range (max {smax}); rescale to "
+                    "coarser units (KiB/pages) before building Requests")
+        size = jnp.broadcast_to(
+            jnp.asarray(1 if sizes is None else sizes, jnp.int32), key.shape)
+        cost = jnp.broadcast_to(
+            jnp.asarray(1.0 if costs is None else costs, jnp.float32),
+            key.shape)
+        return cls(key=key, size=size, cost=cost)
+
+
+class StepInfo(NamedTuple):
+    """Per-request policy output (a pytree; scan stacks it along time)."""
+
+    hit: jax.Array           # bool
+    evicted_key: jax.Array   # int32; EMPTY when nothing left residency
+    bytes_missed: jax.Array  # int32; == request size on miss, else 0
+    penalty: jax.Array       # float32; == request cost on miss, else 0
+
+
+def step_info(hit, req: Request, evicted_key=EMPTY) -> StepInfo:
+    """Assemble a ``StepInfo``: evictions only happen on misses, and a miss
+    charges the request's full size and cost."""
+    hit = jnp.asarray(hit, jnp.bool_)
+    return StepInfo(
+        hit=hit,
+        evicted_key=jnp.where(hit, EMPTY,
+                              jnp.asarray(evicted_key, jnp.int32)),
+        bytes_missed=jnp.where(hit, jnp.int32(0), req.size),
+        penalty=jnp.where(hit, jnp.float32(0.0), req.cost),
+    )
 
 
 class Policy:
@@ -32,7 +99,7 @@ class Policy:
     def init(self, K: int) -> dict:
         raise NotImplementedError
 
-    def step(self, state: dict, key: jax.Array):
+    def step(self, state: dict, req: Request):
         raise NotImplementedError
 
     # hashability for jit static args -----------------------------------

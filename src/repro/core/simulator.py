@@ -1,71 +1,158 @@
-"""Vectorized trace-replay engine.
+"""Unified vectorized trace-replay engine.
 
 One policy step is O(K) vector lanes; a trace replays under ``lax.scan``;
 independent caches (different traces, seeds, or cache sizes) batch under
-``vmap``; fleet-scale studies shard the batch over the device mesh with
-``shard_map``.  This replaces the paper's libCacheSim + thread-replay setup
-with a single SPMD program.
+``vmap``; fleet-scale studies shard the batch over the device mesh.  This
+replaces the paper's libCacheSim + thread-replay setup with a single SPMD
+program, and the former ``replay`` / ``replay_batch`` / ``replay_observed``
+/ ``replay_sharded`` quartet with one entrypoint::
+
+    result = Engine().replay(policy, requests, K)
+
+``requests`` is a :class:`~repro.core.policy.Request` pytree (or a bare key
+array — coerced with unit size/cost) of shape ``[T]`` or ``[B, T]``; pass
+``mesh=`` to spread a ``[B, T]`` batch over a device axis, ``observe=True``
+to collect per-step policy observables (e.g. DAC's ``k``/``jump``).  Hit,
+byte-miss and penalty totals are reduced *inside* the jitted program (per
+lane, under vmap/SPMD) — callers read ratios off the result instead of
+recomputing them post-hoc from hit masks.
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
-from .policy import Policy
+from .policy import Policy, Request, StepInfo
 
 
-@partial(jax.jit, static_argnames=("policy", "K"))
-def replay(policy: Policy, trace: jax.Array, K: int) -> jax.Array:
-    """Replay one trace; returns the bool hit mask (shape [T])."""
+class Metrics(NamedTuple):
+    """Per-lane replay totals, reduced inside the jitted replay program.
+    Byte/cost totals accumulate in float32 (object sizes in bytes overflow
+    int32 over long traces)."""
+
+    requests: jax.Array      # int32  — trace length
+    hits: jax.Array          # int32
+    bytes_total: jax.Array   # float32 — sum of request sizes
+    bytes_missed: jax.Array  # float32 — sum of sizes over misses
+    cost_total: jax.Array    # float32 — sum of request costs
+    penalty: jax.Array       # float32 — sum of costs over misses
+
+
+class ReplayResult(NamedTuple):
+    """Engine output: per-step ``StepInfo`` (leading dims match the input),
+    per-lane ``Metrics``, and optional stacked observables."""
+
+    info: StepInfo
+    metrics: Metrics
+    obs: Any
+
+    # -- conveniences (host-side; float for one lane, ndarray for a batch) --
+    @property
+    def hits(self):
+        return self.info.hit
+
+    @property
+    def hit_ratio(self):
+        return _ratio(self.metrics.hits, self.metrics.requests)
+
+    @property
+    def miss_ratio(self):
+        m = self.metrics
+        return _ratio(np.asarray(m.requests) - np.asarray(m.hits),
+                      m.requests)
+
+    @property
+    def byte_miss_ratio(self):
+        return _ratio(self.metrics.bytes_missed, self.metrics.bytes_total)
+
+    @property
+    def penalty_ratio(self):
+        """Cost-weighted miss ratio: sum(cost * miss) / sum(cost)."""
+        return _ratio(self.metrics.penalty, self.metrics.cost_total)
+
+    @property
+    def total_penalty(self):
+        out = np.asarray(self.metrics.penalty, dtype=np.float64)
+        return float(out) if out.ndim == 0 else out
+
+
+def _ratio(num, den):
+    num = np.asarray(num, dtype=np.float64)
+    den = np.asarray(den, dtype=np.float64)
+    out = np.divide(num, den, out=np.zeros_like(num), where=den > 0)
+    return float(out) if out.ndim == 0 else out
+
+
+def _scan_replay(policy: Policy, reqs: Request, K: int,
+                 observe: bool) -> ReplayResult:
     state = policy.init(K)
+    want_obs = observe and hasattr(policy, "observables")
 
-    def body(st, key):
-        st, hit = policy.step(st, key)
-        return st, hit
+    def body(st, req):
+        st, info = policy.step(st, req)
+        obs = policy.observables(st) if want_obs else None
+        return st, (info, obs)
 
-    _, hits = jax.lax.scan(body, state, trace)
-    return hits
-
-
-@partial(jax.jit, static_argnames=("policy", "K"))
-def replay_batch(policy: Policy, traces: jax.Array, K: int) -> jax.Array:
-    """Replay a batch of traces [B, T] -> hit masks [B, T]."""
-    return jax.vmap(lambda tr: replay(policy, tr, K))(traces)
-
-
-@partial(jax.jit, static_argnames=("policy", "K"))
-def replay_observed(policy: Policy, trace: jax.Array, K: int):
-    """Replay collecting per-step policy observables (e.g. DAC's k, jump)."""
-    state = policy.init(K)
-
-    def body(st, key):
-        st, hit = policy.step(st, key)
-        obs = policy.observables(st) if hasattr(policy, "observables") else {}
-        return st, (hit, obs)
-
-    _, (hits, obs) = jax.lax.scan(body, state, trace)
-    return hits, obs
-
-
-def replay_sharded(policy: Policy, traces: np.ndarray, K: int,
-                   mesh: Mesh, axis: str = "data") -> jax.Array:
-    """Shard a [B, T] trace batch over `axis` of `mesh` and replay SPMD.
-
-    Each device replays B/axis_size independent caches — the TPU-native
-    version of the paper's multi-threaded trace replay (Tables IV/V).
-    """
-    sharding = NamedSharding(mesh, P(axis, None))
-    traces = jax.device_put(jnp.asarray(traces), sharding)
-    fn = jax.jit(
-        lambda tr: jax.vmap(lambda t: replay(policy, t, K))(tr),
-        in_shardings=sharding,
-        out_shardings=sharding,
+    _, (info, obs) = jax.lax.scan(body, state, reqs)
+    metrics = Metrics(
+        requests=jnp.int32(reqs.key.shape[0]),
+        hits=jnp.sum(info.hit, dtype=jnp.int32),
+        bytes_total=jnp.sum(reqs.size.astype(jnp.float32)),
+        bytes_missed=jnp.sum(info.bytes_missed.astype(jnp.float32)),
+        cost_total=jnp.sum(reqs.cost),
+        penalty=jnp.sum(info.penalty),
     )
-    return fn(traces)
+    return ReplayResult(info=info, metrics=metrics, obs=obs)
+
+
+@partial(jax.jit, static_argnames=("policy", "K", "observe"))
+def _replay_single(policy, reqs, K, observe):
+    return _scan_replay(policy, reqs, K, observe)
+
+
+@partial(jax.jit, static_argnames=("policy", "K", "observe"))
+def _replay_batched(policy, reqs, K, observe):
+    return jax.vmap(lambda r: _scan_replay(policy, r, K, observe))(reqs)
+
+
+class Engine:
+    """The single replay entrypoint: scans one trace, vmaps a ``[B, T]``
+    batch, and — given a mesh — shards the batch axis SPMD (each device
+    replays B/axis_size independent caches, the TPU-native version of the
+    paper's multi-threaded trace replay, Tables IV/V)."""
+
+    def __init__(self, mesh=None, axis: str = "data"):
+        self.mesh = mesh
+        self.axis = axis
+
+    def replay(self, policy, requests, K: int, *, sizes=None, costs=None,
+               mesh=None, axis=None, observe: bool = False) -> ReplayResult:
+        """Replay ``requests`` through ``policy`` at capacity ``K``.
+
+        ``policy`` may be a :class:`Policy` instance or a spec string for
+        :func:`repro.core.make_policy` (e.g. ``"dac(eps=0.5)"``).
+        ``requests``: a :class:`Request`, or bare keys (``sizes``/``costs``
+        then broadcast per :meth:`Request.of`).
+        """
+        if isinstance(policy, str):
+            from . import make_policy
+            policy = make_policy(policy)
+        reqs = Request.of(requests, sizes, costs)
+        if reqs.key.ndim == 1:
+            return _replay_single(policy, reqs, K, observe)
+        if reqs.key.ndim != 2:
+            raise ValueError(
+                f"requests must be [T] or [B, T], got shape {reqs.key.shape}")
+        mesh = self.mesh if mesh is None else mesh
+        if mesh is not None:
+            sharding = NamedSharding(mesh, P(axis or self.axis, None))
+            reqs = jax.device_put(reqs, sharding)
+        return _replay_batched(policy, reqs, K, observe)
 
 
 # ---------------------------------------------------------------------------
@@ -77,7 +164,11 @@ def miss_ratio(hits) -> float:
 
 
 def mrr(mr_algo: float, mr_fifo: float) -> float:
-    """Miss-ratio reduction relative to FIFO (paper's signed definition)."""
+    """Miss-ratio reduction relative to FIFO (paper's signed definition).
+    Both-zero is explicitly no-reduction (0.0) rather than falling through
+    either signed branch."""
+    if mr_algo == 0.0 and mr_fifo == 0.0:
+        return 0.0
     if mr_algo <= mr_fifo:
         return (mr_fifo - mr_algo) / mr_fifo if mr_fifo > 0 else 0.0
     return (mr_fifo - mr_algo) / mr_algo if mr_algo > 0 else 0.0

@@ -1,3 +1,3 @@
-from .traces import (DATASET_FAMILIES, dataset_family, object_sizes,
-                     scan_mix_trace, shifting_zipf_trace, zipf_trace,
-                     churn_trace)
+from .traces import (DATASET_FAMILIES, dataset_family, fetch_costs,
+                     object_sizes, scan_mix_trace, shifting_zipf_trace,
+                     zipf_trace, churn_trace)

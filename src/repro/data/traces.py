@@ -12,7 +12,7 @@ import numpy as np
 
 __all__ = [
     "zipf_trace", "shifting_zipf_trace", "scan_mix_trace",
-    "dataset_family", "DATASET_FAMILIES", "object_sizes",
+    "dataset_family", "DATASET_FAMILIES", "object_sizes", "fetch_costs",
 ]
 
 
@@ -148,3 +148,13 @@ def object_sizes(n_objects: int, seed: int = 0,
     rng = np.random.default_rng(seed)
     kb = rng.lognormal(mean=np.log(median_kb), sigma=sigma, size=n_objects)
     return np.maximum(1, (kb * 1024).astype(np.int64))
+
+
+def fetch_costs(sizes_bytes: np.ndarray, base_ms: float = 2.0,
+                per_mb_ms: float = 8.0) -> np.ndarray:
+    """Miss penalty (ms) for fetching an object from the backing store:
+    a fixed round-trip plus a bandwidth term.  Feeds ``Request.cost`` so
+    the engine's ``penalty_ratio`` measures latency-weighted misses, not
+    just request- or byte-weighted ones."""
+    sizes_bytes = np.asarray(sizes_bytes, dtype=np.float64)
+    return (base_ms + per_mb_ms * sizes_bytes / 2**20).astype(np.float32)

@@ -23,11 +23,11 @@ def decode_attention_ref(q, k, v, valid, *, softcap=0.0, scale=None):
 
 def adaptive_climb_ref(cache, jump, key):
     """Batched AdaptiveClimb step — vmap of the repro.core policy."""
-    from repro.core import AdaptiveClimb
+    from repro.core import AdaptiveClimb, Request
     pol = AdaptiveClimb()
 
     def one(c, j, k):
-        state, hit = pol.step({"cache": c, "jump": j}, k)
-        return state["cache"], state["jump"], hit.astype(jnp.int32)
+        state, info = pol.step({"cache": c, "jump": j}, Request.of(k))
+        return state["cache"], state["jump"], info.hit.astype(jnp.int32)
 
     return jax.vmap(one)(cache, jump, key)

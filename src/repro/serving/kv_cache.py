@@ -39,7 +39,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-EMPTY = jnp.int32(-1)
+from ..core.policy import EMPTY
 
 
 def control_init(B: int, budget: int, k0: int | None = None):

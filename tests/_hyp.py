@@ -1,0 +1,36 @@
+"""Hypothesis import guard shared by the test modules.
+
+``hypothesis`` is a dev-only dependency (see requirements-dev.txt).  When
+it is absent, property-based tests must *skip* — not kill collection of the
+whole module (the seed repo hard-imported hypothesis and tier-1 died at
+collection).  Import ``given``/``settings``/``st`` from here: with
+hypothesis installed they are the real thing; without it, ``given`` marks
+the test skipped and ``st``/``settings`` are inert decoration-time stubs.
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        def wrap(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return wrap
+
+    def settings(*_a, **_k):
+        def wrap(fn):
+            return fn
+        return wrap
+
+    class _StrategyStub:
+        """Accepts any strategy-building call chain at decoration time."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

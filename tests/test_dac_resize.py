@@ -1,0 +1,85 @@
+"""DAC resize invariants under the Request/StepInfo API, on plain random
+traces (no hypothesis): the active size k stays in [k_min, K_max], ranks
+>= k are EMPTY after every step (in particular after a shrink), and the
+jump/jump' controllers stay in their documented ranges."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EMPTY, DynamicAdaptiveClimb, Engine, Request
+
+ENGINE = Engine()
+
+
+def _mixed_trace(rng, T=1200):
+    """Alternating thrash / concentration segments to exercise both the
+    grow and shrink paths."""
+    segs = []
+    while sum(len(s) for s in segs) < T:
+        if rng.random() < 0.5:
+            segs.append(rng.integers(0, 400, 150))      # wide: thrash
+        else:
+            segs.append(rng.integers(0, 3, 150))        # narrow: concentrate
+    return np.concatenate(segs)[:T].astype(np.int32)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("K,eps,growth,k_min", [
+    (8, 0.5, 4, 2), (16, 0.25, 2, 2), (16, 1.0, 8, 4), (32, 0.5, 1, 2),
+])
+def test_resize_invariants_stepwise(seed, K, eps, growth, k_min):
+    pol = DynamicAdaptiveClimb(eps=eps, growth=growth, k_min=k_min)
+    K_max = K * growth
+    state = pol.init(K)
+    step = jax.jit(pol.step)
+    rng = np.random.default_rng(seed)
+    prev_k = K
+    saw_shrink = saw_grow = False
+    for key in _mixed_trace(rng):
+        state, _ = step(state, Request.of(jnp.int32(int(key))))
+        k = int(state["k"])
+        jump, jump2 = int(state["jump"]), int(state["jump2"])
+        assert k_min <= k <= K_max
+        assert k in (prev_k, 2 * prev_k, prev_k // 2), (prev_k, k)
+        saw_grow |= k == 2 * prev_k
+        saw_shrink |= k == prev_k // 2
+        # every rank past the active size is EMPTY — the shrink wipe leaves
+        # no stale keys that could fake a hit later
+        cache = np.asarray(state["cache"])
+        assert (cache[k:] == int(EMPTY)).all(), (k, cache)
+        # controller ranges documented in dynamicadaptiveclimb.py
+        assert -(k // 2) <= jump <= 2 * k
+        assert -(k // 2) <= jump2 <= 0
+        prev_k = k
+    if growth > 1:
+        assert saw_grow, "mixed trace should trigger at least one grow"
+    assert saw_shrink, "mixed trace should trigger at least one shrink"
+
+
+@pytest.mark.parametrize("growth", [1, 4])
+def test_resize_trajectory_via_engine(growth):
+    """The same invariants hold for the k/jump observables the engine
+    collects, over a longer trace."""
+    rng = np.random.default_rng(7)
+    trace = _mixed_trace(rng, T=6000)
+    K = 16
+    res = ENGINE.replay(f"dac(growth={growth})", trace, K, observe=True)
+    ks = np.asarray(res.obs["k"])
+    jumps = np.asarray(res.obs["jump"])
+    assert ks.min() >= 2 and ks.max() <= K * growth
+    assert (jumps <= 2 * ks).all()
+    assert (jumps >= -(ks // 2)).all()
+    # k moves by exact doubling/halving only
+    steps = ks[1:] / ks[:-1]
+    assert set(np.unique(steps)).issubset({0.5, 1.0, 2.0})
+
+
+def test_shrink_never_below_k_min():
+    pol = DynamicAdaptiveClimb(eps=1.0, growth=2, k_min=8)
+    state = pol.init(16)
+    step = jax.jit(pol.step)
+    for key in np.tile(np.arange(2, dtype=np.int32), 500):  # max concentration
+        state, _ = step(state, Request.of(jnp.int32(int(key))))
+        assert int(state["k"]) >= 8
+    assert int(state["k"]) == 8  # it did shrink, and stopped at the floor

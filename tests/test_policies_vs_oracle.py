@@ -1,14 +1,15 @@
 """Every vectorized policy must reproduce the literal-pseudocode oracle
-hit-for-hit on adversarial traces."""
+hit-for-hit on adversarial traces (replayed through the unified Engine)."""
 import numpy as np
 import pytest
 
-from repro.core import POLICIES
-from repro.core.oracle import ORACLES
-from repro.core.simulator import replay
-from repro.data.traces import scan_mix_trace, shifting_zipf_trace, zipf_trace
+from repro.core import Engine, POLICIES, make_policy
+from repro.core.oracle import ORACLES, oracle_replay
+from repro.data.traces import (object_sizes, scan_mix_trace,
+                               shifting_zipf_trace, zipf_trace)
 
 POLICY_NAMES = sorted(POLICIES.keys())
+ENGINE = Engine()
 
 
 def _traces():
@@ -29,12 +30,12 @@ def _traces():
 @pytest.mark.parametrize("policy_name", POLICY_NAMES)
 @pytest.mark.parametrize("K", [4, 16, 33])
 def test_matches_oracle(policy_name, K):
-    policy = POLICIES[policy_name]()
+    policy = make_policy(policy_name)
     oracle_cls = ORACLES[policy_name]
     for tname, trace in _traces().items():
         oracle = oracle_cls(K)
         expected = np.array([oracle.step(int(k)) for k in trace])
-        got = np.asarray(replay(policy, trace, K))
+        got = np.asarray(ENGINE.replay(policy, trace, K).hits)
         mism = np.nonzero(expected != got)[0]
         assert mism.size == 0, (
             f"{policy_name} K={K} trace={tname}: first mismatch at "
@@ -44,11 +45,27 @@ def test_matches_oracle(policy_name, K):
 
 @pytest.mark.parametrize("eps", [0.25, 0.5, 1.0])
 def test_dac_eps_matches_oracle(eps):
-    from repro.core import DynamicAdaptiveClimb
     from repro.core.oracle import OracleDynamicAdaptiveClimb
     K = 16
     trace = shifting_zipf_trace(N=200, T=3000, alpha=1.2, phases=6, seed=7)
     oracle = OracleDynamicAdaptiveClimb(K, eps=eps)
     expected = np.array([oracle.step(int(k)) for k in trace])
-    got = np.asarray(replay(DynamicAdaptiveClimb(eps=eps), trace, K))
+    got = np.asarray(ENGINE.replay(f"dac(eps={eps})", trace, K).hits)
     assert (expected == got).all()
+
+
+@pytest.mark.parametrize("policy_name", ["lru", "arc",
+                                         "dynamicadaptiveclimb"])
+def test_sized_metrics_match_oracle(policy_name):
+    """Engine-native byte-miss/penalty aggregates == the plain-Python
+    oracle replay weighted by the same per-object sizes."""
+    K = 16
+    trace = shifting_zipf_trace(N=128, T=2000, alpha=1.0, phases=4, seed=9)
+    sizes = object_sizes(128, seed=9)[trace]
+    res = ENGINE.replay(policy_name, trace, K, sizes=sizes, costs=sizes)
+    ref = oracle_replay(policy_name, trace, K, sizes=sizes, costs=sizes)
+    np.testing.assert_array_equal(np.asarray(res.hits), ref["hits"])
+    assert res.miss_ratio == pytest.approx(ref["miss_ratio"], rel=1e-6)
+    assert res.byte_miss_ratio == pytest.approx(ref["byte_miss_ratio"],
+                                                rel=1e-5)
+    assert res.total_penalty == pytest.approx(ref["penalty"], rel=1e-5)

@@ -1,13 +1,19 @@
-"""Property-based tests (hypothesis) on system invariants of the policies."""
+"""Property-based tests (hypothesis) on system invariants of the policies,
+driven through the Request/StepInfo step contract."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
-from repro.core import (POLICIES, AdaptiveClimb, DynamicAdaptiveClimb, EMPTY)
+from repro.core import (POLICIES, AdaptiveClimb, DynamicAdaptiveClimb,
+                        EMPTY, Request)
 
 SMALL_TRACE = st.lists(st.integers(min_value=0, max_value=40),
                        min_size=1, max_size=300)
+
+
+def _req(k):
+    return Request.of(jnp.int32(k))
 
 
 def _cache_key_field(state):
@@ -20,7 +26,8 @@ def _cache_key_field(state):
 @settings(max_examples=15, deadline=None)
 @given(trace=SMALL_TRACE, K=st.sampled_from([2, 5, 8]))
 def test_no_duplicates_and_hit_is_membership(trace, K):
-    """For every policy: cached keys stay unique; hit <=> pre-step membership."""
+    """For every policy: cached keys stay unique; hit <=> pre-step membership;
+    unit-request StepInfo charges exactly one byte / one cost unit per miss."""
     for name, ctor in POLICIES.items():
         if name in ("twoq", "arc", "lirs"):
             continue  # multi-list/ghost-keeping policies checked below
@@ -30,8 +37,10 @@ def test_no_duplicates_and_hit_is_membership(trace, K):
         for k in trace:
             pre = _cache_key_field(st_)
             member = bool((pre == k).any())
-            st_, hit = step(st_, jnp.int32(k))
-            assert bool(hit) == member, (name, k)
+            st_, info = step(st_, _req(k))
+            assert bool(info.hit) == member, (name, k)
+            assert int(info.bytes_missed) == (0 if member else 1), (name, k)
+            assert float(info.penalty) == (0.0 if member else 1.0), (name, k)
             post = _cache_key_field(st_)
             real = post[post != int(EMPTY)]
             assert len(np.unique(real)) == len(real), (name, post)
@@ -46,7 +55,7 @@ def test_multilist_invariants(trace, K):
         st_ = pol.init(K)
         step = jax.jit(pol.step)
         for k in trace:
-            st_, hit = step(st_, jnp.int32(k))
+            st_, _ = step(st_, _req(k))
             if name == "arc":
                 t1 = set(np.asarray(st_["t1k"])) - {int(EMPTY)}
                 t2 = set(np.asarray(st_["t2k"])) - {int(EMPTY)}
@@ -69,7 +78,7 @@ def test_adaptiveclimb_jump_bounds(trace, K):
     st_ = pol.init(K)
     step = jax.jit(pol.step)
     for k in trace:
-        st_, _ = step(st_, jnp.int32(k))
+        st_, _ = step(st_, _req(k))
         assert 1 <= int(st_["jump"]) <= K
 
 
@@ -86,7 +95,7 @@ def test_dac_invariants(trace, K, eps):
     valid_ks = {K * 2**j for j in range(-10, 10)
                 if 1 <= K * 2**j <= K_max and (K * 2**j) % 1 == 0}
     for k in trace:
-        st_, _ = step(st_, jnp.int32(k))
+        st_, _ = step(st_, _req(k))
         kk = int(st_["k"])
         jump, jump2 = int(st_["jump"]), int(st_["jump2"])
         assert kk in valid_ks
@@ -105,14 +114,14 @@ def test_dac_grows_under_thrash_and_shrinks_under_concentration():
     st_ = pol.init(K)
     step = jax.jit(pol.step)
     for k in scan[:600]:
-        st_, _ = step(st_, jnp.int32(k))
+        st_, _ = step(st_, _req(k))
     assert int(st_["k"]) > K, "cache should grow under thrashing"
 
     # concentration: two hot keys only -> hits at the very top -> shrink
     hot = np.tile(np.arange(2, dtype=np.int32), 400)
     st_ = pol.init(K)
     for k in hot:
-        st_, _ = step(st_, jnp.int32(k))
+        st_, _ = step(st_, _req(k))
     assert int(st_["k"]) < K, "cache should shrink when top half owns all hits"
 
 
@@ -132,8 +141,8 @@ def test_lirs_invariants(trace, K):
         resident_pre = bool(
             ((pre_keys == k) & ((pre_state == LIR)
                                 | (pre_state == HIR))).any())
-        st_, hit = step(st_, jnp.int32(k))
-        assert bool(hit) == resident_pre
+        st_, info = step(st_, _req(k))
+        assert bool(info.hit) == resident_pre
         s = np.asarray(st_["state"])
         keys = np.asarray(st_["keys"])
         assert ((s == LIR) | (s == HIR)).sum() <= K

@@ -1,0 +1,205 @@
+"""Tests for the Request/StepInfo contract, the unified Engine, the
+make_policy spec parser, and the mrr metric guards.  Hypothesis-free so the
+whole file runs in minimal environments."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (EMPTY, Engine, POLICIES, Request, StepInfo,
+                        DynamicAdaptiveClimb, make_policy, mrr)
+from repro.data.traces import object_sizes, zipf_trace
+
+ENGINE = Engine()
+
+
+# --- Request / StepInfo ------------------------------------------------------
+
+def test_request_defaults_unit_size_and_cost():
+    keys = np.array([3, 1, 2], np.int64)
+    req = Request.of(keys)
+    assert req.key.dtype == jnp.int32
+    assert req.size.dtype == jnp.int32 and (np.asarray(req.size) == 1).all()
+    assert req.cost.dtype == jnp.float32 and (np.asarray(req.cost) == 1.0).all()
+    assert req.key.shape == req.size.shape == req.cost.shape == (3,)
+
+
+def test_request_broadcasts_scalars_and_arrays():
+    keys = np.arange(5, dtype=np.int32)
+    req = Request.of(keys, sizes=7, costs=np.arange(5) * 0.5)
+    assert (np.asarray(req.size) == 7).all()
+    np.testing.assert_allclose(np.asarray(req.cost), np.arange(5) * 0.5)
+    # an existing Request passes through untouched
+    assert Request.of(req) is req
+    with pytest.raises(ValueError):
+        Request.of(req, sizes=3)
+    # int32-wrapping sizes are rejected, not silently corrupted —
+    # whether they arrive as numpy, python scalars, or device arrays
+    with pytest.raises(ValueError, match="int32"):
+        Request.of(keys, sizes=np.int64(3) << 30)
+    with pytest.raises(ValueError, match="int32"):
+        Request.of(keys, sizes=3.0e9)
+    with pytest.raises(ValueError, match="int32"):
+        Request.of(keys, sizes=jnp.full((5,), 3.0e9))
+
+
+def test_step_info_charges_size_and_cost_on_miss_only():
+    pol = make_policy("lru")
+    state = pol.init(4)
+    step = jax.jit(pol.step)
+    state, miss = step(state, Request.of(jnp.int32(9), sizes=100, costs=2.5))
+    assert isinstance(miss, StepInfo)
+    assert not bool(miss.hit)
+    assert int(miss.bytes_missed) == 100
+    assert float(miss.penalty) == 2.5
+    state, hit = step(state, Request.of(jnp.int32(9), sizes=100, costs=2.5))
+    assert bool(hit.hit)
+    assert int(hit.bytes_missed) == 0
+    assert float(hit.penalty) == 0.0
+    assert int(hit.evicted_key) == int(EMPTY)
+
+
+# --- evicted_key semantics ---------------------------------------------------
+
+def _resident_set(name, state):
+    """Keys currently resident (occupying cache capacity) for any policy."""
+    if name == "twoq":
+        arrs = [state["in_keys"], state["am_keys"]]
+    elif name == "arc":
+        arrs = [state["t1k"], state["t2k"]]
+    elif name == "lirs":
+        from repro.core.lirs_lhd import HIR, LIR
+        st = np.asarray(state["state"])
+        keys = np.asarray(state["keys"])
+        return set(keys[(st == LIR) | (st == HIR)].tolist())
+    else:
+        for f in ("cache", "keys"):
+            if f in state:
+                arrs = [state[f]]
+                break
+    out = set()
+    for a in arrs:
+        out |= set(np.asarray(a).tolist())
+    return out - {int(EMPTY)}
+
+
+@pytest.mark.parametrize("name", sorted(POLICIES))
+def test_evicted_key_tracks_residency(name):
+    """Per step: hits evict nothing; a reported eviction was resident before
+    and (for non-resizing policies) is exactly the residency loss; nothing
+    but the requested key enters."""
+    K = 8
+    trace = zipf_trace(N=40, T=400, alpha=0.8, seed=13)
+    pol = POLICIES[name]()
+    state = pol.init(K)
+    step = jax.jit(pol.step)
+    resizing = isinstance(pol, DynamicAdaptiveClimb)
+    for k in trace:
+        pre = _resident_set(name, state)
+        state, info = step(state, Request.of(jnp.int32(int(k))))
+        post = _resident_set(name, state)
+        ev = int(info.evicted_key)
+        if bool(info.hit):
+            assert ev == int(EMPTY), (name, k)
+            continue
+        gained = post - pre
+        assert gained <= {int(k)}, (name, k, gained)
+        if ev != int(EMPTY):
+            assert ev in pre, (name, k, ev)
+            assert ev not in post, (name, k, ev)
+        if not resizing:
+            # exact conservation: what left residency is what was reported
+            lost = pre - post
+            assert lost == ({ev} - {int(EMPTY)}), (name, k, lost, ev)
+
+
+# --- Engine ------------------------------------------------------------------
+
+def test_engine_accepts_specs_and_bare_keys():
+    trace = zipf_trace(N=64, T=2000, alpha=1.0, seed=0)
+    res = ENGINE.replay("lru", trace, 16)
+    assert res.info.hit.shape == (2000,)
+    assert 0.0 < res.miss_ratio < 1.0
+    # unit sizes/costs: all three ratios coincide
+    assert res.byte_miss_ratio == pytest.approx(res.miss_ratio, abs=1e-6)
+    assert res.penalty_ratio == pytest.approx(res.miss_ratio, abs=1e-6)
+    # metrics agree with the per-step info they were reduced from
+    hits = np.asarray(res.info.hit)
+    assert int(res.metrics.hits) == hits.sum()
+    assert int(res.metrics.requests) == 2000
+
+
+def test_engine_byte_metrics_match_posthoc():
+    trace = zipf_trace(N=64, T=2000, alpha=1.0, seed=1)
+    sizes = object_sizes(64, seed=1)[trace]
+    res = ENGINE.replay("arc", trace, 16, sizes=sizes)
+    hits = np.asarray(res.info.hit)
+    manual = ((~hits) * sizes).sum() / sizes.sum()
+    assert res.byte_miss_ratio == pytest.approx(float(manual), rel=1e-5)
+
+
+def test_engine_batched_matches_single():
+    t0 = zipf_trace(N=64, T=1000, alpha=1.0, seed=2)
+    t1 = zipf_trace(N=64, T=1000, alpha=0.7, seed=3)
+    batched = ENGINE.replay("sieve", np.stack([t0, t1]), 16)
+    assert batched.info.hit.shape == (2, 1000)
+    for i, tr in enumerate((t0, t1)):
+        single = ENGINE.replay("sieve", tr, 16)
+        np.testing.assert_array_equal(np.asarray(batched.info.hit[i]),
+                                      np.asarray(single.info.hit))
+        assert batched.miss_ratio[i] == pytest.approx(single.miss_ratio)
+
+
+def test_engine_observe_collects_dac_trajectory():
+    trace = zipf_trace(N=512, T=3000, alpha=0.3, seed=4)
+    res = ENGINE.replay("dac(growth=4)", trace, 16, observe=True)
+    ks = np.asarray(res.obs["k"])
+    assert ks.shape == (3000,)
+    assert ks.max() <= 16 * 4 and ks.min() >= 2
+
+
+def test_engine_rejects_bad_rank():
+    with pytest.raises(ValueError):
+        ENGINE.replay("lru", np.zeros((2, 3, 4), np.int32), 4)
+
+
+# --- make_policy -------------------------------------------------------------
+
+def test_make_policy_plain_and_aliases():
+    assert type(make_policy("lru")) is POLICIES["lru"]
+    assert type(make_policy("dac")) is POLICIES["dynamicadaptiveclimb"]
+    assert type(make_policy("ac")) is POLICIES["adaptiveclimb"]
+    assert type(make_policy("2q")) is POLICIES["twoq"]
+    pol = make_policy("lru")
+    assert make_policy(pol) is pol
+
+
+def test_make_policy_kwargs():
+    pol = make_policy("dac(eps=0.25, growth=2, k_min=4)")
+    assert isinstance(pol, DynamicAdaptiveClimb)
+    assert pol.eps == 0.25 and pol.growth == 2 and pol.k_min == 4
+    pol2 = make_policy("tinylfu(rows=2)")
+    assert pol2.rows == 2
+
+
+def test_make_policy_errors():
+    with pytest.raises(ValueError):
+        make_policy("nosuchpolicy")
+    with pytest.raises(ValueError):
+        make_policy("lru(3)")  # positional args not allowed
+
+
+# --- mrr guards (satellite: explicit both-zero branch) -----------------------
+
+def test_mrr_both_zero_is_zero():
+    assert mrr(0.0, 0.0) == 0.0
+
+
+def test_mrr_signed_branches():
+    # improvement: normalized by FIFO's miss ratio
+    assert mrr(0.2, 0.4) == pytest.approx(0.5)
+    # regression: normalized by the algorithm's own miss ratio
+    assert mrr(0.4, 0.2) == pytest.approx(-0.5)
+    # degenerate one-sided zeros
+    assert mrr(0.0, 0.5) == pytest.approx(1.0)
+    assert mrr(0.5, 0.0) == pytest.approx(-1.0)

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.configs import SMOKE_ARCHS
 from repro.models import forward, init_params
@@ -22,17 +22,25 @@ def _nodrop(cfg):
     return cfg
 
 
-@pytest.mark.parametrize("name,tol", [
-    ("deepseek-7b", 1e-4), ("gemma2-27b", 1e-4), ("qwen1.5-110b", 1e-4),
-    ("codeqwen1.5-7b", 1e-4), ("mixtral-8x22b", 1e-3),
-    ("musicgen-medium", 1e-4), ("llava-next-mistral-7b", 1e-4),
-    ("deepseek-v2-236b", 0.25), ("jamba-1.5-large-398b", 0.25),
-    ("xlstm-125m", 0.05),
+@pytest.mark.parametrize("name,tol,fp32", [
+    ("deepseek-7b", 1e-4, False), ("gemma2-27b", 1e-4, False),
+    ("qwen1.5-110b", 1e-4, False), ("codeqwen1.5-7b", 1e-4, False),
+    ("mixtral-8x22b", 1e-3, False), ("musicgen-medium", 1e-4, False),
+    ("llava-next-mistral-7b", 1e-4, False),
+    ("deepseek-v2-236b", 1e-4, True), ("jamba-1.5-large-398b", 1e-4, True),
+    ("xlstm-125m", 0.05, False),
 ])
-def test_prefill_decode_matches_forward(name, tol):
-    """Decode continuation reproduces full-forward logits (bf16 paths with
-    MoE routing / recurrent chains carry wider tolerances)."""
+def test_prefill_decode_matches_forward(name, tol, fp32):
+    """Decode continuation reproduces full-forward logits.
+
+    The deep MoE hybrids run in fp32: in bf16 the decode-vs-batched
+    rounding difference can flip a top-k routing decision, which is a
+    discontinuous (and hardware/version-dependent) output jump no fixed
+    logit tolerance survives.  This test validates cache/state plumbing,
+    so fp32 — where decode == forward to ~1e-5 — is the right regime."""
     cfg = _nodrop(SMOKE_ARCHS[name])
+    if fp32:
+        cfg = dataclasses.replace(cfg, param_dtype="float32")
     params = init_params(cfg, KEY)
     B, S, G = 2, 24, 4
     toks = jax.random.randint(KEY, (B, S + G), 0, cfg.vocab)
