@@ -8,6 +8,8 @@ sizes (the paper's small/large x alpha grid).
 """
 from __future__ import annotations
 
+import argparse
+
 import jax
 import jax.numpy as jnp
 
@@ -21,7 +23,10 @@ ENGINE = Engine()
 
 
 def _per_request(policy, K: int, T: int = 1024):
-    fn = jax.jit(lambda reqs: ENGINE.replay(policy, reqs, K))
+    # metrics-only replay: the lowered program carries no [T] StepInfo
+    # stack, so flops/bytes measure the policy-step hot loop itself
+    fn = jax.jit(
+        lambda reqs: ENGINE.replay(policy, reqs, K, collect_info=False))
     reqs = Request(key=jax.ShapeDtypeStruct((T,), jnp.int32),
                    size=jax.ShapeDtypeStruct((T,), jnp.int32),
                    cost=jax.ShapeDtypeStruct((T,), jnp.float32))
@@ -51,4 +56,7 @@ def run(quiet: bool = False):
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quiet", action="store_true",
+                    help="no table; still writes the JSON result")
+    run(quiet=ap.parse_args().quiet)

@@ -5,9 +5,16 @@ equivalent replays 1..16 *parallel cache lanes* (vmap) per step — same
 embarrassingly-parallel structure, measured in Mops on this host.  On a
 real pod the lanes additionally spread over the data axis via
 ``Engine.replay(..., mesh=...)`` (examples/trace_study.py).
+
+Replays run in metrics-only mode (``collect_info=False``) — the honest
+throughput number excludes materializing a [lanes, T] StepInfo stack that
+production replay never needs.  Rank-based policies are additionally
+measured through the fused Pallas policy-step kernel (``use_pallas=True``,
+interpret-mode off-TPU) and reported side by side with the jnp lowering.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -17,40 +24,66 @@ from repro.core import Engine, make_policy
 from repro.data.traces import zipf_trace
 from .common import fmt_row, save
 
-POLS = ["adaptiveclimb", "dynamicadaptiveclimb", "tinylfu", "clock",
-        "sieve", "twoq", "arc", "lru", "blru"]
+POLS = ["climb", "adaptiveclimb", "dynamicadaptiveclimb", "tinylfu",
+        "clock", "sieve", "twoq", "arc", "lru", "blru"]
+# policies with a fused Pallas policy-step lowering (rank-array family)
+RANK_POLS = {"climb", "adaptiveclimb", "dynamicadaptiveclimb"}
 
 
-def run(K: int = 256, T: int = 30_000, quiet: bool = False):
+def _measure(engine, pol, traces, K, use_pallas):
+    res = engine.replay(pol, traces, K, collect_info=False,
+                        use_pallas=use_pallas)
+    jax.block_until_ready(res.metrics.hits)        # compile + warm
+    t0 = time.perf_counter()
+    res = engine.replay(pol, traces, K, collect_info=False,
+                        use_pallas=use_pallas)
+    jax.block_until_ready(res.metrics.hits)
+    return time.perf_counter() - t0
+
+
+def run(K: int = 256, T: int = 30_000, lanes_list=(1, 2, 4, 8, 16),
+        quiet: bool = False):
     engine = Engine()
-    lanes_list = [1, 2, 4, 8, 16]
+    lanes_list = list(lanes_list)
+    lane_traces = {
+        lanes: np.stack([zipf_trace(8192, T, 1.1, seed=s)
+                         for s in range(lanes)])
+        for lanes in lanes_list}
     table = {}
     for p in POLS:
         pol = make_policy(p)
-        row = {}
-        for lanes in lanes_list:
-            traces = np.stack([zipf_trace(8192, T, 1.1, seed=s)
-                               for s in range(lanes)])
-            jax.block_until_ready(
-                engine.replay(pol, traces, K).info.hit)   # compile + warm
-            t0 = time.perf_counter()
-            jax.block_until_ready(engine.replay(pol, traces, K).info.hit)
-            dt = time.perf_counter() - t0
-            row[lanes] = lanes * T / dt / 1e6       # Mops
-        table[p] = row
+        modes = ["jnp"] + (["pallas"] if p in RANK_POLS else [])
+        for mode in modes:
+            row = {}
+            for lanes in lanes_list:
+                dt = _measure(engine, pol, lane_traces[lanes], K,
+                              use_pallas=(mode == "pallas"))
+                row[lanes] = lanes * T / dt / 1e6       # Mops
+            table[f"{p}[{mode}]" if len(modes) > 1 else p] = row
     if not quiet:
         print(fmt_row(["policy"] + [f"{n} lanes" for n in lanes_list]
-                      + ["avg"], [22] + [10] * (len(lanes_list) + 1)))
+                      + ["avg"], [30] + [10] * (len(lanes_list) + 1)))
         for p, row in table.items():
             vals = [row[n] for n in lanes_list]
             print(fmt_row([p] + [f"{v:.2f}" for v in vals]
                           + [f"{np.mean(vals):.2f}"],
-                          [22] + [10] * (len(lanes_list) + 1)))
+                          [30] + [10] * (len(lanes_list) + 1)))
     return save("throughput", {
         "K": K, "T": T,
         "table": {p: {str(k): v for k, v in r.items()}
                   for p, r in table.items()}})
 
 
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--K", type=int, default=256)
+    ap.add_argument("--T", type=int, default=30_000)
+    ap.add_argument("--lanes", type=int, nargs="+", default=[1, 2, 4, 8, 16])
+    ap.add_argument("--quiet", action="store_true",
+                    help="no table; still writes the JSON result")
+    args = ap.parse_args()
+    run(K=args.K, T=args.T, lanes_list=args.lanes, quiet=args.quiet)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -7,6 +7,7 @@ The public surface is small::
     result = Engine().replay(policy, Request.of(keys, sizes), K)
     result.miss_ratio, result.byte_miss_ratio, result.penalty_ratio
 """
+import inspect
 import re
 
 from .adaptiveclimb import AdaptiveClimb
@@ -14,7 +15,7 @@ from .baselines import (ARC, BLRU, Clock, Climb, FIFO, Hyperbolic, LFU, LRU,
                         Sieve, TinyLFU, TwoQ)
 from .dynamicadaptiveclimb import DynamicAdaptiveClimb
 from .lirs_lhd import LHD, LIRS
-from .policy import EMPTY, Policy, Request, StepInfo, step_info
+from .policy import EMPTY, Policy, Request, StepInfo, rank_step, step_info
 from .simulator import Engine, Metrics, ReplayResult, miss_ratio, mrr
 
 POLICIES = {
@@ -56,10 +57,41 @@ def _coerce(text: str):
     return text.strip("'\"")
 
 
+def _coerce_to_param(name: str, cls, key: str, value):
+    """Coerce a parsed spec value to the declared type of the constructor
+    parameter (inferred from its default), so ``dac(growth=4.0)`` and
+    ``dac(growth=4)`` build identical policies instead of one smuggling a
+    float through an integer knob."""
+    param = inspect.signature(cls.__init__).parameters.get(key)
+    if param is None:
+        raise ValueError(
+            f"unknown parameter {key!r} for policy {name!r}; accepts: "
+            f"{sorted(p for p in inspect.signature(cls.__init__).parameters if p != 'self')}")
+    default = param.default
+    if default is inspect.Parameter.empty or isinstance(value, str):
+        return value
+    if isinstance(default, bool):
+        if not isinstance(value, bool):
+            raise ValueError(
+                f"{name}({key}=...) expects a bool, got {value!r}")
+        return value
+    if isinstance(default, int):
+        if isinstance(value, float):
+            if not value.is_integer():
+                raise ValueError(
+                    f"{name}({key}=...) expects an integer, got {value!r}")
+            return int(value)
+        return int(value)
+    if isinstance(default, float):
+        return float(value)
+    return value
+
+
 def make_policy(spec) -> Policy:
     """Build a policy from a spec string: ``"lru"``, ``"dac"``,
     ``"dac(eps=0.5,growth=4)"``, ... — registry name (or alias) plus
-    optional constructor kwargs.  Policy instances pass through."""
+    optional constructor kwargs (coerced to the parameter's declared
+    type).  Policy instances pass through."""
     if isinstance(spec, Policy):
         return spec
     m = _SPEC_RE.fullmatch(spec.strip())
@@ -71,6 +103,7 @@ def make_policy(spec) -> Policy:
         raise ValueError(
             f"unknown policy {name!r}; known: {sorted(POLICIES)} "
             f"(aliases: {sorted(ALIASES)})")
+    cls = POLICIES[name]
     kwargs = {}
     if argstr and argstr.strip():
         for part in argstr.split(","):
@@ -78,14 +111,15 @@ def make_policy(spec) -> Policy:
             if not sep:
                 raise ValueError(
                     f"policy spec args must be k=v, got {part!r} in {spec!r}")
-            kwargs[k.strip()] = _coerce(v.strip())
-    return POLICIES[name](**kwargs)
+            k = k.strip()
+            kwargs[k] = _coerce_to_param(name, cls, k, _coerce(v.strip()))
+    return cls(**kwargs)
 
 
 __all__ = [
     "AdaptiveClimb", "DynamicAdaptiveClimb", "ARC", "BLRU", "Clock", "Climb",
     "FIFO", "Hyperbolic", "LFU", "LHD", "LIRS", "LRU", "Sieve", "TinyLFU", "TwoQ",
-    "EMPTY", "Policy", "Request", "StepInfo", "step_info",
+    "EMPTY", "Policy", "Request", "StepInfo", "step_info", "rank_step",
     "POLICIES", "ALIASES", "make_policy",
     "Engine", "Metrics", "ReplayResult", "miss_ratio", "mrr",
 ]

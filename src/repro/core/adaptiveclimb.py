@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .policy import EMPTY, Policy, Request, find, promote, step_info
+from .policy import EMPTY, Policy, Request, rank_step, step_info
 
 
 class AdaptiveClimb(Policy):
@@ -30,23 +30,21 @@ class AdaptiveClimb(Policy):
         }
 
     def step(self, state, req: Request):
-        key = req.key
-        cache, jump = state["cache"], state["jump"]
-        K = cache.shape[0]
-        hit, i = find(cache, key)
+        K = state["cache"].shape[0]
 
-        # --- hit path ----------------------------------------------------
-        jump_h = jnp.maximum(jump - 1, 1)
-        t_h = jnp.maximum(i - jump_h, 0)
-        cache_h = promote(cache, i, t_h, key)
+        def plan(hit, i, scalars):
+            (jump,) = scalars
+            # --- hit path ---------------------------------------------
+            jump_h = jnp.maximum(jump - 1, 1)
+            t_h = jnp.maximum(i - jump_h, 0)
+            # --- miss path: evict rank K-1, insert at K - jump --------
+            jump_m = jnp.minimum(jump + 1, K)
+            t_m = (K - jump_m).astype(jnp.int32)
+            src = jnp.where(hit, i, jnp.int32(K - 1))
+            t = jnp.where(hit, t_h, t_m)
+            return src, t, jnp.int32(K), (jnp.where(hit, jump_h, jump_m),)
 
-        # --- miss path ---------------------------------------------------
-        jump_m = jnp.minimum(jump + 1, K)
-        t_m = (K - jump_m).astype(jnp.int32)
-        cache_m = promote(cache, jnp.int32(K - 1), t_m, key)
-
-        new_state = {
-            "cache": jnp.where(hit, cache_h, cache_m),
-            "jump": jnp.where(hit, jump_h, jump_m),
-        }
-        return new_state, step_info(hit, req, evicted_key=cache[K - 1])
+        cache, (jump,), hit, evicted = rank_step(
+            state["cache"], req.key, (state["jump"],), plan)
+        return {"cache": cache, "jump": jump}, \
+            step_info(hit, req, evicted_key=evicted)

@@ -32,9 +32,17 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .policy import EMPTY, Policy, Request, find, promote, step_info
+from .policy import EMPTY, Policy, Request, find, rank_step, step_info
 
 INF32 = jnp.int32(2**31 - 1)
+
+
+def _time_dtype():
+    """Dtype for monotonically increasing timestamps.  int32 wraps after
+    2^31 requests — a few minutes of a multi-billion-request stream replay
+    (``Engine.replay_stream``) — so widen to int64 whenever x64 is enabled;
+    CPU CI (x64 off) keeps the compact int32 layout."""
+    return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
 
 
 def _first_empty(keys):
@@ -69,10 +77,11 @@ class LRU(Policy):
     name = "lru"
 
     def init(self, K: int) -> dict:
+        dt = _time_dtype()
         return {
             "keys": jnp.full((K,), EMPTY, jnp.int32),
-            "last": jnp.full((K,), -1, jnp.int32),
-            "t": jnp.int32(0),
+            "last": jnp.full((K,), -1, dt),
+            "t": jnp.zeros((), dt),
         }
 
     def step(self, state, req: Request):
@@ -125,15 +134,17 @@ class Climb(Policy):
         return {"cache": jnp.full((K,), EMPTY, jnp.int32)}
 
     def step(self, state, req: Request):
-        key = req.key
-        cache = state["cache"]
-        K = cache.shape[0]
-        hit, i = find(cache, key)
-        t_h = jnp.maximum(i - 1, 0)
-        cache_h = promote(cache, i, t_h, key)
-        cache_m = cache.at[K - 1].set(key)
-        return {"cache": jnp.where(hit, cache_h, cache_m)}, \
-            step_info(hit, req, evicted_key=cache[K - 1])
+        K = state["cache"].shape[0]
+
+        def plan(hit, i, scalars):
+            # hit: swap one rank up; miss: replace the bottom in place
+            # (src == t == K-1 inserts without shifting anything)
+            src = jnp.where(hit, i, jnp.int32(K - 1))
+            t = jnp.where(hit, jnp.maximum(i - 1, 0), jnp.int32(K - 1))
+            return src, t, jnp.int32(K), ()
+
+        cache, _, hit, evicted = rank_step(state["cache"], req.key, (), plan)
+        return {"cache": cache}, step_info(hit, req, evicted_key=evicted)
 
 
 class LFU(Policy):

@@ -39,7 +39,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .policy import EMPTY, Policy, Request, find, promote, step_info
+from .policy import EMPTY, Policy, Request, rank_step, step_info
 
 
 class DynamicAdaptiveClimb(Policy):
@@ -63,59 +63,66 @@ class DynamicAdaptiveClimb(Policy):
         return {"k": state["k"], "jump": state["jump"]}
 
     def step(self, state, req: Request):
-        key = req.key
-        cache, jump, jump2, k = (
-            state["cache"], state["jump"], state["jump2"], state["k"])
-        K_max = cache.shape[0]
-        half = k // 2
-        hit, i = find(cache, key)
+        K_max = state["cache"].shape[0]
+        eps, k_min = self.eps, self.k_min
 
-        # --- hit path ------------------------------------------------------
-        jump_h = jnp.where(jump > -half, jump - 1, jump)
-        top_half = i < half
-        jump2_h = jnp.where(
-            top_half,
-            jnp.where(jump2 > -half, jump2 - 1, jump2),
-            jnp.where(jump2 < 0, jump2 + 1, jump2),
-        )
-        actual_h = jnp.maximum(1, jnp.minimum(jump_h, i))
-        t_h = i - actual_h
-        cache_h = jnp.where(i > 0, promote(cache, i, t_h, key), cache)
+        def plan(hit, i, scalars):
+            jump, jump2, k = scalars
+            half = k // 2
 
-        # --- miss path -----------------------------------------------------
-        jump_m = jnp.minimum(jump + 1, 2 * k)
-        jump2_m = jnp.where(jump2 < 0, jump2 + 1, jump2)
-        actual_m = jnp.maximum(1, jnp.minimum(k - 1, jump_m))
-        t_m = k - actual_m
-        cache_m = promote(cache, k - 1, t_m, key)
-        # replacement victim (EMPTY while filling); entries wiped by a shrink
-        # below are a resize side-effect, not a per-request eviction event
-        evicted = cache[k - 1]
+            # --- hit path ----------------------------------------------
+            jump_h = jnp.where(jump > -half, jump - 1, jump)
+            top_half = i < half
+            jump2_h = jnp.where(
+                top_half,
+                jnp.where(jump2 > -half, jump2 - 1, jump2),
+                jnp.where(jump2 < 0, jump2 + 1, jump2),
+            )
+            actual_h = jnp.maximum(1, jnp.minimum(jump_h, i))
+            # i == 0: no promotion (src = t = 0 is the identity shift)
+            t_h = jnp.where(i > 0, i - actual_h, 0)
 
-        cache = jnp.where(hit, cache_h, cache_m)
-        jump = jnp.where(hit, jump_h, jump_m)
-        jump2 = jnp.where(hit, jump2_h, jump2_m)
+            # --- miss path: evict rank k-1, insert at k - actual -------
+            jump_m = jnp.minimum(jump + 1, 2 * k)
+            jump2_m = jnp.where(jump2 < 0, jump2 + 1, jump2)
+            actual_m = jnp.maximum(1, jnp.minimum(k - 1, jump_m))
+            t_m = k - actual_m
 
-        # --- resize checks (after every request) ----------------------------
-        jump2 = jnp.where(jump == 0, 0, jump2)
-        shrink_thresh = -jnp.ceil(self.eps * half.astype(jnp.float32)).astype(jnp.int32)
-        grow = (jump >= 2 * k) & (2 * k <= K_max)
-        shrink = (~grow) & (jump <= -half) & (jump2 <= shrink_thresh) & (half >= self.k_min)
+            # replacement victim rank (EMPTY while filling); entries wiped
+            # by a shrink below are a resize side-effect, not a per-request
+            # eviction event
+            src = jnp.where(hit, i, k - 1)
+            t = jnp.where(hit, t_h, t_m)
+            jump = jnp.where(hit, jump_h, jump_m)
+            jump2 = jnp.where(hit, jump2_h, jump2_m)
 
-        k_new = jnp.where(grow, 2 * k, jnp.where(shrink, half, k))
-        # wipe deactivated ranks on shrink
-        r = jnp.arange(K_max, dtype=jnp.int32)
-        cache = jnp.where(shrink & (r >= k_new), EMPTY, cache)
-        # Post-resize control state: after a grow, jump == 2k_old == k_new,
-        # which is exactly Alg. 2's init condition (jump = K) — keep it.
-        # After a shrink, jump is reset to 0 (neutral): leaving it pinned at
-        # the new -k/2 would instantly re-arm the halving trigger and cascade
-        # the cache to k_min.  jump' restarts its observation window on any
-        # resize.  (The paper does not specify post-resize state; these are
-        # the choices that keep the control law well-posed.)
-        resized = grow | shrink
-        jump = jnp.where(shrink, 0, jnp.clip(jump, -(k_new // 2), 2 * k_new))
-        jump2 = jnp.where(resized, 0, jump2)
+            # --- resize checks (after every request) -------------------
+            jump2 = jnp.where(jump == 0, 0, jump2)
+            shrink_thresh = -jnp.ceil(
+                eps * half.astype(jnp.float32)).astype(jnp.int32)
+            grow = (jump >= 2 * k) & (2 * k <= K_max)
+            shrink = ((~grow) & (jump <= -half) & (jump2 <= shrink_thresh)
+                      & (half >= k_min))
 
-        new_state = {"cache": cache, "jump": jump, "jump2": jump2, "k": k_new}
+            k_new = jnp.where(grow, 2 * k, jnp.where(shrink, half, k))
+            # deactivated ranks are wiped in the same fused pass
+            wipe_from = jnp.where(shrink, k_new, jnp.int32(K_max))
+            # Post-resize control state: after a grow, jump == 2k_old ==
+            # k_new, which is exactly Alg. 2's init condition (jump = K) —
+            # keep it.  After a shrink, jump is reset to 0 (neutral):
+            # leaving it pinned at the new -k/2 would instantly re-arm the
+            # halving trigger and cascade the cache to k_min.  jump'
+            # restarts its observation window on any resize.  (The paper
+            # does not specify post-resize state; these are the choices
+            # that keep the control law well-posed.)
+            resized = grow | shrink
+            jump = jnp.where(shrink, 0,
+                             jnp.clip(jump, -(k_new // 2), 2 * k_new))
+            jump2 = jnp.where(resized, 0, jump2)
+            return src, t, wipe_from, (jump, jump2, k_new)
+
+        cache, (jump, jump2, k), hit, evicted = rank_step(
+            state["cache"], req.key,
+            (state["jump"], state["jump2"], state["k"]), plan)
+        new_state = {"cache": cache, "jump": jump, "jump2": jump2, "k": k}
         return new_state, step_info(hit, req, evicted_key=evicted)

@@ -25,6 +25,8 @@ the size/cost charged on a miss.
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 from typing import NamedTuple
 
 import jax
@@ -141,3 +143,59 @@ def demote(cache: jax.Array, i: jax.Array, t: jax.Array, key: jax.Array):
     r = jnp.arange(cache.shape[0], dtype=jnp.int32)
     rolled = jnp.roll(cache, -1)  # rolled[r] = cache[r+1]
     return jnp.where(r == t, key, jnp.where((r >= i) & (r < t), rolled, cache))
+
+
+# ---------------------------------------------------------------------------
+# fused rank step: find + plan + promote in one pass
+# ---------------------------------------------------------------------------
+
+_PALLAS_STEP = contextvars.ContextVar("repro_use_pallas_step", default=False)
+
+
+@contextlib.contextmanager
+def pallas_mode(on: bool):
+    """Trace-time switch: inside this context, :func:`rank_step` lowers to
+    the fused Pallas kernel (``repro.kernels.policy_step``) instead of the
+    pure-jnp ``find``/``promote`` pair.
+
+    Engine-internal: the Engine sets it around tracing and threads the flag
+    through its jit static args so both lowerings coexist in the cache.
+    Wrapping an already-jitted function in this context does NOT retrace it
+    — use ``Engine(use_pallas=...)`` / ``replay(..., use_pallas=...)``,
+    which is the supported switch."""
+    tok = _PALLAS_STEP.set(bool(on))
+    try:
+        yield
+    finally:
+        _PALLAS_STEP.reset(tok)
+
+
+def rank_step(cache: jax.Array, key: jax.Array, scalars: tuple, plan):
+    """One fused step of a rank-array policy.
+
+    ``plan(hit, i, scalars) -> (src, t, wipe_from, new_scalars)`` is the
+    policy's O(1) control law: given the find result it picks the shift
+    source rank ``src`` (the eviction rank on a miss), the insertion rank
+    ``t`` (``t <= src``), a deactivation boundary ``wipe_from`` (ranks >=
+    ``wipe_from`` are cleared to ``EMPTY``; pass ``K`` for none), and the
+    updated control scalars (int32 each).
+
+    Returns ``(new_cache, new_scalars, hit, evicted)``; ``evicted`` is the
+    pre-update occupant of rank ``src`` — callers mask it with
+    :func:`step_info` (hits never evict).
+
+    This is the single entrypoint behind which ``find`` + ``promote`` fuse:
+    under :func:`pallas_mode` the whole step — compare, iota-min reduce,
+    scalar plan, rolled masked-select shift, wipe — is one Pallas kernel
+    (one pass over the rank row in VMEM, interpret-mode on CPU).
+    """
+    if _PALLAS_STEP.get():
+        from ..kernels.policy_step import fused_policy_step
+        return fused_policy_step(cache, key, scalars, plan)
+    hit, i = find(cache, key)
+    src, t, wipe_from, new_scalars = plan(hit, i, scalars)
+    evicted = cache[src]
+    new_cache = promote(cache, src, t, key)
+    r = jnp.arange(cache.shape[0], dtype=jnp.int32)
+    new_cache = jnp.where(r >= wipe_from, EMPTY, new_cache)
+    return new_cache, new_scalars, hit, evicted

@@ -16,9 +16,25 @@ to collect per-step policy observables (e.g. DAC's ``k``/``jump``).  Hit,
 byte-miss and penalty totals are reduced *inside* the jitted program (per
 lane, under vmap/SPMD) — callers read ratios off the result instead of
 recomputing them post-hoc from hit masks.
+
+Two scale paths (the paper's Tables IV/V throughput regime):
+
+* ``replay(..., collect_info=False)`` reduces :class:`Metrics` inside the
+  scan carry — the jitted program allocates NO ``[T]``-shaped ``StepInfo``
+  output, only O(1) totals per lane (``result.info is None``).
+* ``replay_stream(...)`` scans arbitrarily long traces in fixed-size
+  chunks, donating the policy-state and accumulator buffers between chunks
+  and summing per-chunk totals on the host in 64-bit — multi-billion-
+  request streams never materialize on device and never wrap int32.
+
+``use_pallas=True`` (an ``Engine`` or per-call switch) lowers the rank-
+policy hot path (find + promote) through the fused Pallas policy-step
+kernel (``repro.kernels.policy_step``) instead of plain jnp; off-TPU the
+kernel runs under the Pallas interpreter, bit-identical to the jnp path.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Any, NamedTuple
 
@@ -27,16 +43,24 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from .policy import Policy, Request, StepInfo
+from .policy import Policy, Request, StepInfo, pallas_mode
+
+
+def _count_dtype():
+    """Dtype for request/hit counters: int32 wraps at 2.1e9 requests, so
+    widen to int64 whenever x64 is enabled (CPU CI keeps int32; the
+    streaming path additionally accumulates on the host in 64-bit)."""
+    return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
 
 
 class Metrics(NamedTuple):
     """Per-lane replay totals, reduced inside the jitted replay program.
-    Byte/cost totals accumulate in float32 (object sizes in bytes overflow
-    int32 over long traces)."""
+    ``requests``/``hits`` widen to int64 under x64 (multi-billion-request
+    streams wrap int32); byte/cost totals accumulate in float32 (object
+    sizes in bytes overflow int32 over long traces)."""
 
-    requests: jax.Array      # int32  — trace length
-    hits: jax.Array          # int32
+    requests: jax.Array      # int32/int64 — trace length
+    hits: jax.Array          # int32/int64
     bytes_total: jax.Array   # float32 — sum of request sizes
     bytes_missed: jax.Array  # float32 — sum of sizes over misses
     cost_total: jax.Array    # float32 — sum of request costs
@@ -44,16 +68,21 @@ class Metrics(NamedTuple):
 
 
 class ReplayResult(NamedTuple):
-    """Engine output: per-step ``StepInfo`` (leading dims match the input),
-    per-lane ``Metrics``, and optional stacked observables."""
+    """Engine output: per-step ``StepInfo`` (leading dims match the input;
+    ``None`` in metrics-only mode), per-lane ``Metrics``, and optional
+    stacked observables."""
 
-    info: StepInfo
+    info: StepInfo | None
     metrics: Metrics
     obs: Any
 
     # -- conveniences (host-side; float for one lane, ndarray for a batch) --
     @property
     def hits(self):
+        if self.info is None:
+            raise ValueError(
+                "per-step info was not collected (collect_info=False / "
+                "replay_stream); read totals off result.metrics instead")
         return self.info.hit
 
     @property
@@ -88,63 +117,143 @@ def _ratio(num, den):
     return float(out) if out.ndim == 0 else out
 
 
-def _scan_replay(policy: Policy, reqs: Request, K: int,
-                 observe: bool) -> ReplayResult:
-    state = policy.init(K)
+def _zero_acc():
+    return Metrics(
+        requests=jnp.zeros((), _count_dtype()),
+        hits=jnp.zeros((), _count_dtype()),
+        bytes_total=jnp.zeros((), jnp.float32),
+        bytes_missed=jnp.zeros((), jnp.float32),
+        cost_total=jnp.zeros((), jnp.float32),
+        penalty=jnp.zeros((), jnp.float32),
+    )
+
+
+def _acc_step(acc: Metrics, req: Request, info: StepInfo) -> Metrics:
+    """Fold one request's StepInfo into the running totals (scan carry)."""
+    return Metrics(
+        requests=acc.requests + 1,
+        hits=acc.hits + info.hit.astype(_count_dtype()),
+        bytes_total=acc.bytes_total + req.size.astype(jnp.float32),
+        bytes_missed=acc.bytes_missed + info.bytes_missed.astype(jnp.float32),
+        cost_total=acc.cost_total + req.cost,
+        penalty=acc.penalty + info.penalty,
+    )
+
+
+def _scan_replay(policy: Policy, reqs: Request, K: int, observe: bool,
+                 collect_info: bool = True,
+                 state: Any = None) -> tuple[ReplayResult, Any]:
+    """Scan one lane; returns (result, final_state).  With
+    ``collect_info=False`` the metrics ride in the scan carry and no
+    ``[T]``-shaped StepInfo is ever stacked."""
+    if state is None:
+        state = policy.init(K)
     want_obs = observe and hasattr(policy, "observables")
 
-    def body(st, req):
+    if collect_info:
+        def body(st, req):
+            st, info = policy.step(st, req)
+            obs = policy.observables(st) if want_obs else None
+            return st, (info, obs)
+
+        state, (info, obs) = jax.lax.scan(body, state, reqs)
+        metrics = Metrics(
+            requests=jnp.asarray(reqs.key.shape[0], _count_dtype()),
+            hits=jnp.sum(info.hit, dtype=_count_dtype()),
+            bytes_total=jnp.sum(reqs.size.astype(jnp.float32)),
+            bytes_missed=jnp.sum(info.bytes_missed.astype(jnp.float32)),
+            cost_total=jnp.sum(reqs.cost),
+            penalty=jnp.sum(info.penalty),
+        )
+        return ReplayResult(info=info, metrics=metrics, obs=obs), state
+
+    def body(carry, req):
+        st, acc = carry
         st, info = policy.step(st, req)
         obs = policy.observables(st) if want_obs else None
-        return st, (info, obs)
+        return (st, _acc_step(acc, req, info)), obs
 
-    _, (info, obs) = jax.lax.scan(body, state, reqs)
-    metrics = Metrics(
-        requests=jnp.int32(reqs.key.shape[0]),
-        hits=jnp.sum(info.hit, dtype=jnp.int32),
-        bytes_total=jnp.sum(reqs.size.astype(jnp.float32)),
-        bytes_missed=jnp.sum(info.bytes_missed.astype(jnp.float32)),
-        cost_total=jnp.sum(reqs.cost),
-        penalty=jnp.sum(info.penalty),
-    )
-    return ReplayResult(info=info, metrics=metrics, obs=obs)
+    (state, acc), obs = jax.lax.scan(body, (state, _zero_acc()), reqs)
+    return ReplayResult(info=None, metrics=acc, obs=obs), state
 
 
-@partial(jax.jit, static_argnames=("policy", "K", "observe"))
-def _replay_single(policy, reqs, K, observe):
-    return _scan_replay(policy, reqs, K, observe)
+@partial(jax.jit,
+         static_argnames=("policy", "K", "observe", "collect_info",
+                          "use_pallas"))
+def _replay_single(policy, reqs, K, observe, collect_info, use_pallas):
+    with pallas_mode(use_pallas):
+        return _scan_replay(policy, reqs, K, observe, collect_info)[0]
 
 
-@partial(jax.jit, static_argnames=("policy", "K", "observe"))
-def _replay_batched(policy, reqs, K, observe):
-    return jax.vmap(lambda r: _scan_replay(policy, r, K, observe))(reqs)
+@partial(jax.jit,
+         static_argnames=("policy", "K", "observe", "collect_info",
+                          "use_pallas"))
+def _replay_batched(policy, reqs, K, observe, collect_info, use_pallas):
+    with pallas_mode(use_pallas):
+        return jax.vmap(
+            lambda r: _scan_replay(policy, r, K, observe, collect_info)[0]
+        )(reqs)
+
+
+@partial(jax.jit, static_argnames=("policy", "use_pallas"),
+         donate_argnums=(1,))
+def _replay_chunk(policy, state, reqs, use_pallas):
+    """One streaming chunk: advance donated policy state, return per-chunk
+    totals.  Handles [T] and [B, T] chunks (state batched alike)."""
+    with pallas_mode(use_pallas):
+        def one(st, r):
+            res, st = _scan_replay(policy, r, K=0, observe=False,
+                                   collect_info=False, state=st)
+            return st, res.metrics
+
+        if reqs.key.ndim == 2:
+            return jax.vmap(one)(state, reqs)
+        return one(state, reqs)
 
 
 class Engine:
     """The single replay entrypoint: scans one trace, vmaps a ``[B, T]``
     batch, and — given a mesh — shards the batch axis SPMD (each device
     replays B/axis_size independent caches, the TPU-native version of the
-    paper's multi-threaded trace replay, Tables IV/V)."""
+    paper's multi-threaded trace replay, Tables IV/V).
 
-    def __init__(self, mesh=None, axis: str = "data"):
+    ``use_pallas`` routes the rank-policy hot path through the fused Pallas
+    policy-step kernel (overridable per call); slot-based policies are
+    unaffected by the flag.
+    """
+
+    def __init__(self, mesh=None, axis: str = "data",
+                 use_pallas: bool = False):
         self.mesh = mesh
         self.axis = axis
+        self.use_pallas = use_pallas
+
+    def _resolve(self, policy, use_pallas):
+        if isinstance(policy, str):
+            from . import make_policy
+            policy = make_policy(policy)
+        return policy, self.use_pallas if use_pallas is None else use_pallas
 
     def replay(self, policy, requests, K: int, *, sizes=None, costs=None,
-               mesh=None, axis=None, observe: bool = False) -> ReplayResult:
+               mesh=None, axis=None, observe: bool = False,
+               collect_info: bool = True,
+               use_pallas: bool | None = None) -> ReplayResult:
         """Replay ``requests`` through ``policy`` at capacity ``K``.
 
         ``policy`` may be a :class:`Policy` instance or a spec string for
         :func:`repro.core.make_policy` (e.g. ``"dac(eps=0.5)"``).
         ``requests``: a :class:`Request`, or bare keys (``sizes``/``costs``
         then broadcast per :meth:`Request.of`).
+
+        ``collect_info=False`` skips the ``[T]`` ``StepInfo`` stack and
+        reduces :class:`Metrics` inside the scan carry — ``result.info`` is
+        ``None`` and peak memory is O(K) per lane instead of O(T).
         """
-        if isinstance(policy, str):
-            from . import make_policy
-            policy = make_policy(policy)
+        policy, use_pallas = self._resolve(policy, use_pallas)
         reqs = Request.of(requests, sizes, costs)
         if reqs.key.ndim == 1:
-            return _replay_single(policy, reqs, K, observe)
+            return _replay_single(policy, reqs, K, observe, collect_info,
+                                  use_pallas)
         if reqs.key.ndim != 2:
             raise ValueError(
                 f"requests must be [T] or [B, T], got shape {reqs.key.shape}")
@@ -152,7 +261,78 @@ class Engine:
         if mesh is not None:
             sharding = NamedSharding(mesh, P(axis or self.axis, None))
             reqs = jax.device_put(reqs, sharding)
-        return _replay_batched(policy, reqs, K, observe)
+        return _replay_batched(policy, reqs, K, observe, collect_info,
+                               use_pallas)
+
+    def replay_stream(self, policy, requests, K: int, *, sizes=None,
+                      costs=None, chunk: int = 1 << 18,
+                      use_pallas: bool | None = None) -> ReplayResult:
+        """Metrics-only replay of an arbitrarily long trace in fixed-size
+        chunks.
+
+        ``requests`` stays on the host (numpy); each chunk is shipped to
+        the device, scanned with the metrics-in-carry body, and the policy
+        state + accumulator buffers are *donated* between chunks, so device
+        memory is O(K + chunk) regardless of trace length.  Per-chunk
+        totals are summed on the host in 64-bit, so multi-billion-request
+        streams cannot wrap int32 even without x64.  At most two programs
+        compile: the full-chunk shape and one remainder shape.
+
+        Supports ``[T]`` and ``[B, T]`` traces; per-request ``sizes`` /
+        ``costs`` may be scalars or arrays of the same shape.  Returns a
+        :class:`ReplayResult` with ``info=None`` and host-side metrics.
+
+        Unlike :meth:`replay`, streaming does not consult the engine's
+        ``mesh`` — chunks run unsharded on the default device; for
+        mesh-sharded batch replay use ``replay(..., mesh=...)``.
+        """
+        if chunk <= 0:
+            raise ValueError(f"chunk must be positive, got {chunk}")
+        policy, use_pallas = self._resolve(policy, use_pallas)
+        if isinstance(requests, Request):
+            if sizes is not None or costs is not None:
+                raise ValueError("pass sizes/costs inside the Request")
+            keys = np.asarray(requests.key)
+            sizes, costs = np.asarray(requests.size), np.asarray(requests.cost)
+        else:
+            keys = np.asarray(requests)
+        if keys.ndim not in (1, 2):
+            raise ValueError(
+                f"requests must be [T] or [B, T], got shape {keys.shape}")
+        batched = keys.ndim == 2
+        T = keys.shape[-1]
+
+        def sl(x, lo, hi):
+            if x is None or np.ndim(x) == 0:
+                return x
+            return np.asarray(x)[..., lo:hi]
+
+        state = policy.init(K)
+        if batched:
+            B = keys.shape[0]
+            state = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (B,) + x.shape).copy(), state)
+
+        totals = np.zeros(
+            (6,) + ((B,) if batched else ()), dtype=np.float64)
+        with warnings.catch_warnings():
+            # buffer donation is a no-op on some backends (CPU) — harmless
+            warnings.filterwarnings(
+                "ignore", message=".*[Dd]onat.*", category=UserWarning)
+            for lo in range(0, T, chunk):
+                hi = min(lo + chunk, T)
+                reqs = Request.of(keys[..., lo:hi], sl(sizes, lo, hi),
+                                  sl(costs, lo, hi))
+                state, m = _replay_chunk(policy, state, reqs, use_pallas)
+                totals += np.stack(
+                    [np.asarray(f, dtype=np.float64) for f in m])
+        metrics = Metrics(
+            requests=totals[0].astype(np.int64),
+            hits=totals[1].astype(np.int64),
+            bytes_total=totals[2], bytes_missed=totals[3],
+            cost_total=totals[4], penalty=totals[5],
+        )
+        return ReplayResult(info=None, metrics=metrics, obs=None)
 
 
 # ---------------------------------------------------------------------------

@@ -11,7 +11,7 @@ from __future__ import annotations
 import numpy as np
 
 __all__ = [
-    "zipf_trace", "shifting_zipf_trace", "scan_mix_trace",
+    "zipf_trace", "shifting_zipf_trace", "scan_mix_trace", "churn_trace",
     "dataset_family", "DATASET_FAMILIES", "object_sizes", "fetch_costs",
 ]
 
@@ -54,17 +54,19 @@ def scan_mix_trace(N: int, T: int, alpha: float, scan_frac: float,
 
     Scans are the classic LRU-killer (they flush the cache with
     never-reused objects); CDN / block-storage traces contain many.
-    Scan keys live in a disjoint id range [N, 2N).
+    Scan keys live in a disjoint id range [N, 2N): a scan run that would
+    pass 2N-1 wraps around *within* the cold range (modulo N on the
+    offset), never back into the hot Zipf range [0, N).
     """
     rng = np.random.default_rng(seed)
     out = zipf_trace(N, T, alpha, seed=seed + 1).astype(np.int64)
     n_scans = max(1, int(T * scan_frac / scan_len))
     for s in range(n_scans):
         start = rng.integers(0, max(1, T - scan_len))
-        base = N + rng.integers(0, N)
-        out[start:start + scan_len] = base + np.arange(
-            min(scan_len, T - start))
-    return (out % (2 * N)).astype(np.int32)
+        base = rng.integers(0, N)
+        length = min(scan_len, T - start)
+        out[start:start + length] = N + (base + np.arange(length)) % N
+    return out.astype(np.int32)
 
 
 def _phase_sizes(rng, T, mean_phase):

@@ -6,10 +6,15 @@
                        hit-signal (per-slot attention mass) extraction
   * cache_update     — batched AdaptiveClimb policy step (the op the paper
                        itemizes in its instructions/request analysis)
+  * policy_step      — fused rank-policy step (find + plan + promote in one
+                       pass over the rank row); serves every rank policy via
+                       a traced-in control-law callback and backs the
+                       engine's ``use_pallas`` replay path
 
-Each has a pure-jnp oracle in ref.py; ops.py exposes jit'd wrappers that run
-under the Pallas interpreter on CPU and Mosaic on TPU.
+Each has a pure-jnp oracle (ref.py, or core.policy.rank_step for
+policy_step); ops.py exposes jit'd wrappers that run under the Pallas
+interpreter on CPU and Mosaic on TPU.
 """
-from . import ops, ref
+from . import ops, policy_step, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["ops", "policy_step", "ref"]

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: fused rank-policy step (find + plan + promote).
+
+Every rank-based policy in this repo (CLIMB, AdaptiveClimb,
+DynamicAdaptiveClimb) has the same per-request shape:
+
+  1. ``find``     — locate the requested key in the rank row (``[K]`` int32,
+                    index 0 = top of the cache);
+  2. ``plan``     — O(1) scalar control arithmetic (jump updates, resize
+                    checks) deciding the shift source/target ranks;
+  3. ``promote``  — masked-select shift of ranks ``(t, src]`` against a
+                    lane-rolled copy, inserting the key at rank ``t``.
+
+The pure-jnp path materializes the rank row once per primitive; this kernel
+fuses all three into ONE pass over the row held in VMEM: the compare /
+iota-min reduction (find), the plan's scalar updates (SMEM), the rolled
+masked select and the deactivation wipe (DynamicAdaptiveClimb's shrink) all
+happen before the row is written back.  ``plan`` is an arbitrary traceable
+callback, so the same kernel serves every rank policy — the policy's control
+law is traced *into* the kernel body.
+
+Contract (see :func:`repro.core.policy.rank_step` for the jnp oracle)::
+
+    plan(hit, i, scalars) -> (src, t, wipe_from, new_scalars)
+
+      hit        scalar bool  — key resident?
+      i          scalar int32 — rank of the key (0 when miss, like argmax)
+      scalars    tuple of int32 scalars (policy control state)
+      src        shift source rank (eviction rank on a miss; t <= src)
+      t          insertion rank for the requested key
+      wipe_from  ranks >= wipe_from are cleared to EMPTY (pass K for none)
+
+Returns ``(new_cache, new_scalars, hit, evicted)`` where ``evicted`` is the
+pre-update occupant of rank ``src`` (the key shifted off the row on a miss).
+
+``interpret=True`` (the default off-TPU) runs the body under the Pallas
+interpreter, so CPU CI exercises the exact kernel code path.  On real TPUs
+K should be padded to a lane multiple (128) for Mosaic-friendly layouts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(cache_ref, key_ref, sc_ref, out_cache_ref, out_sc_ref, hit_ref,
+            ev_ref, *, plan, n_scalars: int, K: int):
+    cache = cache_ref[...]                       # [1, K] int32 in VMEM
+    key = key_ref[0]
+    scalars = tuple(sc_ref[j] for j in range(n_scalars))
+
+    # --- find: one compare + iota-min reduction -------------------------
+    r = jax.lax.broadcasted_iota(jnp.int32, (1, K), 1)
+    eq = cache == key
+    hit = jnp.any(eq)
+    i = jnp.min(jnp.where(eq, r, K)).astype(jnp.int32)
+    i = jnp.where(hit, i, 0)                     # match find()'s argmax=0
+
+    # --- plan: policy control law, traced into the kernel ---------------
+    src, t, wipe_from, new_scalars = plan(hit, i, scalars)
+
+    # --- promote + wipe: rolled masked select, still in registers -------
+    evicted = jnp.sum(jnp.where(r == src, cache, 0))  # exactly one lane
+    rolled = jnp.concatenate([cache[:, -1:], cache[:, :-1]], axis=1)
+    new_cache = jnp.where(
+        r == t, key, jnp.where((r > t) & (r <= src), rolled, cache))
+    # EMPTY (-1) is created inline: a closure-captured device constant
+    # would be rejected by the kernel tracer
+    new_cache = jnp.where(r >= wipe_from, jnp.int32(-1), new_cache)
+
+    out_cache_ref[...] = new_cache
+    for j, s in enumerate(new_scalars):
+        out_sc_ref[j] = s
+    hit_ref[0] = hit.astype(jnp.int32)
+    ev_ref[0] = evicted
+
+
+def fused_policy_step(cache, key, scalars, plan, *, interpret=None):
+    """One fused rank-policy step.
+
+    cache: [K] int32 rank row; key: scalar int32; scalars: tuple of int32
+    control scalars.  Batches transparently under ``vmap`` (the pallas_call
+    batching rule adds a grid dimension) and scans under ``lax.scan``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    K = cache.shape[0]
+    n = len(scalars)
+    sc = (jnp.stack([jnp.asarray(s, jnp.int32) for s in scalars])
+          if n else jnp.zeros((1,), jnp.int32))
+    kernel = functools.partial(_kernel, plan=plan, n_scalars=n, K=K)
+    new_cache, new_sc, hit, ev = pl.pallas_call(
+        kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((1, K), jnp.int32),
+            jax.ShapeDtypeStruct((max(n, 1),), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cache[None, :], key[None], sc)
+    return (new_cache[0], tuple(new_sc[j] for j in range(n)),
+            hit[0].astype(bool), ev[0])

@@ -189,6 +189,39 @@ def test_make_policy_errors():
         make_policy("lru(3)")  # positional args not allowed
 
 
+@pytest.mark.parametrize("name", sorted(POLICIES))
+def test_make_policy_roundtrip_every_registry_entry(name):
+    """Spec round-trip: serializing a policy's constructor state back into
+    a spec string reproduces an equal policy (same class, same params)."""
+    pol = POLICIES[name]()
+    if pol.__dict__:
+        args = ",".join(f"{k}={v}" for k, v in sorted(pol.__dict__.items()))
+        spec = f"{name}({args})"
+    else:
+        spec = name
+    pol2 = make_policy(spec)
+    assert type(pol2) is type(pol)
+    assert pol2 == pol and hash(pol2) == hash(pol)
+
+
+def test_make_policy_coerces_numeric_types_to_signature():
+    """Integer knobs accept "4" and "4.0" identically; float knobs accept
+    ints — the parsed value always lands with the declared type."""
+    a = make_policy("dac(growth=4)")
+    b = make_policy("dac(growth=4.0)")
+    assert a == b
+    assert isinstance(b.growth, int) and b.growth == 4
+    c = make_policy("dac(eps=1)")
+    assert isinstance(c.eps, float) and c.eps == 1.0
+    d = make_policy("lirs(ghost_factor=3.0, hir_frac=1)")
+    assert isinstance(d.ghost_factor, int) and d.ghost_factor == 3
+    assert isinstance(d.hir_frac, float) and d.hir_frac == 1.0
+    with pytest.raises(ValueError, match="integer"):
+        make_policy("dac(growth=4.5)")
+    with pytest.raises(ValueError, match="unknown parameter"):
+        make_policy("dac(jump=3)")
+
+
 # --- mrr guards (satellite: explicit both-zero branch) -----------------------
 
 def test_mrr_both_zero_is_zero():

@@ -1,0 +1,79 @@
+"""Trace-generator regressions: scan/Zipf key-range disjointness (the
+scan_mix_trace wraparound bug aliased "cold" scan keys back into the hot
+Zipf range) and the public surface of the traces module."""
+import numpy as np
+import pytest
+
+from repro.data import traces
+from repro.data.traces import (DATASET_FAMILIES, churn_trace, dataset_family,
+                               scan_mix_trace, zipf_trace)
+
+SCAN_FAMILIES = {name: cfg for name, cfg in DATASET_FAMILIES.items()
+                 if cfg["kind"] == "scan"}
+
+
+def _split_ranges(N, T, alpha, scan_frac, scan_len, seed):
+    """Return (zipf_keys, scan_keys) of one scan_mix_trace: positions that
+    differ from the underlying Zipf draw were overwritten by a scan."""
+    out = scan_mix_trace(N, T, alpha, scan_frac, scan_len, seed=seed)
+    base = zipf_trace(N, T, alpha, seed=seed + 1)
+    scan_pos = out != base
+    return out[~scan_pos], out[scan_pos]
+
+
+@pytest.mark.parametrize("name", sorted(SCAN_FAMILIES))
+@pytest.mark.parametrize("seed", [0, 1, 7])
+def test_scan_mix_family_ranges_disjoint(name, seed):
+    """Regression for the wraparound bug: for every scan-family parameter
+    set used by DATASET_FAMILIES, scan keys stay in [N, 2N) and Zipf keys
+    in [0, N) — the id ranges never alias."""
+    cfg = dict(SCAN_FAMILIES[name])
+    cfg.pop("kind")
+    N = cfg["N"]
+    zipf_keys, scan_keys = _split_ranges(T=50_000, seed=seed, **cfg)
+    assert zipf_keys.min() >= 0 and zipf_keys.max() < N
+    assert scan_keys.size > 0
+    assert scan_keys.min() >= N, \
+        f"scan keys aliased into the hot range: min={scan_keys.min()}"
+    assert scan_keys.max() < 2 * N
+
+
+def test_scan_mix_wraps_within_cold_range():
+    """Adversarial shape: scan_len close to N makes nearly every scan run
+    cross the 2N-1 boundary; with the old `% 2N` wraparound these keys
+    landed in [0, N)."""
+    N, T = 64, 20_000
+    zipf_keys, scan_keys = _split_ranges(N=N, T=T, alpha=1.0, scan_frac=0.5,
+                                         scan_len=48, seed=3)
+    assert scan_keys.size > 0
+    assert scan_keys.min() >= N and scan_keys.max() < 2 * N
+    # the wrap keeps scans sequential *within* the cold range: every run
+    # still touches scan_len distinct cold keys
+    assert len(np.unique(scan_keys)) <= N
+
+
+def test_scan_mix_deterministic_and_int32():
+    a = scan_mix_trace(128, 5000, 1.0, 0.2, 64, seed=9)
+    b = scan_mix_trace(128, 5000, 1.0, 0.2, 64, seed=9)
+    np.testing.assert_array_equal(a, b)
+    assert a.dtype == np.int32
+
+
+def test_churn_trace_exported_and_reachable():
+    """churn_trace is used by dataset_family and documented in the module
+    header — it must be part of the public surface."""
+    assert "churn_trace" in traces.__all__
+    tr = churn_trace(N=256, T=5000, alpha=1.0, mean_phase=1000, drift=0.1,
+                     seed=0)
+    assert tr.shape == (5000,) and tr.dtype == np.int32
+    assert tr.min() >= 0 and tr.max() < 256
+
+
+@pytest.mark.parametrize("name", sorted(DATASET_FAMILIES))
+def test_dataset_family_key_ranges(name):
+    """Every family stays inside its documented id budget: [0, N) for
+    churn/zipfshift, [0, 2N) for scan mixes."""
+    cfg = DATASET_FAMILIES[name]
+    hi = 2 * cfg["N"] if cfg["kind"] == "scan" else cfg["N"]
+    tr = dataset_family(name, T=20_000, n_traces=2, seed=1)
+    assert tr.min() >= 0 and tr.max() < hi
