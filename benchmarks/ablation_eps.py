@@ -4,40 +4,56 @@ headroom vs miss ratio AND memory actually used.
 Quantifies the central §Repro finding: under stationary skew, Alg. 2
 trades miss ratio for memory (shrink fires whenever hits concentrate);
 eps tunes *how readily*, growth bounds how far it can expand under churn.
-Reported per config: miss ratio, average adapted size / nominal K.
+Reported per config: miss ratio, average adapted size / nominal K — the
+DAC variants are just policy spec strings on the sweep's policy axis.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import Engine, make_policy
-from repro.data.traces import shifting_zipf_trace, zipf_trace
-from .common import fmt_row, save
+from repro.bench import Scenario, Sweep, report, run_sweep
+
+EPS_GRID = (0.25, 0.5, 1.0)
+GROWTH_GRID = (1, 4)
+POLS = [f"dac(eps={e},growth={g})" for e in EPS_GRID for g in GROWTH_GRID]
+
+
+def sweep(N: int = 4096, T: int = 60_000, K: int = 256,
+          seed: int = 0) -> Sweep:
+    return Sweep(
+        "ablation_eps",
+        policies=tuple(POLS),
+        scenarios=(
+            Scenario("zipf(1.0)", trace=f"zipf(N={N},alpha=1.0)", T=T,
+                     K=(K,)),
+            Scenario("shifting", trace=f"shifting_zipf(N={N},alpha=1.1,"
+                     "phases=6)", T=T, K=(K,)),
+        ),
+        seeds=(seed,),
+        observe=True,
+    )
 
 
 def run(N: int = 4096, T: int = 60_000, K: int = 256, seed: int = 0,
         quiet: bool = False):
-    engine = Engine()
-    traces = {
-        "zipf(1.0)": zipf_trace(N, T, 1.0, seed=seed),
-        "shifting": shifting_zipf_trace(N, T, 1.1, phases=6, seed=seed),
-    }
+    res = run_sweep(sweep(N=N, T=T, K=K, seed=seed))
     rows = {}
-    for tname, trace in traces.items():
-        for eps in (0.25, 0.5, 1.0):
-            for growth in (1, 4):
-                pol = make_policy(f"dac(eps={eps},growth={growth})")
-                res = engine.replay(pol, trace, K, observe=True)
-                rows[f"{tname}|eps={eps}|growth={growth}"] = {
-                    "miss": res.miss_ratio,
-                    "avg_k_frac": float(np.asarray(res.obs["k"]).mean() / K),
-                }
+    for sc in res.sweep.scenarios:
+        for pol, e, g in ((f"dac(eps={e},growth={g})", e, g)
+                          for e in EPS_GRID for g in GROWTH_GRID):
+            rows[f"{sc.name}|eps={e}|growth={g}"] = {
+                "miss": float(np.mean(res.metric(
+                    "miss_ratio", policy=pol, scenario=sc.name))),
+                "avg_k_frac": float(np.mean(res.metric(
+                    "avg_k", policy=pol, scenario=sc.name)) / K),
+            }
     if not quiet:
-        print(fmt_row(["config", "miss", "avg_k/K"], [36, 10, 10]))
+        print(report.fmt_row(["config", "miss", "avg_k/K"], [36, 10, 10]))
         for k, v in rows.items():
-            print(fmt_row([k, f"{v['miss']:.3f}", f"{v['avg_k_frac']:.2f}"],
-                          [36, 10, 10]))
-    return save("ablation_eps", {"K": K, "T": T, "rows": rows})
+            print(report.fmt_row(
+                [k, f"{v['miss']:.3f}", f"{v['avg_k_frac']:.2f}"],
+                [36, 10, 10]))
+    return res.save(extras={"rows": rows})
 
 
 if __name__ == "__main__":

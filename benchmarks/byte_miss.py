@@ -1,11 +1,11 @@
 """Fig. 10: byte miss ratio at different cache sizes on a wiki-like trace
 (log-normal object sizes, shifting-Zipf popularity).
 
-The first real size- and cost-aware workload: requests carry per-object
-sizes (``repro.data.traces.object_sizes``) and a latency cost model
-(``fetch_costs``), and the byte-miss / penalty metrics come straight off
-``Engine.replay`` — the engine reduces them per lane inside the jitted
-program, nothing is recomputed post-hoc from hit masks.
+The size- and cost-aware workload as pure data: the scenario declares a
+``lognormal`` object-size model and a ``fetch`` latency-cost model next to
+its trace spec, and the byte-miss / penalty metrics come straight off the
+engine (reduced per lane inside the jitted program, nothing recomputed
+post-hoc from hit masks).
 
 DynamicAdaptiveClimb vs LRU vs ARC (the paper additionally compares LRB, a
 *learned* policy needing offline training — out of scope offline; noted).
@@ -14,39 +14,48 @@ same weighting by fetch latency.
 """
 from __future__ import annotations
 
-from repro.core import Engine, Request
-from repro.data.traces import fetch_costs, object_sizes, shifting_zipf_trace
-from .common import fmt_row, save
+import numpy as np
+
+from repro.bench import Scenario, Sweep, report, run_sweep
 
 POLS = ["lru", "arc", "dynamicadaptiveclimb"]
+FRACS = [0.01, 0.02, 0.05, 0.10, 0.20, 0.40]
+
+
+def sweep(N: int = 4096, T: int = 60_000, seed: int = 0) -> Sweep:
+    return Sweep(
+        "byte_miss",
+        policies=tuple(POLS),
+        scenarios=(Scenario(
+            "wiki_sized",
+            trace=f"shifting_zipf(N={N},alpha=0.9,phases=4)", T=T,
+            K=tuple(max(4, int(N * f)) for f in FRACS),
+            size_model=f"lognormal(seed={seed})",
+            cost_model="fetch"),),
+        seeds=(seed,),
+    )
 
 
 def run(N: int = 4096, T: int = 60_000, seed: int = 0, quiet: bool = False):
-    engine = Engine()
-    trace = shifting_zipf_trace(N=N, T=T, alpha=0.9, phases=4, seed=seed)
-    sizes = object_sizes(N, seed=seed)
-    costs = fetch_costs(sizes)
-    reqs = Request.of(trace, sizes=sizes[trace], costs=costs[trace])
-    fracs = [0.01, 0.02, 0.05, 0.10, 0.20, 0.40]
+    res = run_sweep(sweep(N=N, T=T, seed=seed))
     rows = {}
-    for frac in fracs:
-        K = max(4, int(N * frac))
+    for frac, K in zip(FRACS, res.sweep.scenarios[0].capacities()):
         row = {}
         for p in POLS:
-            res = engine.replay(p, reqs, K)
-            row[p] = res.byte_miss_ratio
-            row[f"{p}_penalty"] = res.penalty_ratio
+            row[p] = float(np.mean(res.metric("byte_miss_ratio",
+                                              policy=p, K=K)))
+            row[f"{p}_penalty"] = float(np.mean(res.metric(
+                "penalty_ratio", policy=p, K=K)))
         rows[frac] = row
     if not quiet:
-        print(fmt_row(["K/N"] + [f"{p} byte|pen" for p in POLS],
-                      [8] + [22] * len(POLS)))
+        print(report.fmt_row(["K/N"] + [f"{p} byte|pen" for p in POLS],
+                             [8] + [22] * len(POLS)))
         for frac, row in rows.items():
-            print(fmt_row(
+            print(report.fmt_row(
                 [f"{frac:.0%}"]
                 + [f"{row[p]:.3f}|{row[f'{p}_penalty']:.3f}" for p in POLS],
                 [8] + [22] * len(POLS)))
-    return save("byte_miss", {"N": N, "T": T,
-                              "rows": {str(k): v for k, v in rows.items()}})
+    return res.save(extras={"rows": {str(k): v for k, v in rows.items()}})
 
 
 if __name__ == "__main__":

@@ -1,30 +1,26 @@
-"""Shared benchmark plumbing: result sink + trace/size regimes."""
+"""Shared benchmark plumbing, now thin shims over ``repro.bench``.
+
+``k_for`` / the regime fractions / ``fmt_row`` re-export from the bench
+package; ``save`` wraps a legacy free-form payload in the canonical
+versioned envelope (git SHA, jax version, x64 flag — see
+``repro.bench.results``) so even non-sweep payloads are attributable and
+schema-valid.
+"""
 from __future__ import annotations
 
-import json
-import os
-import time
+from repro.bench import results
+from repro.bench.report import fmt_row                          # noqa: F401
+from repro.bench.scenario import (LARGE_FRAC, SMALL_FRAC,       # noqa: F401
+                                  k_for)
 
-RESULTS_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
-
-# cache-size regimes, as fractions of the trace footprint (paper §V-B:
-# small = 0.1%, large = 10%); the synthetic families use N=8192 objects
-SMALL_FRAC = 0.001
-LARGE_FRAC = 0.10
+RESULTS_DIR = results.RESULTS_DIR
 
 
-def k_for(N: int, regime: str) -> int:
-    frac = SMALL_FRAC if regime == "S" else LARGE_FRAC
-    return max(4, int(N * frac))
-
-
-def save(name: str, payload: dict):
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    payload = {"bench": name, "time": time.time(), **payload}
-    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
-        json.dump(payload, f, indent=1)
-    return payload
-
-
-def fmt_row(cells, widths):
-    return "  ".join(str(c).ljust(w) for c, w in zip(cells, widths))
+def save(name: str, payload: dict, *, config: dict | None = None,
+         records: list | None = None) -> dict:
+    """Wrap a free-form payload as the ``extras`` of a canonical result
+    envelope, validate it, and write ``<RESULTS_DIR>/<name>.json``."""
+    out = results.build_payload(name, config=config or {},
+                                records=records or [], extras=payload)
+    results.save(out)
+    return out

@@ -6,53 +6,55 @@ reliably reaches its shrink condition (hits outnumber misses and concentrate
 in the top half), so DAC trades miss ratio for memory at large nominal K.
 The paper's Fig. 8 curve is reproduced when DAC's x-coordinate is its
 *average adapted size* (the resource it actually used) — both plots are
-emitted here: miss@nominal-K and (avg_k, miss) pareto points.
+emitted here: miss@nominal-K and (avg_k, miss) pareto points, the adapted
+size coming off the sweep's ``observe`` channel.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import Engine
-from repro.data.traces import zipf_trace
-from .common import fmt_row, save
+from repro.bench import Scenario, Sweep, report, run_sweep
 
 POLS = ["lru", "lfu", "adaptiveclimb", "dynamicadaptiveclimb"]
+FRACS = [0.005, 0.01, 0.02, 0.05, 0.10, 0.20]
+
+
+def sweep(N: int = 4096, T: int = 80_000, alpha: float = 1.0,
+          seed: int = 0) -> Sweep:
+    return Sweep(
+        "curve_cachesize",
+        policies=tuple(POLS),
+        scenarios=(Scenario("zipf", trace=f"zipf(N={N},alpha={alpha})", T=T,
+                            K=tuple(max(4, int(N * f)) for f in FRACS)),),
+        seeds=(seed,),
+        observe=True,
+    )
 
 
 def run(N: int = 4096, T: int = 80_000, alpha: float = 1.0, seed: int = 0,
         quiet: bool = False):
-    engine = Engine()
-    trace = zipf_trace(N=N, T=T, alpha=alpha, seed=seed)
-    fracs = [0.005, 0.01, 0.02, 0.05, 0.10, 0.20]
-    rows = {}
-    pareto = []
-    for frac in fracs:
-        K = max(4, int(N * frac))
-        row = {}
-        for p in POLS:
-            if p == "dynamicadaptiveclimb":
-                res = engine.replay(p, trace, K, observe=True)
-                row[p] = res.miss_ratio
-                avg_k = float(np.asarray(res.obs["k"]).mean())
-                row["dac_avg_k"] = avg_k
-                pareto.append((avg_k / N, row[p]))
-            else:
-                row[p] = engine.replay(p, trace, K).miss_ratio
+    res = run_sweep(sweep(N=N, T=T, alpha=alpha, seed=seed))
+    rows, pareto = {}, []
+    for frac, K in zip(FRACS, res.sweep.scenarios[0].capacities()):
+        row = {p: float(np.mean(res.metric("miss_ratio", policy=p, K=K)))
+               for p in POLS}
+        avg_k = float(np.mean(res.metric(
+            "avg_k", policy="dynamicadaptiveclimb", K=K)))
+        row["dac_avg_k"] = avg_k
+        pareto.append((avg_k / N, row["dynamicadaptiveclimb"]))
         rows[frac] = row
     if not quiet:
-        print(fmt_row(["K/N"] + POLS + ["dac_avg_k/N"],
-                      [8] + [22] * len(POLS) + [12]))
+        print(report.fmt_row(["K/N"] + POLS + ["dac_avg_k/N"],
+                             [8] + [22] * len(POLS) + [12]))
         for frac, row in rows.items():
-            print(fmt_row(
+            print(report.fmt_row(
                 [f"{frac:.1%}"] + [f"{row[p]:.3f}" for p in POLS]
                 + [f"{row['dac_avg_k']/N:.1%}"],
                 [8] + [22] * len(POLS) + [12]))
         print("DAC pareto (avg_k/N, miss):",
               [(f"{k:.1%}", f"{m:.3f}") for k, m in pareto])
-    return save("curve_cachesize", {
-        "N": N, "T": T, "alpha": alpha,
-        "rows": {str(k): v for k, v in rows.items()},
-        "dac_pareto": pareto})
+    return res.save(extras={
+        "rows": {str(k): v for k, v in rows.items()}, "dac_pareto": pareto})
 
 
 if __name__ == "__main__":

@@ -2,18 +2,22 @@
 
 Measures next-token agreement with the exact (unbounded) cache and the KV
 memory held, as the DAC slot budget shrinks — the serving-quality analogue
-of the paper's miss-ratio tables.
+of the paper's miss-ratio tables.  Not a trace replay, so it bypasses the
+sweep runner, but the output is the same canonical schema-validated
+payload (one record per budget).
 """
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.bench import report, results
 from repro.configs import SMOKE_ARCHS
 from repro.models import init_params
 from repro.serving import decode_step, prefill
-from .common import fmt_row, save
 
 
 def _decode(cfg, params, toks, gen, budget, force=None):
@@ -37,6 +41,7 @@ def _decode(cfg, params, toks, gen, budget, force=None):
 
 
 def run(arch: str = "deepseek-7b", gen: int = 32, quiet: bool = False):
+    t_start = time.perf_counter()
     cfg = SMOKE_ARCHS[arch]
     params = init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
@@ -45,19 +50,28 @@ def run(arch: str = "deepseek-7b", gen: int = 32, quiet: bool = False):
     total = S + gen
     ref, ref_kv = _decode(cfg, params, toks, gen, budget=0)
     rows = {}
+    records = []
     for budget in (total, total * 3 // 4, total // 2, total // 4):
         out, kv = _decode(cfg, params, toks, gen, budget=budget,
                           force=ref[:-1])
         rows[budget] = {"agreement": float((out == ref).mean()),
                         "kv_bytes": kv, "kv_frac": kv / ref_kv}
+        records.append({"scenario": arch, "K": budget,
+                        "metrics": dict(rows[budget])})
     if not quiet:
-        print(fmt_row(["budget", "agreement", "kv_frac"], [10, 12, 10]))
+        print(report.fmt_row(["budget", "agreement", "kv_frac"],
+                             [10, 12, 10]))
         for b, r in rows.items():
-            print(fmt_row([b, f"{r['agreement']:.1%}",
-                           f"{r['kv_frac']:.2f}"], [10, 12, 10]))
-    return save("kv_bounded", {
-        "arch": arch, "gen": gen, "prompt": S,
-        "rows": {str(k): v for k, v in rows.items()}})
+            print(report.fmt_row([b, f"{r['agreement']:.1%}",
+                                  f"{r['kv_frac']:.2f}"], [10, 12, 10]))
+    payload = results.build_payload(
+        "kv_bounded",
+        config={"arch": arch, "gen": gen, "prompt": S},
+        records=records,
+        extras={"rows": {str(k): v for k, v in rows.items()}},
+        wall_s=time.perf_counter() - t_start)
+    results.save(payload)
+    return payload
 
 
 if __name__ == "__main__":

@@ -1,5 +1,5 @@
 """Table III / Fig. 5 / Fig. 6: miss-ratio reduction relative to FIFO across
-the six dataset families x {small, large} cache regimes x 13 policies, plus
+the six dataset families x {small, large} cache regimes x 15 policies, plus
 the best-performing-policy-per-dataset breakdown (Fig. 6).
 
 The paper's six public trace sets are not redistributable offline; each
@@ -7,14 +7,14 @@ family here is a synthetic generator matched to the published workload
 character (see repro.data.traces).  The validated claim is the paper's
 *qualitative* one: the climb policies lead or co-lead MRR, with the gap
 widening under working-set churn.
+
+Declarative: the whole table is one ``Sweep`` — dataset aliases from the
+trace registry, regime letters for K, the trace/seed axis vmapped per cell.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import Engine, mrr
-from repro.data.traces import DATASET_FAMILIES, dataset_family
-from .common import fmt_row, k_for, save
+from repro.bench import Scenario, Sweep, report, run_sweep
+from repro.data.traces import DATASET_FAMILIES
 
 POLICY_ORDER = [
     "dynamicadaptiveclimb", "adaptiveclimb", "sieve", "arc", "tinylfu",
@@ -23,39 +23,24 @@ POLICY_ORDER = [
 ]
 
 
+def sweep(T: int = 60_000, n_traces: int = 3, seed: int = 0) -> Sweep:
+    return Sweep(
+        "mrr_table",
+        policies=tuple(POLICY_ORDER),
+        scenarios=tuple(Scenario(ds, trace=ds, T=T, K=("L", "S"))
+                        for ds in DATASET_FAMILIES),
+        seeds=tuple(seed * 1000 + i for i in range(n_traces)),
+    )
+
+
 def run(T: int = 60_000, n_traces: int = 3, seed: int = 0,
         quiet: bool = False):
-    engine = Engine()
-    datasets = list(DATASET_FAMILIES)
-    table = {}
-    wins = {}
-    for ds in datasets:
-        cfg_N = DATASET_FAMILIES[ds]["N"]
-        traces = dataset_family(ds, T=T, n_traces=n_traces, seed=seed)
-        for regime in ("L", "S"):
-            K = k_for(cfg_N * 2, regime)   # x2: scan families use 2N ids
-            col = f"{ds}({regime})"
-            mrs = {}
-            for name in POLICY_ORDER:
-                res = engine.replay(name, np.asarray(traces), K)
-                mrs[name] = np.atleast_1d(res.miss_ratio)  # [n_traces]
-            fifo = mrs["fifo"]
-            table[col] = {
-                name: float(np.mean([mrr(m, f) for m, f in
-                                     zip(mrs[name], fifo)]))
-                for name in POLICY_ORDER}
-            # Fig. 6: winner fraction per trace
-            stack = np.stack([mrs[n] for n in POLICY_ORDER])
-            winners = np.argmin(stack, axis=0)
-            wins[col] = {POLICY_ORDER[i]: float((winners == i).mean())
-                         for i in set(winners.tolist())}
+    res = run_sweep(sweep(T=T, n_traces=n_traces, seed=seed))
+    table = report.mrr_matrix(res.records, POLICY_ORDER, baseline="fifo")
+    wins = report.winners(res.records, POLICY_ORDER)
 
     if not quiet:
-        cols = list(table)
-        print(fmt_row(["policy"] + cols, [22] + [14] * len(cols)))
-        for name in POLICY_ORDER:
-            print(fmt_row([name] + [f"{table[c][name]:+.3f}" for c in cols],
-                          [22] + [14] * len(cols)))
+        report.print_table(table, POLICY_ORDER)
         print("\nFig.6 winners (fraction of traces with lowest miss ratio):")
         for c, w in wins.items():
             best = max(w, key=w.get)
@@ -64,8 +49,8 @@ def run(T: int = 60_000, n_traces: int = 3, seed: int = 0,
     climb_best = sum(
         max(w, key=w.get) in ("adaptiveclimb", "dynamicadaptiveclimb")
         for w in wins.values())
-    return save("mrr_table", {
-        "T": T, "n_traces": n_traces, "table": table, "winners": wins,
+    return res.save(extras={
+        "table": table, "winners": wins,
         "climb_best_cells": climb_best, "total_cells": len(wins)})
 
 

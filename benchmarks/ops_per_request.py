@@ -4,18 +4,21 @@ request of the *compiled policy step*, extracted with the loop-aware
 analyzer from a lowered trace replay.
 
 Compares AdaptiveClimb / DynamicAdaptiveClimb / LRU at small & large cache
-sizes (the paper's small/large x alpha grid).
+sizes (the paper's small/large x alpha grid).  No traces are generated —
+the replay lowers over abstract shapes — so this table bypasses the sweep
+runner but still emits the canonical schema-validated result payload.
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.bench import report, results
 from repro.core import Engine, Request, make_policy
 from repro.launch import roofline
-from .common import fmt_row, save
 
 POLS = ["lru", "adaptiveclimb", "dynamicadaptiveclimb"]
 
@@ -36,23 +39,34 @@ def _per_request(policy, K: int, T: int = 1024):
 
 
 def run(quiet: bool = False):
+    t_start = time.perf_counter()
     rows = {}
+    records = []
     for regime, K in (("small", 64), ("large", 1024)):
         for p in POLS:
             fl, by = _per_request(make_policy(p), K)
             rows[f"{p}({regime})"] = {"flops_per_req": fl,
                                       "bytes_per_req": by}
+            records.append({
+                "policy": p, "K": K, "K_label": regime,
+                "metrics": {"flops_per_req": fl, "bytes_per_req": by}})
     if not quiet:
-        print(fmt_row(["policy(K)", "flops/req", "bytes/req"],
-                      [34, 14, 14]))
+        print(report.fmt_row(["policy(K)", "flops/req", "bytes/req"],
+                             [34, 14, 14]))
         for k, v in rows.items():
-            print(fmt_row([k, f"{v['flops_per_req']:.0f}",
-                           f"{v['bytes_per_req']:.0f}"], [34, 14, 14]))
+            print(report.fmt_row([k, f"{v['flops_per_req']:.0f}",
+                                  f"{v['bytes_per_req']:.0f}"],
+                                 [34, 14, 14]))
         ac = rows["adaptiveclimb(large)"]["bytes_per_req"]
         lru = rows["lru(large)"]["bytes_per_req"]
         print(f"\nAC/LRU bytes ratio (large): {ac/lru:.2f} "
               "(paper Fig. 9: climb policies ~0.5-0.75x of LRU)")
-    return save("ops_per_request", {"rows": rows})
+    payload = results.build_payload(
+        "ops_per_request", config={"policies": POLS},
+        records=records, extras={"rows": rows},
+        wall_s=time.perf_counter() - t_start)
+    results.save(payload)
+    return payload
 
 
 if __name__ == "__main__":

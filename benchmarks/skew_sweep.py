@@ -1,28 +1,42 @@
-"""Fig. 11: miss ratio vs Zipf skewness alpha for DAC / AC / LFU / LRU."""
+"""Fig. 11: miss ratio vs Zipf skewness alpha for DAC / AC / LFU / LRU —
+one scenario per alpha, the whole figure a single declarative Sweep."""
 from __future__ import annotations
 
-from repro.core import Engine
-from repro.data.traces import zipf_trace
-from .common import fmt_row, save
+import numpy as np
+
+from repro.bench import Scenario, Sweep, report, run_sweep
 
 POLS = ["lru", "lfu", "adaptiveclimb", "dynamicadaptiveclimb"]
+ALPHAS = [0.2, 0.4, 0.6, 0.8, 1.0, 1.2, 1.4]
+
+
+def sweep(N: int = 4096, T: int = 60_000, K: int = 256,
+          seed: int = 0) -> Sweep:
+    return Sweep(
+        "skew_sweep",
+        policies=tuple(POLS),
+        scenarios=tuple(
+            Scenario(f"alpha={a}", trace=f"zipf(N={N},alpha={a})", T=T,
+                     K=(K,))
+            for a in ALPHAS),
+        seeds=(seed,),
+    )
 
 
 def run(N: int = 4096, T: int = 60_000, K: int = 256, seed: int = 0,
         quiet: bool = False):
-    engine = Engine()
-    alphas = [0.2, 0.4, 0.6, 0.8, 1.0, 1.2, 1.4]
-    rows = {}
-    for a in alphas:
-        trace = zipf_trace(N=N, T=T, alpha=a, seed=seed)
-        rows[a] = {p: engine.replay(p, trace, K).miss_ratio for p in POLS}
+    res = run_sweep(sweep(N=N, T=T, K=K, seed=seed))
+    rows = {
+        a: {p: float(np.mean(res.metric("miss_ratio", policy=p,
+                                        scenario=f"alpha={a}")))
+            for p in POLS}
+        for a in ALPHAS}
     if not quiet:
-        print(fmt_row(["alpha"] + POLS, [8] + [22] * len(POLS)))
+        print(report.fmt_row(["alpha"] + POLS, [8] + [22] * len(POLS)))
         for a, row in rows.items():
-            print(fmt_row([a] + [f"{row[p]:.3f}" for p in POLS],
-                          [8] + [22] * len(POLS)))
-    return save("skew_sweep", {"N": N, "T": T, "K": K,
-                               "rows": {str(k): v for k, v in rows.items()}})
+            print(report.fmt_row([a] + [f"{row[p]:.3f}" for p in POLS],
+                                 [8] + [22] * len(POLS)))
+    return res.save(extras={"rows": {str(k): v for k, v in rows.items()}})
 
 
 if __name__ == "__main__":

@@ -6,6 +6,9 @@ embarrassingly-parallel structure, measured in Mops on this host.  On a
 real pod the lanes additionally spread over the data axis via
 ``Engine.replay(..., mesh=...)`` (examples/trace_study.py).
 
+The lanes are the seed axis of one declarative Scenario, materialized by
+the sweep runner (no hand-stacked traces); the timing harness itself stays
+wall-clock, so the replay runs here rather than through ``run_sweep``.
 Replays run in metrics-only mode (``collect_info=False``) — the honest
 throughput number excludes materializing a [lanes, T] StepInfo stack that
 production replay never needs.  Rank-based policies are additionally
@@ -20,9 +23,8 @@ import time
 import jax
 import numpy as np
 
+from repro.bench import Scenario, materialize, report, results
 from repro.core import Engine, make_policy
-from repro.data.traces import zipf_trace
-from .common import fmt_row, save
 
 POLS = ["climb", "adaptiveclimb", "dynamicadaptiveclimb", "tinylfu",
         "clock", "sieve", "twoq", "arc", "lru", "blru"]
@@ -30,12 +32,16 @@ POLS = ["climb", "adaptiveclimb", "dynamicadaptiveclimb", "tinylfu",
 RANK_POLS = {"climb", "adaptiveclimb", "dynamicadaptiveclimb"}
 
 
-def _measure(engine, pol, traces, K, use_pallas):
-    res = engine.replay(pol, traces, K, collect_info=False,
+def scenario(T: int, K: int) -> Scenario:
+    return Scenario("zipf_hot", trace="zipf(N=8192,alpha=1.1)", T=T, K=(K,))
+
+
+def _measure(engine, pol, reqs, K, use_pallas):
+    res = engine.replay(pol, reqs, K, collect_info=False,
                         use_pallas=use_pallas)
     jax.block_until_ready(res.metrics.hits)        # compile + warm
     t0 = time.perf_counter()
-    res = engine.replay(pol, traces, K, collect_info=False,
+    res = engine.replay(pol, reqs, K, collect_info=False,
                         use_pallas=use_pallas)
     jax.block_until_ready(res.metrics.hits)
     return time.perf_counter() - t0
@@ -45,33 +51,45 @@ def run(K: int = 256, T: int = 30_000, lanes_list=(1, 2, 4, 8, 16),
         quiet: bool = False):
     engine = Engine()
     lanes_list = list(lanes_list)
-    lane_traces = {
-        lanes: np.stack([zipf_trace(8192, T, 1.1, seed=s)
-                         for s in range(lanes)])
-        for lanes in lanes_list}
+    sc = scenario(T, K)
+    lane_reqs = {lanes: materialize(sc, seeds=range(lanes))
+                 for lanes in lanes_list}
+    t_start = time.perf_counter()
     table = {}
+    records = []
     for p in POLS:
         pol = make_policy(p)
         modes = ["jnp"] + (["pallas"] if p in RANK_POLS else [])
         for mode in modes:
             row = {}
             for lanes in lanes_list:
-                dt = _measure(engine, pol, lane_traces[lanes], K,
+                dt = _measure(engine, pol, lane_reqs[lanes], K,
                               use_pallas=(mode == "pallas"))
                 row[lanes] = lanes * T / dt / 1e6       # Mops
+                records.append({
+                    "policy": p, "scenario": sc.name, "trace": sc.trace,
+                    "T": T, "K": K, "K_label": str(K), "mode": mode,
+                    "lanes": lanes,
+                    "metrics": {"mops": row[lanes], "wall_s": dt}})
             table[f"{p}[{mode}]" if len(modes) > 1 else p] = row
     if not quiet:
-        print(fmt_row(["policy"] + [f"{n} lanes" for n in lanes_list]
-                      + ["avg"], [30] + [10] * (len(lanes_list) + 1)))
+        print(report.fmt_row(["policy"] + [f"{n} lanes" for n in lanes_list]
+                             + ["avg"], [30] + [10] * (len(lanes_list) + 1)))
         for p, row in table.items():
             vals = [row[n] for n in lanes_list]
-            print(fmt_row([p] + [f"{v:.2f}" for v in vals]
-                          + [f"{np.mean(vals):.2f}"],
-                          [30] + [10] * (len(lanes_list) + 1)))
-    return save("throughput", {
-        "K": K, "T": T,
-        "table": {p: {str(k): v for k, v in r.items()}
-                  for p, r in table.items()}})
+            print(report.fmt_row([p] + [f"{v:.2f}" for v in vals]
+                                 + [f"{np.mean(vals):.2f}"],
+                                 [30] + [10] * (len(lanes_list) + 1)))
+    payload = results.build_payload(
+        "throughput",
+        config={"K": K, "T": T, "lanes": lanes_list,
+                "scenario": sc.to_config()},
+        records=records,
+        extras={"table": {p: {str(k): v for k, v in r.items()}
+                          for p, r in table.items()}},
+        wall_s=time.perf_counter() - t_start)
+    results.save(payload)
+    return payload
 
 
 def main():

@@ -1,22 +1,22 @@
 """Fleet-scale trace study: the paper's 1067-trace evaluation pattern as a
-single SPMD program — thousands of independent caches replayed in parallel
-lanes (vmap) across the device mesh.
+single declarative Sweep — thousands of independent caches replayed in
+parallel vmapped lanes, one jitted replay per (policy, dataset) cell.
 
-On this CPU container it runs on 1 device; on a pod the same
-``Engine.replay(..., mesh=...)`` call spreads the trace batch over the data
-axis (the TPU-native version of the paper's multi-threaded libCacheSim
-replay, Tables IV/V).
+On this CPU container it runs on 1 device; on a pod the same sweep spreads
+the seed axis over the data mesh axis (``run_sweep(..., mesh=...)`` — the
+TPU-native version of the paper's multi-threaded libCacheSim replay,
+Tables IV/V).
 
   PYTHONPATH=src python examples/trace_study.py --n-traces 64
 """
 import argparse
-import time
 
 import jax
 import numpy as np
 
-from repro.core import Engine, mrr
-from repro.data.traces import DATASET_FAMILIES, dataset_family
+from repro.bench import Scenario, Sweep, report, run_sweep
+from repro.core import mrr
+from repro.data.traces import DATASET_FAMILIES
 
 
 def main():
@@ -26,31 +26,40 @@ def main():
     ap.add_argument("--K", type=int, default=128)
     ap.add_argument("--policies", default="fifo,lru,sieve,adaptiveclimb,"
                     "dynamicadaptiveclimb")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="route rank policies through the fused kernel")
     args = ap.parse_args()
 
     names = args.policies.split(",")
-    datasets = list(DATASET_FAMILIES)
     mesh = (jax.make_mesh((jax.device_count(),), ("data",))
             if jax.device_count() > 1 else None)
-    engine = Engine(mesh=mesh)
 
-    print(f"[trace_study] {len(datasets)} dataset families x "
-          f"{args.n_traces} traces x {len(names)} policies "
+    sweep = Sweep(
+        "trace_study",
+        policies=tuple(names),
+        scenarios=tuple(Scenario(ds, trace=ds, T=args.T, K=(args.K,))
+                        for ds in DATASET_FAMILIES),
+        seeds=tuple(7000 + i for i in range(args.n_traces)),
+    )
+    print(f"[trace_study] {len(sweep.scenarios)} dataset families x "
+          f"{len(sweep.seeds)} traces x {len(names)} policies "
           f"(T={args.T}, K={args.K}, devices={jax.device_count()})")
-    for ds in datasets:
-        traces = dataset_family(ds, T=args.T, n_traces=args.n_traces, seed=7)
-        row = {}
-        t0 = time.perf_counter()
-        for name in names:
-            res = engine.replay(name, np.asarray(traces), args.K)
-            row[name] = float(np.mean(res.miss_ratio))
-        dt = time.perf_counter() - t0
-        reqs = len(names) * traces.size
-        base = row.get("fifo", max(row.values()))
-        pretty = "  ".join(f"{n}={mrr(v, base):+.3f}" for n, v in row.items()
-                           if n != "fifo")
-        print(f"  {ds:10s} fifo_miss={base:.3f}  MRR: {pretty}   "
-              f"[{reqs/dt/1e6:.2f} Mreq/s]")
+
+    res = run_sweep(sweep, mesh=mesh,
+                    use_pallas=args.use_pallas or None)
+    for sc in sweep.scenarios:
+        means = {n: float(np.mean(report.seed_values(
+            res.records, "miss_ratio", policy=n, scenario=sc.name)))
+            for n in names}
+        # baseline: fifo when swept, else the worst policy in the row
+        base = means.get("fifo", max(means.values()))
+        wall = sum(r["wall_s"] for r in res.records
+                   if r["scenario"] == sc.name)
+        reqs = len(names) * len(sweep.seeds) * args.T
+        pretty = "  ".join(f"{n}={mrr(v, base):+.3f}"
+                           for n, v in means.items() if n != "fifo")
+        print(f"  {sc.name:10s} base_miss={base:.3f}  MRR: {pretty}   "
+              f"[{reqs/wall/1e6:.2f} Mreq/s]")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,29 @@
+"""Declarative experiment API: experiments are data, not code.
+
+The paper's 1067-trace, 6-dataset evaluation grid as three layers::
+
+    scenario = Scenario("wiki", trace="shifting_zipf(N=4096,alpha=0.9,phases=4)",
+                        T=60_000, K=("S", "L"),
+                        size_model="lognormal", cost_model="fetch")
+    sweep = Sweep("fig8", policies=("lru", "arc", "dac"),
+                  scenarios=(scenario,), seeds=(0, 1, 2))
+    result = run_sweep(sweep)                 # seeds vmapped per cell
+    payload = result.save()                   # canonical versioned JSON
+
+Traces come from the registry (``repro.data.make_trace`` spec strings),
+the runner batches the seed axis through one jitted ``Engine.replay`` per
+grid cell (with optional mesh sharding and the Pallas policy-step kernel),
+and :mod:`repro.bench.results` owns the versioned, provenance-stamped,
+schema-validated result payloads that :mod:`repro.bench.report` renders
+into the paper's tables.
+"""
+from . import report, results
+from .runner import SweepResult, materialize, run_sweep
+from .scenario import (COST_MODELS, LARGE_FRAC, SIZE_MODELS, SMALL_FRAC,
+                       Scenario, Sweep, k_for)
+
+__all__ = [
+    "Scenario", "Sweep", "SweepResult", "run_sweep", "materialize",
+    "results", "report", "k_for",
+    "SIZE_MODELS", "COST_MODELS", "SMALL_FRAC", "LARGE_FRAC",
+]

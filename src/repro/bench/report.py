@@ -1,0 +1,103 @@
+"""Render the paper's tables from canonical sweep records.
+
+Pure functions over the record lists emitted by :mod:`repro.bench.runner`
+(or reloaded from result JSONs): the MRR-vs-FIFO matrix (Table III), the
+per-cell winner fractions (Fig. 6), and generic metric pivots — so the
+table logic lives once, not in every benchmark script.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core import mrr
+
+__all__ = ["select", "seed_values", "cell_label", "pivot",
+           "mrr_matrix", "winners", "fmt_row", "print_table"]
+
+
+def select(records, **eq):
+    return [r for r in records if all(r.get(k) == v for k, v in eq.items())]
+
+
+def seed_values(records, metric: str, **eq) -> np.ndarray:
+    """Per-seed values of one metric for the single matching record."""
+    recs = select(records, **eq)
+    if len(recs) != 1:
+        raise KeyError(f"{len(recs)} records match {eq} (need exactly 1)")
+    return np.atleast_1d(np.asarray(recs[0]["metrics"][metric]))
+
+
+def cell_label(rec) -> str:
+    """Column label for one (scenario, K) cell: ``wiki(S)`` / ``zipf(256)``."""
+    return f"{rec['scenario']}({rec['K_label']})"
+
+
+def _cells(records):
+    """Distinct (scenario, K_label) cells in first-appearance order."""
+    seen = []
+    for r in records:
+        key = (r["scenario"], r["K_label"])
+        if key not in seen:
+            seen.append(key)
+    return seen
+
+
+def pivot(records, metric: str, policies, reduce=np.mean) -> dict:
+    """``{cell_label: {policy: reduced metric}}`` over all cells."""
+    out = {}
+    for scenario, k_label in _cells(records):
+        col = {}
+        for pol in policies:
+            vals = seed_values(records, metric, policy=pol,
+                               scenario=scenario, K_label=k_label)
+            col[pol] = float(reduce(vals))
+        out[f"{scenario}({k_label})"] = col
+    return out
+
+
+def mrr_matrix(records, policies, baseline: str = "fifo",
+               metric: str = "miss_ratio") -> dict:
+    """Table III: per cell, each policy's mean miss-ratio reduction vs the
+    baseline, the reduction computed per seed then averaged (paper's
+    signed MRR definition)."""
+    out = {}
+    for scenario, k_label in _cells(records):
+        base = seed_values(records, metric, policy=baseline,
+                           scenario=scenario, K_label=k_label)
+        col = {}
+        for pol in policies:
+            vals = seed_values(records, metric, policy=pol,
+                               scenario=scenario, K_label=k_label)
+            col[pol] = float(np.mean([mrr(float(m), float(f))
+                                      for m, f in zip(vals, base)]))
+        out[f"{scenario}({k_label})"] = col
+    return out
+
+
+def winners(records, policies, metric: str = "miss_ratio") -> dict:
+    """Fig. 6: per cell, the fraction of seeds on which each policy attains
+    the lowest metric (only winning policies appear)."""
+    out = {}
+    for scenario, k_label in _cells(records):
+        stack = np.stack([seed_values(records, metric, policy=p,
+                                      scenario=scenario, K_label=k_label)
+                          for p in policies])
+        best = np.argmin(stack, axis=0)
+        out[f"{scenario}({k_label})"] = {
+            policies[i]: float((best == i).mean())
+            for i in sorted(set(best.tolist()))}
+    return out
+
+
+def fmt_row(cells, widths) -> str:
+    return "  ".join(str(c).ljust(w) for c, w in zip(cells, widths))
+
+
+def print_table(matrix: dict, policies, *, fmt="{:+.3f}", col_w=14,
+                name_w=22, out=print):
+    """Print a ``{col: {policy: value}}`` matrix, policies as rows."""
+    cols = list(matrix)
+    out(fmt_row(["policy"] + cols, [name_w] + [col_w] * len(cols)))
+    for pol in policies:
+        out(fmt_row([pol] + [fmt.format(matrix[c][pol]) for c in cols],
+                    [name_w] + [col_w] * len(cols)))

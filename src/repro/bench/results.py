@@ -1,0 +1,181 @@
+"""Canonical versioned result schema for benchmark/sweep outputs.
+
+Every benchmark emits one JSON payload of this shape::
+
+    {
+      "schema": "repro.bench.result/v1",
+      "bench": "<name>",
+      "created_unix": <float>,
+      "provenance": {"git_sha", "jax", "x64", "backend", "device_count"},
+      "config": {...},        # the sweep config (or bench parameters)
+      "records": [            # one per grid cell / measurement
+        {"metrics": {"miss_ratio": [per-seed floats] | float, ...},
+         # standard optional keys, validated when present:
+         "policy": str, "scenario": str, "trace": str,
+         "T": int, "K": int, "K_label": str, "seeds": [ints],
+         "wall_s": float, ...}
+      ],
+      "extras": {...},        # free-form derived tables (reporting)
+      "wall_s": <float>
+    }
+
+``validate`` is a hand-rolled structural check (no jsonschema dependency);
+``save`` validates before writing so a non-conforming payload never lands
+on disk, and ``load`` validates after reading so consumers can trust the
+shape.  Provenance stamps every payload with the git SHA, jax version and
+the ``jax_enable_x64`` flag — result JSONs are attributable to an exact
+code + numerics state.
+"""
+from __future__ import annotations
+
+import json
+import numbers
+import os
+import subprocess
+import time
+
+import jax
+
+__all__ = ["SCHEMA_VERSION", "RESULTS_DIR", "provenance", "build_payload",
+           "validate", "save", "load"]
+
+SCHEMA_VERSION = "repro.bench.result/v1"
+
+RESULTS_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
+
+_RECORD_OPTIONAL = {
+    "policy": str, "scenario": str, "trace": str, "K_label": str,
+    "T": numbers.Integral, "K": numbers.Integral,
+    "wall_s": numbers.Real,
+}
+_PROVENANCE_KEYS = {"git_sha": str, "jax": str, "x64": bool,
+                    "backend": str, "device_count": numbers.Integral}
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.abspath(__file__)))
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
+def provenance() -> dict:
+    """Attribution stamp: exact code + numerics state of this run."""
+    return {
+        "git_sha": _git_sha(),
+        "jax": jax.__version__,
+        "x64": bool(jax.config.jax_enable_x64),
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+    }
+
+
+def build_payload(bench: str, *, config: dict, records: list,
+                  extras: dict | None = None,
+                  wall_s: float | None = None) -> dict:
+    return {
+        "schema": SCHEMA_VERSION,
+        "bench": bench,
+        "created_unix": time.time(),
+        "provenance": provenance(),
+        "config": config,
+        "records": records,
+        "extras": extras or {},
+        "wall_s": 0.0 if wall_s is None else float(wall_s),
+    }
+
+
+def _fail(path: str, msg: str):
+    raise ValueError(f"result schema violation at {path}: {msg}")
+
+
+def _check_metric_value(path, v):
+    if isinstance(v, numbers.Real) and not isinstance(v, bool):
+        return
+    if isinstance(v, list):
+        if not v:
+            _fail(path, "metric list must be non-empty")
+        for i, x in enumerate(v):
+            if not isinstance(x, numbers.Real) or isinstance(x, bool):
+                _fail(f"{path}[{i}]", f"expected a number, got {type(x).__name__}")
+        return
+    _fail(path, f"expected a number or list of numbers, got {type(v).__name__}")
+
+
+def _check_record(path: str, rec):
+    if not isinstance(rec, dict):
+        _fail(path, f"record must be a dict, got {type(rec).__name__}")
+    if "metrics" not in rec:
+        _fail(path, "record missing 'metrics'")
+    metrics = rec["metrics"]
+    if not isinstance(metrics, dict) or not metrics:
+        _fail(f"{path}.metrics", "must be a non-empty dict")
+    for k, v in metrics.items():
+        if not isinstance(k, str):
+            _fail(f"{path}.metrics", f"metric names must be str, got {k!r}")
+        _check_metric_value(f"{path}.metrics[{k!r}]", v)
+    if "seeds" in rec:
+        seeds = rec["seeds"]
+        if (not isinstance(seeds, list) or
+                not all(isinstance(s, numbers.Integral) for s in seeds)):
+            _fail(f"{path}.seeds", "must be a list of ints")
+        # per-seed metric lists must line up with the seed axis
+        for k, v in metrics.items():
+            if isinstance(v, list) and len(v) != len(seeds):
+                _fail(f"{path}.metrics[{k!r}]",
+                      f"length {len(v)} != len(seeds) {len(seeds)}")
+    for key, typ in _RECORD_OPTIONAL.items():
+        if key in rec and not isinstance(rec[key], typ):
+            _fail(f"{path}.{key}",
+                  f"expected {typ.__name__}, got {type(rec[key]).__name__}")
+
+
+def validate(payload: dict) -> dict:
+    """Structurally validate a result payload; returns it unchanged.
+    Raises ``ValueError`` naming the offending path otherwise."""
+    if not isinstance(payload, dict):
+        _fail("$", f"payload must be a dict, got {type(payload).__name__}")
+    if payload.get("schema") != SCHEMA_VERSION:
+        _fail("$.schema",
+              f"expected {SCHEMA_VERSION!r}, got {payload.get('schema')!r}")
+    for key, typ in (("bench", str), ("created_unix", numbers.Real),
+                     ("provenance", dict), ("config", dict),
+                     ("records", list), ("extras", dict),
+                     ("wall_s", numbers.Real)):
+        if key not in payload:
+            _fail(f"$.{key}", "missing")
+        if not isinstance(payload[key], typ):
+            _fail(f"$.{key}", f"expected {typ.__name__}, "
+                              f"got {type(payload[key]).__name__}")
+    prov = payload["provenance"]
+    for key, typ in _PROVENANCE_KEYS.items():
+        if key not in prov:
+            _fail(f"$.provenance.{key}", "missing")
+        if not isinstance(prov[key], typ):
+            _fail(f"$.provenance.{key}", f"expected {typ.__name__}, "
+                                         f"got {type(prov[key]).__name__}")
+    for i, rec in enumerate(payload["records"]):
+        _check_record(f"$.records[{i}]", rec)
+    return payload
+
+
+def save(payload: dict, *, results_dir: str | None = None) -> str:
+    """Validate and write ``<results_dir>/<bench>.json``; returns the path."""
+    validate(payload)
+    out_dir = RESULTS_DIR if results_dir is None else results_dir
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{payload['bench']}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def load(path: str) -> dict:
+    """Read and validate one result payload."""
+    with open(path) as f:
+        return validate(json.load(f))

@@ -1,0 +1,130 @@
+"""Grid execution: a Sweep runs through the Engine, seeds vmapped.
+
+For every (policy, scenario, K) cell the runner builds one ``[S, T]``
+request batch (S = the sweep's seed axis) and issues a *single*
+``Engine.replay`` call — the seeds replay as parallel vmapped cache lanes
+inside one jitted program (metrics-only: totals reduce in the scan carry,
+no ``[T]`` StepInfo ever materializes), instead of a Python loop over
+seeds.  Pass ``mesh=`` (or an Engine built with one) to shard the seed
+axis over devices, and ``use_pallas=True`` to route rank policies through
+the fused Pallas policy-step kernel — both knobs reach every cell.
+
+The output is a list of flat, JSON-able records (one per cell, per-seed
+metric lists) wrapped in a :class:`SweepResult` that renders the canonical
+payload of :mod:`repro.bench.results`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from ..core import Engine
+from ..core.policy import Request
+from . import report, results
+from .scenario import Scenario, Sweep
+
+__all__ = ["materialize", "run_sweep", "SweepResult"]
+
+
+def materialize(scenario: Scenario, seeds) -> Request:
+    """Build the ``[S, T]`` request batch for one scenario: traces from the
+    registry (one lane per seed) with the scenario's size/cost tables
+    gathered per request."""
+    spec = scenario.trace_spec()
+    keys = spec.generate_batch(scenario.T, seeds)
+    sizes = scenario.size_table()
+    if sizes is None:
+        return Request.of(keys)
+    costs = scenario.cost_table(sizes)
+    return Request.of(keys, sizes=sizes[keys],
+                      costs=None if costs is None else costs[keys])
+
+
+def _per_seed(x) -> list:
+    return [float(v) for v in np.atleast_1d(np.asarray(x))]
+
+
+def _cell_record(pol, sc, K, k_label, seeds, res, wall_s) -> dict:
+    metrics = {
+        "miss_ratio": _per_seed(res.miss_ratio),
+        "hit_ratio": _per_seed(res.hit_ratio),
+        "byte_miss_ratio": _per_seed(res.byte_miss_ratio),
+        "penalty_ratio": _per_seed(res.penalty_ratio),
+    }
+    if res.obs is not None and "k" in res.obs:
+        # adaptive policies: time-mean of the adapted cache size per seed
+        metrics["avg_k"] = _per_seed(
+            np.asarray(res.obs["k"], dtype=np.float64).mean(axis=-1))
+    return {
+        "policy": pol, "scenario": sc.name, "trace": sc.trace,
+        "T": int(sc.T), "K": int(K), "K_label": k_label,
+        "seeds": [int(s) for s in seeds],
+        "metrics": metrics, "wall_s": float(wall_s),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Executed sweep: the config that produced it + one record per cell."""
+
+    sweep: Sweep
+    records: list
+    wall_s: float
+
+    def select(self, **eq) -> list:
+        """Records whose fields equal every given keyword (e.g.
+        ``select(policy="lru", scenario="wiki", K_label="S")``)."""
+        return report.select(self.records, **eq)
+
+    def metric(self, name: str, **eq) -> np.ndarray:
+        """Per-seed values of one metric for the single matching record."""
+        return report.seed_values(self.records, name, **eq)
+
+    def payload(self, extras: dict | None = None) -> dict:
+        return results.build_payload(
+            self.sweep.name, config=self.sweep.to_config(),
+            records=self.records, extras=extras, wall_s=self.wall_s)
+
+    def save(self, extras: dict | None = None, *,
+             results_dir: str | None = None) -> dict:
+        """Validate + write the canonical payload; returns it."""
+        payload = self.payload(extras)
+        results.save(payload, results_dir=results_dir)
+        return payload
+
+
+def run_sweep(sweep: Sweep, *, engine: Engine | None = None,
+              mesh=None, use_pallas: bool | None = None,
+              progress=None) -> SweepResult:
+    """Execute every cell of ``sweep`` through the Engine.
+
+    Each scenario's ``[S, T]`` request batch is materialized once and
+    shared across its policies and capacities; each cell is one vmapped
+    metrics-only replay.  ``progress`` (e.g. ``print``) receives a line
+    per cell.
+    """
+    engine = engine or Engine(mesh=mesh)
+    t_start = time.perf_counter()
+    records = []
+    reqs_cache = {}
+    for pol, sc, K, k_label in sweep.cells():
+        if sc.name not in reqs_cache:
+            reqs_cache[sc.name] = materialize(sc, sweep.seeds)
+        reqs = reqs_cache[sc.name]
+        t0 = time.perf_counter()
+        res = engine.replay(pol, reqs, K, observe=sweep.observe,
+                            collect_info=False, mesh=mesh,
+                            use_pallas=use_pallas)
+        jax.block_until_ready(res.metrics.hits)
+        wall = time.perf_counter() - t0
+        records.append(_cell_record(pol, sc, K, k_label, sweep.seeds,
+                                    res, wall))
+        if progress is not None:
+            mr = np.mean(records[-1]["metrics"]["miss_ratio"])
+            progress(f"[{sweep.name}] {sc.name} K={K}({k_label}) "
+                     f"{pol}: miss={mr:.3f} [{wall:.2f}s]")
+    return SweepResult(sweep=sweep, records=records,
+                       wall_s=time.perf_counter() - t_start)

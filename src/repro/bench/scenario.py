@@ -1,0 +1,183 @@
+"""Declarative experiment descriptions: Scenario and Sweep.
+
+A :class:`Scenario` is one workload cell — a trace spec string, an optional
+object-size/fetch-cost model, and the cache-capacity regime.  A
+:class:`Sweep` is the full grid the paper evaluates: policies x scenarios x
+capacities x seeds.  Both are plain frozen dataclasses that round-trip to
+JSON-able config dicts, so an experiment is data: the sweep config rides
+inside the result payload and fully determines the run.
+
+Size and cost models are spec strings over small registries (mirroring
+policies and traces)::
+
+    Scenario("wiki", trace="shifting_zipf(N=4096,alpha=0.9,phases=4)",
+             T=60_000, K=(64, 256),
+             size_model="lognormal(median_kb=16,sigma=1.5)",
+             cost_model="fetch(base_ms=2.0,per_mb_ms=8.0)")
+
+Capacity entries are either explicit ints or the paper's regime letters
+``"S"`` / ``"L"`` (Section V-B: 0.1% / 10% of the trace's id footprint),
+resolved against ``make_trace(trace).n_keys``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..data.traces import TraceSpec, fetch_costs, make_trace, object_sizes
+from ..specs import build_kwargs, parse_spec
+
+__all__ = [
+    "Scenario", "Sweep", "SIZE_MODELS", "COST_MODELS",
+    "SMALL_FRAC", "LARGE_FRAC", "k_for",
+]
+
+# cache-size regimes, as fractions of the trace id footprint (paper §V-B:
+# small = 0.1%, large = 10%)
+SMALL_FRAC = 0.001
+LARGE_FRAC = 0.10
+
+SIZE_MODELS = {"lognormal": object_sizes}
+COST_MODELS = {"fetch": fetch_costs}
+
+
+def k_for(N: int, regime: str) -> int:
+    """Resolve a regime letter to a capacity: S = 0.1%, L = 10% of N."""
+    if regime not in ("S", "L"):
+        raise ValueError(f"capacity regime must be 'S' or 'L', got {regime!r}")
+    frac = SMALL_FRAC if regime == "S" else LARGE_FRAC
+    return max(4, int(N * frac))
+
+
+def _model_fn(registry: dict, kind: str, spec: str, skip: tuple):
+    name, argstr = parse_spec(spec)
+    if name not in registry:
+        raise ValueError(
+            f"unknown {kind} model {name!r}; known: {sorted(registry)}")
+    fn = registry[name]
+    return fn, build_kwargs(f"{kind} model", name, fn, argstr, skip=skip)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One workload: trace spec + size/cost model + capacity regime."""
+
+    name: str
+    trace: str                  # trace spec string (repro.data.make_trace)
+    T: int
+    K: tuple = (256,)           # ints and/or regime letters "S"/"L"
+    size_model: str | None = None   # e.g. "lognormal(median_kb=16)"
+    cost_model: str | None = None   # e.g. "fetch(base_ms=2.0)"; needs sizes
+
+    def __post_init__(self):
+        # normalize: canonical trace string, K always a tuple
+        object.__setattr__(self, "trace", str(make_trace(self.trace)))
+        K = self.K if isinstance(self.K, (tuple, list)) else (self.K,)
+        object.__setattr__(self, "K", tuple(K))
+        if self.cost_model is not None and self.size_model is None:
+            raise ValueError(
+                f"scenario {self.name!r}: cost_model requires a size_model "
+                "(fetch costs are a function of object sizes)")
+        # validate both model specs eagerly (parse only — no table is built)
+        if self.size_model is not None:
+            _model_fn(SIZE_MODELS, "size", self.size_model,
+                      skip=("n_objects",))
+        if self.cost_model is not None:
+            _model_fn(COST_MODELS, "cost", self.cost_model,
+                      skip=("sizes_bytes",))
+
+    def trace_spec(self) -> TraceSpec:
+        return make_trace(self.trace)
+
+    def capacities(self) -> tuple:
+        """K entries with regime letters resolved against the trace's id
+        footprint."""
+        n = self.trace_spec().n_keys
+        return tuple(k_for(n, k) if isinstance(k, str) else int(k)
+                     for k in self.K)
+
+    def k_label(self, K) -> str:
+        """Display label for one K entry ("S"/"L" or the number)."""
+        return K if isinstance(K, str) else str(int(K))
+
+    def size_table(self) -> np.ndarray | None:
+        """Per-object-id size table ``[n_keys]`` (bytes), or ``None`` for
+        the unit-object model."""
+        if self.size_model is None:
+            return None
+        fn, kw = _model_fn(SIZE_MODELS, "size", self.size_model,
+                           skip=("n_objects",))
+        return fn(n_objects=self.trace_spec().n_keys, **kw)
+
+    def cost_table(self, sizes: np.ndarray) -> np.ndarray | None:
+        """Per-object-id miss-cost table aligned with ``sizes``."""
+        if self.cost_model is None:
+            return None
+        fn, kw = _model_fn(COST_MODELS, "cost", self.cost_model,
+                           skip=("sizes_bytes",))
+        return fn(sizes, **kw)
+
+    def to_config(self) -> dict:
+        return {"name": self.name, "trace": self.trace, "T": self.T,
+                "K": list(self.K), "size_model": self.size_model,
+                "cost_model": self.cost_model}
+
+    @classmethod
+    def from_config(cls, cfg: dict) -> "Scenario":
+        return cls(name=cfg["name"], trace=cfg["trace"], T=cfg["T"],
+                   K=tuple(cfg["K"]), size_model=cfg.get("size_model"),
+                   cost_model=cfg.get("cost_model"))
+
+
+@dataclasses.dataclass(frozen=True)
+class Sweep:
+    """The evaluation grid: policies x scenarios x capacities x seeds.
+
+    ``policies`` are ``make_policy`` spec strings; ``seeds`` is the axis
+    the runner vmaps inside one jitted replay per (policy, scenario, K)
+    cell; ``observe=True`` additionally collects policy observables (e.g.
+    DAC's adapted size) and reports their per-seed time means.
+    """
+
+    name: str
+    policies: tuple
+    scenarios: tuple
+    seeds: tuple = (0,)
+    observe: bool = False
+
+    def __post_init__(self):
+        object.__setattr__(self, "policies", tuple(self.policies))
+        object.__setattr__(self, "scenarios", tuple(self.scenarios))
+        object.__setattr__(self, "seeds",
+                           tuple(int(s) for s in self.seeds))
+        if not self.policies:
+            raise ValueError("sweep needs at least one policy")
+        if not self.scenarios:
+            raise ValueError("sweep needs at least one scenario")
+        if not self.seeds:
+            raise ValueError("sweep needs at least one seed")
+        names = [sc.name for sc in self.scenarios]
+        if len(set(names)) != len(names):
+            raise ValueError(
+                f"scenario names must be unique, got {names}")
+
+    def cells(self):
+        """Iterate the grid: (policy_spec, scenario, K_int, K_label)."""
+        for sc in self.scenarios:
+            for k_spec, K in zip(sc.K, sc.capacities()):
+                for pol in self.policies:
+                    yield pol, sc, K, sc.k_label(k_spec)
+
+    def to_config(self) -> dict:
+        return {"name": self.name, "policies": list(self.policies),
+                "scenarios": [sc.to_config() for sc in self.scenarios],
+                "seeds": list(self.seeds), "observe": self.observe}
+
+    @classmethod
+    def from_config(cls, cfg: dict) -> "Sweep":
+        return cls(name=cfg["name"], policies=tuple(cfg["policies"]),
+                   scenarios=tuple(Scenario.from_config(s)
+                                   for s in cfg["scenarios"]),
+                   seeds=tuple(cfg["seeds"]),
+                   observe=cfg.get("observe", False))

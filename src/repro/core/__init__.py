@@ -7,9 +7,7 @@ The public surface is small::
     result = Engine().replay(policy, Request.of(keys, sizes), K)
     result.miss_ratio, result.byte_miss_ratio, result.penalty_ratio
 """
-import inspect
-import re
-
+from ..specs import build_kwargs, parse_spec
 from .adaptiveclimb import AdaptiveClimb
 from .baselines import (ARC, BLRU, Clock, Climb, FIFO, Hyperbolic, LFU, LRU,
                         Sieve, TinyLFU, TwoQ)
@@ -42,78 +40,21 @@ ALIASES = {
     "2q": "twoq",
 }
 
-_SPEC_RE = re.compile(r"([a-z0-9_]+)\s*(?:\((.*)\))?\s*", re.I | re.S)
-
-
-def _coerce(text: str):
-    low = text.lower()
-    if low in ("true", "false"):
-        return low == "true"
-    for cast in (int, float):
-        try:
-            return cast(text)
-        except ValueError:
-            pass
-    return text.strip("'\"")
-
-
-def _coerce_to_param(name: str, cls, key: str, value):
-    """Coerce a parsed spec value to the declared type of the constructor
-    parameter (inferred from its default), so ``dac(growth=4.0)`` and
-    ``dac(growth=4)`` build identical policies instead of one smuggling a
-    float through an integer knob."""
-    param = inspect.signature(cls.__init__).parameters.get(key)
-    if param is None:
-        raise ValueError(
-            f"unknown parameter {key!r} for policy {name!r}; accepts: "
-            f"{sorted(p for p in inspect.signature(cls.__init__).parameters if p != 'self')}")
-    default = param.default
-    if default is inspect.Parameter.empty or isinstance(value, str):
-        return value
-    if isinstance(default, bool):
-        if not isinstance(value, bool):
-            raise ValueError(
-                f"{name}({key}=...) expects a bool, got {value!r}")
-        return value
-    if isinstance(default, int):
-        if isinstance(value, float):
-            if not value.is_integer():
-                raise ValueError(
-                    f"{name}({key}=...) expects an integer, got {value!r}")
-            return int(value)
-        return int(value)
-    if isinstance(default, float):
-        return float(value)
-    return value
-
-
 def make_policy(spec) -> Policy:
     """Build a policy from a spec string: ``"lru"``, ``"dac"``,
     ``"dac(eps=0.5,growth=4)"``, ... — registry name (or alias) plus
     optional constructor kwargs (coerced to the parameter's declared
-    type).  Policy instances pass through."""
+    type; see :mod:`repro.specs`).  Policy instances pass through."""
     if isinstance(spec, Policy):
         return spec
-    m = _SPEC_RE.fullmatch(spec.strip())
-    if not m:
-        raise ValueError(f"unparseable policy spec {spec!r}")
-    name, argstr = m.group(1).lower(), m.group(2)
+    name, argstr = parse_spec(spec)
     name = ALIASES.get(name, name)
     if name not in POLICIES:
         raise ValueError(
             f"unknown policy {name!r}; known: {sorted(POLICIES)} "
             f"(aliases: {sorted(ALIASES)})")
     cls = POLICIES[name]
-    kwargs = {}
-    if argstr and argstr.strip():
-        for part in argstr.split(","):
-            k, sep, v = part.partition("=")
-            if not sep:
-                raise ValueError(
-                    f"policy spec args must be k=v, got {part!r} in {spec!r}")
-            k = k.strip()
-            kwargs[k] = _coerce_to_param(name, cls, k, _coerce(v.strip()))
-    return cls(**kwargs)
+    return cls(**build_kwargs("policy", name, cls.__init__, argstr))
 
 
 __all__ = [

@@ -1,3 +1,4 @@
-from .traces import (DATASET_FAMILIES, dataset_family, fetch_costs,
+from .traces import (DATASET_FAMILIES, TRACE_ALIASES, TRACES, TraceSpec,
+                     churn_trace, dataset_family, fetch_costs, make_trace,
                      object_sizes, scan_mix_trace, shifting_zipf_trace,
-                     zipf_trace, churn_trace)
+                     zipf_trace)

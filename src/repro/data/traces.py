@@ -1,18 +1,34 @@
-"""Synthetic trace generators.
+"""Synthetic trace generators + the trace registry.
 
 The paper's six public datasets cannot be redistributed or fetched offline;
 each generator below produces a family of traces matched to the published
 qualitative characteristics of one dataset (skew, working-set churn, scan
 fraction, object-size distribution).  Every generator is deterministic in
 its seed.  Keys are int32 >= 0.
+
+Traces are addressed by spec strings, mirroring ``repro.core.make_policy``::
+
+    spec = make_trace("zipf(N=8192,alpha=0.9)")     # -> TraceSpec
+    spec = make_trace("alibaba")                    # dataset-family alias
+    keys = spec.generate(T=200_000, seed=0)         # [T] int32
+    batch = spec.generate_batch(T=200_000, seeds=range(8))   # [8, T]
+
+``str(spec)`` round-trips to the canonical spec string, so experiment
+configs and result JSONs carry traces as data, not code.
 """
 from __future__ import annotations
 
+import dataclasses
+import inspect
+
 import numpy as np
+
+from ..specs import build_kwargs, coerce_value, format_spec, parse_spec
 
 __all__ = [
     "zipf_trace", "shifting_zipf_trace", "scan_mix_trace", "churn_trace",
     "dataset_family", "DATASET_FAMILIES", "object_sizes", "fetch_costs",
+    "TraceSpec", "make_trace", "TRACES", "TRACE_ALIASES",
 ]
 
 
@@ -124,24 +140,119 @@ DATASET_FAMILIES = {
 }
 
 
+# --- trace registry --------------------------------------------------------
+# Mirrors the policy registry: family name -> generator.  Spec params are
+# the generator's parameters minus the runtime axes (T, seed), coerced to
+# the declared type exactly like make_policy's constructor kwargs.
+
+TRACES = {
+    "zipf": zipf_trace,
+    "shifting_zipf": shifting_zipf_trace,
+    "scan_mix": scan_mix_trace,
+    "churn": churn_trace,
+}
+
+_RUNTIME_PARAMS = ("T", "seed")
+
+# each DATASET_FAMILIES "kind" is one registered family
+_KIND_TO_FAMILY = {"churn": "churn", "scan": "scan_mix",
+                   "zipfshift": "shifting_zipf"}
+
+# dataset names resolve like policy aliases: to a (family, params) expansion
+TRACE_ALIASES = {
+    name: (_KIND_TO_FAMILY[cfg["kind"]],
+           {k: v for k, v in cfg.items() if k != "kind"})
+    for name, cfg in DATASET_FAMILIES.items()
+}
+
+
+def _family_params(family: str) -> dict:
+    fn = TRACES[family]
+    return {k: p for k, p in inspect.signature(fn).parameters.items()
+            if k not in _RUNTIME_PARAMS}
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """A trace family plus its parameters — data, not code.
+
+    ``params`` is stored as a tuple of ``(name, value)`` pairs in the
+    generator's signature order, so specs are hashable and ``str(spec)``
+    is canonical (parsing it back yields an equal spec).
+    """
+
+    family: str
+    params: tuple = ()
+
+    @property
+    def kwargs(self) -> dict:
+        return dict(self.params)
+
+    @property
+    def n_keys(self) -> int:
+        """Id-space footprint: keys lie in ``[0, n_keys)``.  Scan mixes
+        address ``[0, 2N)`` (cold scan keys live in ``[N, 2N)``)."""
+        N = self.kwargs["N"]
+        return 2 * N if self.family == "scan_mix" else N
+
+    def __str__(self) -> str:
+        return format_spec(self.family, self.kwargs)
+
+    def generate(self, T: int, seed: int = 0) -> np.ndarray:
+        """One ``[T]`` int32 trace, deterministic in ``seed``."""
+        return TRACES[self.family](T=T, seed=seed, **self.kwargs)
+
+    def generate_batch(self, T: int, seeds) -> np.ndarray:
+        """``[len(seeds), T]`` independent traces — the seed axis the sweep
+        runner vmaps over."""
+        return np.stack([self.generate(T, seed=int(s)) for s in seeds])
+
+
+def make_trace(spec) -> TraceSpec:
+    """Build a :class:`TraceSpec` from a spec string: a registered family
+    (``"zipf(N=8192,alpha=0.9)"``) or a dataset alias (``"alibaba"``,
+    optionally with parameter overrides).  Values are coerced to the
+    generator parameter's declared type; unknown families, unknown
+    parameters, and missing required parameters raise ``ValueError`` —
+    the same contract as ``make_policy``.  ``TraceSpec`` instances pass
+    through."""
+    if isinstance(spec, TraceSpec):
+        return spec
+    name, argstr = parse_spec(spec)
+    base = {}
+    if name in TRACE_ALIASES:
+        name, base = TRACE_ALIASES[name]
+    if name not in TRACES:
+        raise ValueError(
+            f"unknown trace family {name!r}; known: {sorted(TRACES)} "
+            f"(aliases: {sorted(TRACE_ALIASES)})")
+    sig = _family_params(name)
+    kwargs = {k: coerce_value("trace family", name, sig, k, v)
+              for k, v in base.items()}
+    kwargs.update(build_kwargs("trace family", name, TRACES[name], argstr,
+                               skip=_RUNTIME_PARAMS))
+    missing = [k for k, p in sig.items()
+               if p.default is inspect.Parameter.empty and k not in kwargs]
+    if missing:
+        raise ValueError(
+            f"trace family {name!r} missing required parameters {missing}; "
+            f"accepts: {sorted(sig)}")
+    ordered = tuple((k, kwargs[k]) for k in sig if k in kwargs)
+    return TraceSpec(family=name, params=ordered)
+
+
 def dataset_family(name: str, T: int = 200_000, n_traces: int = 3,
                    seed: int = 0) -> np.ndarray:
-    """Return [n_traces, T] synthetic traces for one dataset family."""
-    cfg = dict(DATASET_FAMILIES[name])
-    kind = cfg.pop("kind")
-    traces = []
-    for i in range(n_traces):
-        s = seed * 1000 + i
-        if kind == "churn":
-            tr = churn_trace(T=T, seed=s, **cfg)
-        elif kind == "scan":
-            tr = scan_mix_trace(T=T, seed=s, **cfg)
-        elif kind == "zipfshift":
-            tr = shifting_zipf_trace(T=T, seed=s, **cfg)
-        else:  # pragma: no cover
-            raise ValueError(kind)
-        traces.append(tr)
-    return np.stack(traces)
+    """Return [n_traces, T] synthetic traces for one dataset family.
+
+    Back-compat wrapper over the registry: ``make_trace(name)`` plus the
+    historical ``seed * 1000 + i`` per-trace seeding."""
+    if name not in TRACE_ALIASES:
+        raise ValueError(
+            f"unknown dataset family {name!r}; known: {sorted(TRACE_ALIASES)}")
+    spec = make_trace(name)
+    return spec.generate_batch(
+        T, seeds=[seed * 1000 + i for i in range(n_traces)])
 
 
 def object_sizes(n_objects: int, seed: int = 0,

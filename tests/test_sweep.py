@@ -1,0 +1,206 @@
+"""Sweep API: the seeds-vmapped grid runner vs a per-seed Python loop
+(bit-identical, both Pallas settings), Scenario/Sweep config round-trips,
+and the canonical result schema's validation contract."""
+import numpy as np
+import pytest
+
+from repro.bench import (Scenario, Sweep, materialize, report, results,
+                         run_sweep)
+from repro.core import Engine
+from repro.core.policy import Request
+from repro.data.traces import make_trace
+
+ENGINE = Engine()
+
+SEEDS = (0, 1, 2)
+
+
+def _scenario(**kw):
+    base = dict(name="cell", trace="zipf(N=256,alpha=1.0)", T=2000,
+                K=(16,))
+    base.update(kw)
+    return Scenario(**base)
+
+
+# --- the satellite guarantee: vmapped seeds == per-seed loop ---------------
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("policy", ["dac", "lru"])
+def test_vmapped_cell_bit_identical_to_seed_loop(policy, use_pallas):
+    """One vmapped [S, T] replay of a grid cell produces exactly the
+    per-lane Metrics of S independent single-trace replays — for the jnp
+    and the fused-Pallas lowerings alike."""
+    sc = _scenario()
+    K = sc.capacities()[0]
+    reqs = materialize(sc, SEEDS)
+    batched = ENGINE.replay(policy, reqs, K, collect_info=False,
+                            use_pallas=use_pallas)
+    spec = make_trace(sc.trace)
+    for i, seed in enumerate(SEEDS):
+        single = ENGINE.replay(policy, spec.generate(sc.T, seed=seed), K,
+                               collect_info=False, use_pallas=use_pallas)
+        for field in batched.metrics._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(batched.metrics, field))[i],
+                np.asarray(getattr(single.metrics, field)),
+                err_msg=f"{policy} seed={seed} {field} "
+                        f"(use_pallas={use_pallas})")
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_runner_records_match_seed_loop(use_pallas):
+    """run_sweep's per-seed metric lists equal the looped single-lane
+    ratios, including size/cost-weighted ones."""
+    sc = _scenario(size_model="lognormal(median_kb=4,sigma=1.0)",
+                   cost_model="fetch")
+    sweep = Sweep("loop_eq", policies=("dac",), scenarios=(sc,),
+                  seeds=SEEDS)
+    res = run_sweep(sweep, use_pallas=use_pallas)
+    (rec,) = res.records
+    K = sc.capacities()[0]
+    spec = make_trace(sc.trace)
+    sizes = sc.size_table()
+    costs = sc.cost_table(sizes)
+    for i, seed in enumerate(SEEDS):
+        keys = spec.generate(sc.T, seed=seed)
+        single = ENGINE.replay(
+            "dac", Request.of(keys, sizes=sizes[keys], costs=costs[keys]),
+            K, collect_info=False, use_pallas=use_pallas)
+        assert rec["metrics"]["miss_ratio"][i] == single.miss_ratio
+        assert rec["metrics"]["byte_miss_ratio"][i] == single.byte_miss_ratio
+        assert rec["metrics"]["penalty_ratio"][i] == single.penalty_ratio
+
+
+def test_observe_collects_avg_k():
+    sweep = Sweep("obs", policies=("dac",), scenarios=(_scenario(),),
+                  seeds=SEEDS, observe=True)
+    res = run_sweep(sweep)
+    avg_k = res.metric("avg_k", policy="dac")
+    assert avg_k.shape == (len(SEEDS),)
+    assert (avg_k > 0).all()
+
+
+# --- Scenario / Sweep ------------------------------------------------------
+
+def test_capacity_regimes_resolve_against_footprint():
+    sc = _scenario(K=("S", "L", 33))
+    # zipf N=256: S = max(4, 0.1% of 256) = 4, L = 10% = 25
+    assert sc.capacities() == (4, 25, 33)
+    assert [sc.k_label(k) for k in sc.K] == ["S", "L", "33"]
+    scan = _scenario(trace="scan_mix(N=256,alpha=1.0,scan_frac=0.2,"
+                     "scan_len=32)", K=("L",))
+    assert scan.capacities() == (51,)   # 10% of the 2N id footprint
+    with pytest.raises(ValueError, match="regime"):
+        _scenario(K=("M",)).capacities()
+
+
+def test_scenario_validates_eagerly():
+    with pytest.raises(ValueError, match="unknown trace family"):
+        _scenario(trace="nope(N=3)")
+    with pytest.raises(ValueError, match="cost_model requires"):
+        _scenario(cost_model="fetch")
+    with pytest.raises(ValueError, match="unknown size model"):
+        _scenario(size_model="gaussian")
+    with pytest.raises(ValueError, match="unknown parameter"):
+        _scenario(size_model="lognormal(mu=3)")
+    with pytest.raises(ValueError, match="unknown parameter"):
+        _scenario(size_model="lognormal", cost_model="fetch(typo=1)")
+    with pytest.raises(ValueError, match="unknown cost model"):
+        _scenario(size_model="lognormal", cost_model="quadratic")
+
+
+def test_sweep_rejects_duplicate_scenario_names():
+    with pytest.raises(ValueError, match="unique"):
+        Sweep("x", policies=("lru",),
+              scenarios=(_scenario(), _scenario(K=(8,))))
+
+
+def test_sweep_config_roundtrip():
+    sweep = Sweep("rt", policies=("lru", "dac(eps=0.5)"),
+                  scenarios=(_scenario(K=("S", 8)),
+                             _scenario(name="sized",
+                                       size_model="lognormal")),
+                  seeds=(3, 4), observe=True)
+    assert Sweep.from_config(sweep.to_config()) == sweep
+
+
+def test_sweep_rejects_empty_axes():
+    with pytest.raises(ValueError):
+        Sweep("x", policies=(), scenarios=(_scenario(),))
+    with pytest.raises(ValueError):
+        Sweep("x", policies=("lru",), scenarios=())
+    with pytest.raises(ValueError):
+        Sweep("x", policies=("lru",), scenarios=(_scenario(),), seeds=())
+
+
+def test_materialize_shapes_and_models():
+    sc = _scenario(size_model="lognormal", cost_model="fetch")
+    reqs = materialize(sc, SEEDS)
+    assert reqs.key.shape == (len(SEEDS), sc.T)
+    assert reqs.size.shape == reqs.key.shape
+    sizes = sc.size_table()
+    np.testing.assert_array_equal(np.asarray(reqs.size)[0],
+                                  sizes[np.asarray(reqs.key)[0]])
+
+
+# --- canonical results schema ----------------------------------------------
+
+def _payload():
+    sweep = Sweep("schema", policies=("fifo", "lru"),
+                  scenarios=(_scenario(),), seeds=SEEDS)
+    return run_sweep(sweep).payload(extras={"note": "test"})
+
+
+def test_payload_validates_and_roundtrips(tmp_path):
+    p = _payload()
+    results.validate(p)
+    assert p["schema"] == results.SCHEMA_VERSION
+    for key in ("git_sha", "jax", "x64", "backend", "device_count"):
+        assert key in p["provenance"]
+    path = results.save(p, results_dir=str(tmp_path))
+    q = results.load(path)
+    assert q["bench"] == "schema"
+    assert len(q["records"]) == 2
+    # the embedded config reconstructs the sweep that produced the file
+    assert Sweep.from_config(q["config"]).cells
+
+
+@pytest.mark.parametrize("mutate, match", [
+    (lambda p: p.pop("provenance"), "provenance"),
+    (lambda p: p.update(schema="v0"), "schema"),
+    (lambda p: p["records"][0].pop("metrics"), "metrics"),
+    (lambda p: p["records"][0]["metrics"].update(bad="x"), "number"),
+    (lambda p: p["records"][0]["metrics"]["miss_ratio"].append(0.5),
+     "len\\(seeds\\)"),
+    (lambda p: p["provenance"].pop("git_sha"), "git_sha"),
+    (lambda p: p["records"][0].update(K="big"), "K"),
+])
+def test_validation_rejects_malformed_payloads(mutate, match):
+    p = _payload()
+    mutate(p)
+    with pytest.raises(ValueError, match=match):
+        results.validate(p)
+
+
+def test_save_refuses_invalid(tmp_path):
+    p = _payload()
+    del p["records"][0]["metrics"]
+    with pytest.raises(ValueError):
+        results.save(p, results_dir=str(tmp_path))
+    assert not list(tmp_path.iterdir())
+
+
+# --- reporting -------------------------------------------------------------
+
+def test_mrr_matrix_and_winners():
+    sweep = Sweep("rep", policies=("fifo", "lru", "dac"),
+                  scenarios=(_scenario(K=("S", 16)),), seeds=SEEDS)
+    res = run_sweep(sweep)
+    table = report.mrr_matrix(res.records, ["fifo", "lru", "dac"])
+    assert set(table) == {"cell(S)", "cell(16)"}
+    for col in table.values():
+        assert col["fifo"] == 0.0          # baseline vs itself
+        assert all(-1.0 <= v <= 1.0 for v in col.values())
+    wins = report.winners(res.records, ["fifo", "lru", "dac"])
+    for col in wins.values():
+        assert abs(sum(col.values()) - 1.0) < 1e-9

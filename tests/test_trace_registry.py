@@ -1,0 +1,138 @@
+"""Trace registry: make_trace spec parsing, canonical-string round-trips,
+same-seed determinism, and the make_policy-parity coercion/error contract."""
+import numpy as np
+import pytest
+
+from repro.data.traces import (DATASET_FAMILIES, TRACE_ALIASES, TRACES,
+                               TraceSpec, dataset_family, make_trace)
+
+# one concrete, cheap spec per registered family
+EXAMPLE_SPECS = {
+    "zipf": "zipf(N=128,alpha=1.0)",
+    "shifting_zipf": "shifting_zipf(N=128,alpha=1.0,phases=3)",
+    "scan_mix": "scan_mix(N=128,alpha=1.0,scan_frac=0.2,scan_len=32)",
+    "churn": "churn(N=128,alpha=1.0,mean_phase=500,drift=0.1)",
+}
+
+
+def test_every_family_has_an_example_spec():
+    assert set(EXAMPLE_SPECS) == set(TRACES)
+
+
+@pytest.mark.parametrize("family", sorted(TRACES))
+def test_roundtrip_every_family(family):
+    """str(make_trace(s)) is canonical: parsing it back yields an equal
+    spec, and the canonical form is a fixed point."""
+    spec = make_trace(EXAMPLE_SPECS[family])
+    assert spec.family == family
+    again = make_trace(str(spec))
+    assert again == spec
+    assert str(again) == str(spec)
+    assert hash(again) == hash(spec)
+
+
+@pytest.mark.parametrize("alias", sorted(TRACE_ALIASES))
+def test_roundtrip_every_dataset_alias(alias):
+    """Dataset aliases resolve to a registered family whose canonical
+    string round-trips; their parameters match DATASET_FAMILIES."""
+    spec = make_trace(alias)
+    assert spec.family in TRACES
+    assert make_trace(str(spec)) == spec
+    cfg = {k: v for k, v in DATASET_FAMILIES[alias].items() if k != "kind"}
+    assert spec.kwargs == cfg
+
+
+@pytest.mark.parametrize("family", sorted(TRACES))
+def test_same_seed_determinism(family):
+    spec = make_trace(EXAMPLE_SPECS[family])
+    a = spec.generate(T=4000, seed=3)
+    b = spec.generate(T=4000, seed=3)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (4000,) and a.dtype == np.int32
+    assert a.min() >= 0 and a.max() < spec.n_keys
+    # a different seed produces a different trace
+    assert not np.array_equal(a, spec.generate(T=4000, seed=4))
+
+
+def test_generate_batch_stacks_per_seed_traces():
+    spec = make_trace("zipf(N=64,alpha=1.0)")
+    batch = spec.generate_batch(T=1000, seeds=[5, 9])
+    assert batch.shape == (2, 1000)
+    np.testing.assert_array_equal(batch[0], spec.generate(1000, seed=5))
+    np.testing.assert_array_equal(batch[1], spec.generate(1000, seed=9))
+
+
+def test_dataset_family_wrapper_bit_identical():
+    """The back-compat wrapper reproduces its historical seeding exactly
+    through the registry path."""
+    got = dataset_family("wiki", T=3000, n_traces=2, seed=2)
+    spec = make_trace("wiki")
+    np.testing.assert_array_equal(
+        got, spec.generate_batch(3000, seeds=[2000, 2001]))
+
+
+def test_alias_accepts_parameter_overrides():
+    spec = make_trace("alibaba(alpha=1.3)")
+    assert spec.kwargs["alpha"] == 1.3
+    base = make_trace("alibaba")
+    assert {k: v for k, v in spec.kwargs.items() if k != "alpha"} == \
+        {k: v for k, v in base.kwargs.items() if k != "alpha"}
+
+
+def test_scan_mix_footprint_is_2N():
+    assert make_trace("scan_mix(N=64,alpha=1.0,scan_frac=0.2,"
+                      "scan_len=16)").n_keys == 128
+    assert make_trace("zipf(N=64,alpha=1.0)").n_keys == 64
+
+
+def test_trace_spec_passthrough():
+    spec = make_trace("zipf(N=64,alpha=1.0)")
+    assert make_trace(spec) is spec
+
+
+# --- make_policy-parity coercion & error contract --------------------------
+
+def test_coercion_to_declared_types():
+    """Integer knobs accept "128" and "128.0" identically; float knobs
+    accept ints — same contract as make_policy."""
+    a = make_trace("zipf(N=128,alpha=1)")
+    b = make_trace("zipf(N=128.0,alpha=1.0)")
+    assert a == b
+    assert isinstance(a.kwargs["N"], int)
+    assert isinstance(a.kwargs["alpha"], float)
+    c = make_trace("scan_mix(N=64,alpha=1,scan_frac=1,scan_len=8.0)")
+    assert isinstance(c.kwargs["scan_frac"], float)
+    assert isinstance(c.kwargs["scan_len"], int)
+
+
+def test_non_integral_float_for_int_param_raises():
+    with pytest.raises(ValueError, match="integer"):
+        make_trace("zipf(N=64.5,alpha=1.0)")
+
+
+def test_unknown_param_raises():
+    with pytest.raises(ValueError, match="unknown parameter"):
+        make_trace("zipf(N=64,alpha=1.0,beta=2)")
+
+
+def test_unknown_family_raises():
+    with pytest.raises(ValueError, match="unknown trace family"):
+        make_trace("nosuchfamily")
+
+
+def test_missing_required_param_raises():
+    with pytest.raises(ValueError, match="missing required"):
+        make_trace("zipf(N=64)")
+
+
+def test_positional_args_raise():
+    with pytest.raises(ValueError, match="k=v"):
+        make_trace("zipf(64)")
+
+
+def test_runtime_axes_not_spec_settable():
+    """T and seed are runtime arguments of generate(), not spec params."""
+    with pytest.raises(ValueError, match="unknown parameter"):
+        make_trace("zipf(N=64,alpha=1.0,T=100)")
+    with pytest.raises(ValueError, match="unknown parameter"):
+        make_trace("zipf(N=64,alpha=1.0,seed=1)")
