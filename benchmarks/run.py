@@ -18,7 +18,8 @@ from repro.bench import results
 
 def _jobs():
     from . import (ablation_eps, byte_miss, curve_cachesize, kv_bounded,
-                   mrr_table, ops_per_request, skew_sweep, throughput)
+                   mrr_table, ops_per_request, skew_sweep, tenant_sweep,
+                   throughput)
 
     # name -> (description, fn(fast) -> validated payload)
     return {
@@ -43,6 +44,11 @@ def _jobs():
         "kv_bounded": (
             "beyond-paper",
             lambda fast: kv_bounded.run(gen=16 if fast else 32)),
+        "tenant_sweep": (
+            "beyond-paper (multi-tenant tier, v2 schema)",
+            lambda fast: tenant_sweep.run(
+                T=24_000 if fast else 60_000,
+                seeds=(0, 1) if fast else (0, 1, 2))),
         "ablation_eps": (
             "beyond-paper",
             lambda fast: ablation_eps.run(T=20_000 if fast else 60_000)),

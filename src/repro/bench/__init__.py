@@ -16,14 +16,22 @@ grid cell (with optional mesh sharding and the Pallas policy-step kernel),
 and :mod:`repro.bench.results` owns the versioned, provenance-stamped,
 schema-validated result payloads that :mod:`repro.bench.report` renders
 into the paper's tables.
+
+Multi-tenant tier grids use the same shapes one level up:
+``TierScenario`` (a ``tenants(...)`` stream + shared budget) x
+``TierSweep`` ((policy, arbiter) entries), executed by
+:func:`run_tier_sweep` into ``repro.bench.result/v2`` payloads with
+per-tenant records — see ``docs/EXPERIMENTS.md``.
 """
 from . import report, results
-from .runner import SweepResult, materialize, run_sweep
+from .runner import (SweepResult, TierSweepResult, materialize, run_sweep,
+                     run_tier_sweep)
 from .scenario import (COST_MODELS, LARGE_FRAC, SIZE_MODELS, SMALL_FRAC,
-                       Scenario, Sweep, k_for)
+                       Scenario, Sweep, TierScenario, TierSweep, k_for)
 
 __all__ = [
     "Scenario", "Sweep", "SweepResult", "run_sweep", "materialize",
+    "TierScenario", "TierSweep", "TierSweepResult", "run_tier_sweep",
     "results", "report", "k_for",
     "SIZE_MODELS", "COST_MODELS", "SMALL_FRAC", "LARGE_FRAC",
 ]

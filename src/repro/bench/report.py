@@ -12,15 +12,27 @@ import numpy as np
 from ..core import mrr
 
 __all__ = ["select", "seed_values", "cell_label", "pivot",
-           "mrr_matrix", "winners", "fmt_row", "print_table"]
+           "mrr_matrix", "winners", "fmt_row", "print_table",
+           "tier_mrr_matrix", "tier_winners", "tenant_occupancy"]
 
 
 def select(records, **eq):
+    """Records whose fields equal every keyword.
+
+    >>> recs = [{"policy": "lru", "K": 8}, {"policy": "dac", "K": 8}]
+    >>> select(recs, policy="dac")
+    [{'policy': 'dac', 'K': 8}]
+    """
     return [r for r in records if all(r.get(k) == v for k, v in eq.items())]
 
 
 def seed_values(records, metric: str, **eq) -> np.ndarray:
-    """Per-seed values of one metric for the single matching record."""
+    """Per-seed values of one metric for the single matching record.
+
+    >>> recs = [{"policy": "lru", "metrics": {"miss_ratio": [0.2, 0.3]}}]
+    >>> seed_values(recs, "miss_ratio", policy="lru").tolist()
+    [0.2, 0.3]
+    """
     recs = select(records, **eq)
     if len(recs) != 1:
         raise KeyError(f"{len(recs)} records match {eq} (need exactly 1)")
@@ -28,22 +40,68 @@ def seed_values(records, metric: str, **eq) -> np.ndarray:
 
 
 def cell_label(rec) -> str:
-    """Column label for one (scenario, K) cell: ``wiki(S)`` / ``zipf(256)``."""
+    """Column label for one (scenario, K) cell: ``wiki(S)`` / ``zipf(256)``.
+
+    >>> cell_label({"scenario": "wiki", "K_label": "S"})
+    'wiki(S)'
+    """
     return f"{rec['scenario']}({rec['K_label']})"
 
 
-def _cells(records):
-    """Distinct (scenario, K_label) cells in first-appearance order."""
+def _cells(records, key_field: str = "K_label"):
+    """Distinct (scenario, <key_field>) cells in first-appearance order."""
     seen = []
     for r in records:
-        key = (r["scenario"], r["K_label"])
+        key = (r["scenario"], r[key_field])
         if key not in seen:
             seen.append(key)
     return seen
 
 
+# The v1 (policy-keyed) and tier (entry-keyed) views share one
+# aggregation core, parameterized by the cell key field, the per-row
+# seed-value selector, and the row label.
+
+def _mrr_over_cells(records, rows, baseline, metric, key_field, values,
+                    label) -> dict:
+    out = {}
+    for scenario, cell in _cells(records, key_field):
+        base = values(records, metric, baseline, scenario, cell)
+        col = {}
+        for row in rows:
+            vals = values(records, metric, row, scenario, cell)
+            col[label(row)] = float(np.mean(
+                [mrr(float(m), float(f)) for m, f in zip(vals, base)]))
+        out[f"{scenario}({cell})"] = col
+    return out
+
+
+def _winners_over_cells(records, rows, metric, key_field, values,
+                        label) -> dict:
+    out = {}
+    for scenario, cell in _cells(records, key_field):
+        stack = np.stack([values(records, metric, row, scenario, cell)
+                          for row in rows])
+        best = np.argmin(stack, axis=0)
+        out[f"{scenario}({cell})"] = {
+            label(rows[i]): float((best == i).mean())
+            for i in sorted(set(best.tolist()))}
+    return out
+
+
+def _policy_values(records, metric, pol, scenario, k_label):
+    return seed_values(records, metric, policy=pol, scenario=scenario,
+                       K_label=k_label)
+
+
 def pivot(records, metric: str, policies, reduce=np.mean) -> dict:
-    """``{cell_label: {policy: reduced metric}}`` over all cells."""
+    """``{cell_label: {policy: reduced metric}}`` over all cells.
+
+    >>> recs = [{"policy": "lru", "scenario": "z", "K_label": "8",
+    ...          "metrics": {"miss_ratio": [0.25, 0.75]}}]
+    >>> pivot(recs, "miss_ratio", ["lru"])
+    {'z(8)': {'lru': 0.5}}
+    """
     out = {}
     for scenario, k_label in _cells(records):
         col = {}
@@ -59,37 +117,118 @@ def mrr_matrix(records, policies, baseline: str = "fifo",
                metric: str = "miss_ratio") -> dict:
     """Table III: per cell, each policy's mean miss-ratio reduction vs the
     baseline, the reduction computed per seed then averaged (paper's
-    signed MRR definition)."""
-    out = {}
-    for scenario, k_label in _cells(records):
-        base = seed_values(records, metric, policy=baseline,
-                           scenario=scenario, K_label=k_label)
-        col = {}
-        for pol in policies:
-            vals = seed_values(records, metric, policy=pol,
-                               scenario=scenario, K_label=k_label)
-            col[pol] = float(np.mean([mrr(float(m), float(f))
-                                      for m, f in zip(vals, base)]))
-        out[f"{scenario}({k_label})"] = col
-    return out
+    signed MRR definition).
+
+    >>> recs = [{"policy": p, "scenario": "z", "K_label": "8",
+    ...          "metrics": {"miss_ratio": [m]}}
+    ...         for p, m in [("fifo", 0.4), ("dac", 0.2)]]
+    >>> mrr_matrix(recs, ["dac"])
+    {'z(8)': {'dac': 0.5}}
+    """
+    return _mrr_over_cells(records, policies, baseline, metric,
+                           "K_label", _policy_values, lambda p: p)
 
 
 def winners(records, policies, metric: str = "miss_ratio") -> dict:
     """Fig. 6: per cell, the fraction of seeds on which each policy attains
-    the lowest metric (only winning policies appear)."""
+    the lowest metric (only winning policies appear).
+
+    >>> recs = [{"policy": p, "scenario": "z", "K_label": "8",
+    ...          "metrics": {"miss_ratio": [m, m]}}
+    ...         for p, m in [("lru", 0.4), ("dac", 0.2)]]
+    >>> winners(recs, ["lru", "dac"])
+    {'z(8)': {'dac': 1.0}}
+    """
+    return _winners_over_cells(records, policies, metric, "K_label",
+                               _policy_values, lambda p: p)
+
+
+# --- tier (v2) views -------------------------------------------------------
+# Tier records are keyed by (policy, arbiter) entries instead of a bare
+# policy; rows are labelled "policy+arbiter" and cells are (scenario,
+# budget_label) pairs.
+
+def _tier_label(entry) -> str:
+    return "+".join(entry)
+
+
+def _entry_values(records, metric, entry, scenario, budget_label):
+    pol, arb = entry
+    return seed_values(records, metric, policy=pol, arbiter=arb,
+                       scenario=scenario, budget_label=budget_label)
+
+
+def tier_mrr_matrix(records, entries, baseline=("fifo", "static"),
+                    metric: str = "byte_miss_ratio") -> dict:
+    """Aggregate miss-ratio reduction of each (policy, arbiter) entry vs
+    the baseline entry, per tier cell — the byte-weighted default makes
+    it the tier analogue of the paper's Table III, computed per seed then
+    averaged.
+
+    >>> recs = [{"policy": p, "arbiter": a, "scenario": "flux",
+    ...          "budget_label": "512", "seeds": [0],
+    ...          "metrics": {"byte_miss_ratio": [m]}}
+    ...         for p, a, m in [("fifo", "static", 0.5),
+    ...                         ("dac", "greedy", 0.25)]]
+    >>> tier_mrr_matrix(recs, [("dac", "greedy")])
+    {'flux(512)': {'dac+greedy': 0.5}}
+    """
+    return _mrr_over_cells(records, entries, baseline, metric,
+                           "budget_label", _entry_values, _tier_label)
+
+
+def tier_winners(records, entries, metric: str = "byte_miss_ratio") -> dict:
+    """Per tier cell, the fraction of seeds on which each (policy,
+    arbiter) entry attains the lowest aggregate metric."""
+    return _winners_over_cells(records, entries, metric, "budget_label",
+                               _entry_values, _tier_label)
+
+
+def occupancy_timeline(ks, windows: int = 8) -> list:
+    """Downsample a per-step occupancy trace ``[T, N]`` (from
+    ``replay_tier(..., observe=True)``) into ``windows`` rows of
+    per-tenant mean active size — the occupancy-over-time table for one
+    tier replay.
+
+    >>> import numpy as np
+    >>> ks = np.stack([np.arange(4), np.full(4, 2)], axis=1)   # [T=4, N=2]
+    >>> occupancy_timeline(ks, windows=2)
+    [[0.5, 2.0], [2.5, 2.0]]
+    """
+    ks = np.asarray(ks, dtype=np.float64)
+    bounds = np.linspace(0, ks.shape[0], windows + 1).astype(int)
+    return [[float(v) for v in ks[lo:hi].mean(axis=0)]
+            for lo, hi in zip(bounds[:-1], bounds[1:]) if hi > lo]
+
+
+def tenant_occupancy(rec) -> dict:
+    """Per-tenant occupancy/miss table for one tier record:
+    ``{tenant: {"avg_k": seed-mean occupancy, "share": fraction of the
+    budget, "miss_ratio": seed-mean}}``.
+
+    >>> rec = {"budget": 10, "tenants": [
+    ...     {"tenant": 0, "metrics": {"avg_k": [4.0], "miss_ratio": [0.5],
+    ...                               "byte_miss_ratio": [0.5]}}]}
+    >>> tenant_occupancy(rec)[0]["share"]
+    0.4
+    """
     out = {}
-    for scenario, k_label in _cells(records):
-        stack = np.stack([seed_values(records, metric, policy=p,
-                                      scenario=scenario, K_label=k_label)
-                          for p in policies])
-        best = np.argmin(stack, axis=0)
-        out[f"{scenario}({k_label})"] = {
-            policies[i]: float((best == i).mean())
-            for i in sorted(set(best.tolist()))}
+    for ten in rec["tenants"]:
+        avg_k = float(np.mean(ten["metrics"]["avg_k"]))
+        out[int(ten["tenant"])] = {
+            "avg_k": avg_k,
+            "share": avg_k / rec["budget"],
+            "miss_ratio": float(np.mean(ten["metrics"]["miss_ratio"])),
+        }
     return out
 
 
 def fmt_row(cells, widths) -> str:
+    """Left-justify ``cells`` into fixed-width columns.
+
+    >>> fmt_row(["a", 1], [3, 3])
+    'a    1  '
+    """
     return "  ".join(str(c).ljust(w) for c, w in zip(cells, widths))
 
 

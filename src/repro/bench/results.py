@@ -1,6 +1,11 @@
 """Canonical versioned result schema for benchmark/sweep outputs.
 
-Every benchmark emits one JSON payload of this shape::
+Two versions coexist (see ``docs/EXPERIMENTS.md`` for the changelog):
+``repro.bench.result/v1`` for single-cache sweeps, and
+``repro.bench.result/v2`` — a strict superset whose records may carry
+tier fields (``arbiter``/``budget``/``n_tenants``) and a ``tenants`` list
+of per-tenant sub-records.  Every benchmark emits one JSON payload of
+this shape::
 
     {
       "schema": "repro.bench.result/v1",
@@ -36,10 +41,17 @@ import time
 
 import jax
 
-__all__ = ["SCHEMA_VERSION", "RESULTS_DIR", "provenance", "build_payload",
-           "validate", "save", "load"]
+__all__ = ["SCHEMA_VERSION", "SCHEMA_V2", "SCHEMA_VERSIONS", "RESULTS_DIR",
+           "provenance", "build_payload", "validate", "save", "load"]
 
 SCHEMA_VERSION = "repro.bench.result/v1"
+# v2 = v1 plus multi-tenant tier cells: records may carry "arbiter" /
+# "budget" / "n_tenants" and a "tenants" list of per-tenant sub-records
+# ({"tenant": int, "metrics": {...}}, metrics checked like record metrics,
+# per-seed lists aligned with the record's seed axis).  v1 payloads stay
+# valid and are still written by the single-cache sweeps.
+SCHEMA_V2 = "repro.bench.result/v2"
+SCHEMA_VERSIONS = (SCHEMA_VERSION, SCHEMA_V2)
 
 RESULTS_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
 
@@ -48,6 +60,11 @@ _RECORD_OPTIONAL = {
     "T": numbers.Integral, "K": numbers.Integral,
     "wall_s": numbers.Real,
 }
+_RECORD_OPTIONAL_V2 = dict(
+    _RECORD_OPTIONAL,
+    arbiter=str, budget=numbers.Integral, budget_label=str,
+    n_tenants=numbers.Integral,
+)
 _PROVENANCE_KEYS = {"git_sha": str, "jax": str, "x64": bool,
                     "backend": str, "device_count": numbers.Integral}
 
@@ -77,9 +94,21 @@ def provenance() -> dict:
 
 def build_payload(bench: str, *, config: dict, records: list,
                   extras: dict | None = None,
-                  wall_s: float | None = None) -> dict:
+                  wall_s: float | None = None,
+                  schema: str = SCHEMA_VERSION) -> dict:
+    """Assemble (but do not validate) one canonical payload; pass
+    ``schema=SCHEMA_V2`` for tier results with per-tenant records.
+
+    >>> p = build_payload("demo", config={}, records=[
+    ...     {"metrics": {"miss_ratio": [0.5]}, "seeds": [0]}])
+    >>> validate(p)["schema"]
+    'repro.bench.result/v1'
+    """
+    if schema not in SCHEMA_VERSIONS:
+        raise ValueError(
+            f"unknown schema {schema!r}; known: {list(SCHEMA_VERSIONS)}")
     return {
-        "schema": SCHEMA_VERSION,
+        "schema": schema,
         "bench": bench,
         "created_unix": time.time(),
         "provenance": provenance(),
@@ -107,29 +136,53 @@ def _check_metric_value(path, v):
     _fail(path, f"expected a number or list of numbers, got {type(v).__name__}")
 
 
-def _check_record(path: str, rec):
+def _check_metrics_dict(path: str, metrics, seeds=None):
+    if not isinstance(metrics, dict) or not metrics:
+        _fail(path, "must be a non-empty dict")
+    for k, v in metrics.items():
+        if not isinstance(k, str):
+            _fail(path, f"metric names must be str, got {k!r}")
+        _check_metric_value(f"{path}[{k!r}]", v)
+        # per-seed metric lists must line up with the seed axis
+        if seeds is not None and isinstance(v, list) and len(v) != len(seeds):
+            _fail(f"{path}[{k!r}]",
+                  f"length {len(v)} != len(seeds) {len(seeds)}")
+
+
+def _check_tenants(path: str, tenants, seeds):
+    """v2: per-tenant sub-records inside one tier cell."""
+    if not isinstance(tenants, list) or not tenants:
+        _fail(path, "must be a non-empty list of per-tenant records")
+    for j, ten in enumerate(tenants):
+        tp = f"{path}[{j}]"
+        if not isinstance(ten, dict):
+            _fail(tp, f"tenant record must be a dict, got {type(ten).__name__}")
+        if not isinstance(ten.get("tenant"), numbers.Integral):
+            _fail(f"{tp}.tenant", "missing or non-int tenant index")
+        if "metrics" not in ten:
+            _fail(tp, "tenant record missing 'metrics'")
+        _check_metrics_dict(f"{tp}.metrics", ten["metrics"], seeds)
+
+
+def _check_record(path: str, rec, v2: bool = False):
     if not isinstance(rec, dict):
         _fail(path, f"record must be a dict, got {type(rec).__name__}")
     if "metrics" not in rec:
         _fail(path, "record missing 'metrics'")
-    metrics = rec["metrics"]
-    if not isinstance(metrics, dict) or not metrics:
-        _fail(f"{path}.metrics", "must be a non-empty dict")
-    for k, v in metrics.items():
-        if not isinstance(k, str):
-            _fail(f"{path}.metrics", f"metric names must be str, got {k!r}")
-        _check_metric_value(f"{path}.metrics[{k!r}]", v)
+    seeds = None
     if "seeds" in rec:
         seeds = rec["seeds"]
         if (not isinstance(seeds, list) or
                 not all(isinstance(s, numbers.Integral) for s in seeds)):
             _fail(f"{path}.seeds", "must be a list of ints")
-        # per-seed metric lists must line up with the seed axis
-        for k, v in metrics.items():
-            if isinstance(v, list) and len(v) != len(seeds):
-                _fail(f"{path}.metrics[{k!r}]",
-                      f"length {len(v)} != len(seeds) {len(seeds)}")
-    for key, typ in _RECORD_OPTIONAL.items():
+    _check_metrics_dict(f"{path}.metrics", rec["metrics"], seeds)
+    if "tenants" in rec:
+        if not v2:
+            _fail(f"{path}.tenants",
+                  f"per-tenant records require schema {SCHEMA_V2!r}")
+        _check_tenants(f"{path}.tenants", rec["tenants"], seeds)
+    optional = _RECORD_OPTIONAL_V2 if v2 else _RECORD_OPTIONAL
+    for key, typ in optional.items():
         if key in rec and not isinstance(rec[key], typ):
             _fail(f"{path}.{key}",
                   f"expected {typ.__name__}, got {type(rec[key]).__name__}")
@@ -140,9 +193,10 @@ def validate(payload: dict) -> dict:
     Raises ``ValueError`` naming the offending path otherwise."""
     if not isinstance(payload, dict):
         _fail("$", f"payload must be a dict, got {type(payload).__name__}")
-    if payload.get("schema") != SCHEMA_VERSION:
+    if payload.get("schema") not in SCHEMA_VERSIONS:
         _fail("$.schema",
-              f"expected {SCHEMA_VERSION!r}, got {payload.get('schema')!r}")
+              f"expected one of {list(SCHEMA_VERSIONS)}, "
+              f"got {payload.get('schema')!r}")
     for key, typ in (("bench", str), ("created_unix", numbers.Real),
                      ("provenance", dict), ("config", dict),
                      ("records", list), ("extras", dict),
@@ -159,8 +213,9 @@ def validate(payload: dict) -> dict:
         if not isinstance(prov[key], typ):
             _fail(f"$.provenance.{key}", f"expected {typ.__name__}, "
                                          f"got {type(prov[key]).__name__}")
+    v2 = payload["schema"] == SCHEMA_V2
     for i, rec in enumerate(payload["records"]):
-        _check_record(f"$.records[{i}]", rec)
+        _check_record(f"$.records[{i}]", rec, v2=v2)
     return payload
 
 

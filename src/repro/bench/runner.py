@@ -24,15 +24,22 @@ import numpy as np
 from ..core import Engine
 from ..core.policy import Request
 from . import report, results
-from .scenario import Scenario, Sweep
+from .scenario import Scenario, Sweep, TierScenario, TierSweep
 
-__all__ = ["materialize", "run_sweep", "SweepResult"]
+__all__ = ["materialize", "run_sweep", "SweepResult",
+           "run_tier_sweep", "TierSweepResult"]
 
 
-def materialize(scenario: Scenario, seeds) -> Request:
-    """Build the ``[S, T]`` request batch for one scenario: traces from the
-    registry (one lane per seed) with the scenario's size/cost tables
-    gathered per request."""
+def materialize(scenario, seeds) -> Request:
+    """Build the ``[S, T]`` request batch for one scenario: traces from
+    the registry (one lane per seed) with the scenario's size/cost tables
+    gathered per request.  A :class:`TierScenario` materializes the same
+    way, one ``[T, N]`` interleaved stream per seed (``[S, T, N]``).
+
+    >>> sc = Scenario("z", trace="zipf(N=64,alpha=1.0)", T=50, K=(8,))
+    >>> materialize(sc, seeds=(0, 1)).key.shape
+    (2, 50)
+    """
     spec = scenario.trace_spec()
     keys = spec.generate_batch(scenario.T, seeds)
     sizes = scenario.size_table()
@@ -96,6 +103,104 @@ class SweepResult:
         return payload
 
 
+def _tier_cell_record(pol, arb, sc, B, label, seeds, res, wall_s) -> dict:
+    """One v2 record: aggregate (byte-/cost-weighted) tier metrics plus a
+    per-tenant sub-record list."""
+    n = sc.n_tenants
+    agg = {
+        "miss_ratio": _per_seed(res.agg_miss_ratio),
+        "byte_miss_ratio": _per_seed(res.agg_byte_miss_ratio),
+        "penalty_ratio": _per_seed(res.agg_penalty_ratio),
+        "avg_k_total": _per_seed(
+            np.asarray(res.avg_k, dtype=np.float64).sum(axis=-1)),
+    }
+    per_tenant = {
+        "miss_ratio": np.atleast_2d(np.asarray(res.miss_ratio)),
+        "byte_miss_ratio": np.atleast_2d(np.asarray(res.byte_miss_ratio)),
+        "avg_k": np.atleast_2d(np.asarray(res.avg_k, dtype=np.float64)),
+    }
+    tenants = [
+        {"tenant": t,
+         "metrics": {name: [float(v) for v in vals[:, t]]
+                     for name, vals in per_tenant.items()}}
+        for t in range(n)]
+    return {
+        "policy": pol, "arbiter": arb, "scenario": sc.name,
+        "trace": sc.trace, "T": int(sc.T), "budget": int(B),
+        "budget_label": label, "n_tenants": n,
+        "seeds": [int(s) for s in seeds],
+        "metrics": agg, "tenants": tenants, "wall_s": float(wall_s),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSweepResult:
+    """Executed tier sweep: config + one v2 record per grid cell."""
+
+    sweep: TierSweep
+    records: list
+    wall_s: float
+
+    def select(self, **eq) -> list:
+        return report.select(self.records, **eq)
+
+    def metric(self, name: str, **eq) -> np.ndarray:
+        return report.seed_values(self.records, name, **eq)
+
+    def payload(self, extras: dict | None = None) -> dict:
+        return results.build_payload(
+            self.sweep.name, config=self.sweep.to_config(),
+            records=self.records, extras=extras, wall_s=self.wall_s,
+            schema=results.SCHEMA_V2)
+
+    def save(self, extras: dict | None = None, *,
+             results_dir: str | None = None) -> dict:
+        payload = self.payload(extras)
+        results.save(payload, results_dir=results_dir)
+        return payload
+
+
+def run_tier_sweep(sweep: TierSweep, *, engine: Engine | None = None,
+                   use_pallas: bool | None = None,
+                   progress=None) -> TierSweepResult:
+    """Execute every tier cell: one ``[S, T, N]`` batch per scenario
+    (shared across entries and budgets), one seed-vmapped
+    ``Engine.replay_tier`` call per (policy, arbiter, budget) cell,
+    emitting :data:`repro.bench.results.SCHEMA_V2` records.
+
+    >>> sw = TierSweep("doc", entries=(("dac", "greedy"),), seeds=(0,),
+    ...                scenarios=(TierScenario(
+    ...                    "flux", trace="tenants(N=64,n_tenants=2,lo=8)",
+    ...                    T=300, budget=(32,)),))
+    >>> rec = run_tier_sweep(sw).records[0]
+    >>> rec["n_tenants"], len(rec["tenants"]), rec["budget"]
+    (2, 2, 32)
+    """
+    from ..tier import CacheTier
+    engine = engine or Engine()
+    t_start = time.perf_counter()
+    records = []
+    reqs_cache = {}
+    for pol, arb, sc, B, label in sweep.cells():
+        if sc.name not in reqs_cache:
+            reqs_cache[sc.name] = materialize(sc, sweep.seeds)
+        reqs = reqs_cache[sc.name]
+        tier = CacheTier(pol, n_tenants=sc.n_tenants, budget=B,
+                         arbiter=arb, k0=sc.k0)
+        t0 = time.perf_counter()
+        res = engine.replay_tier(tier, reqs, use_pallas=use_pallas)
+        jax.block_until_ready(res.metrics.hits)
+        wall = time.perf_counter() - t0
+        records.append(_tier_cell_record(pol, arb, sc, B, label,
+                                         sweep.seeds, res, wall))
+        if progress is not None:
+            mr = np.mean(records[-1]["metrics"]["byte_miss_ratio"])
+            progress(f"[{sweep.name}] {sc.name} B={B}({label}) "
+                     f"{pol}+{arb}: byte_miss={mr:.3f} [{wall:.2f}s]")
+    return TierSweepResult(sweep=sweep, records=records,
+                           wall_s=time.perf_counter() - t_start)
+
+
 def run_sweep(sweep: Sweep, *, engine: Engine | None = None,
               mesh=None, use_pallas: bool | None = None,
               progress=None) -> SweepResult:
@@ -105,6 +210,13 @@ def run_sweep(sweep: Sweep, *, engine: Engine | None = None,
     shared across its policies and capacities; each cell is one vmapped
     metrics-only replay.  ``progress`` (e.g. ``print``) receives a line
     per cell.
+
+    >>> sw = Sweep("doc", policies=("lru",), seeds=(0,),
+    ...            scenarios=(Scenario("z", trace="zipf(N=64,alpha=1.0)",
+    ...                                T=200, K=(8,)),))
+    >>> res = run_sweep(sw)
+    >>> sorted(res.records[0]["metrics"])
+    ['byte_miss_ratio', 'hit_ratio', 'miss_ratio', 'penalty_ratio']
     """
     engine = engine or Engine(mesh=mesh)
     t_start = time.perf_counter()

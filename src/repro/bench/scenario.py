@@ -29,8 +29,8 @@ from ..data.traces import TraceSpec, fetch_costs, make_trace, object_sizes
 from ..specs import build_kwargs, parse_spec
 
 __all__ = [
-    "Scenario", "Sweep", "SIZE_MODELS", "COST_MODELS",
-    "SMALL_FRAC", "LARGE_FRAC", "k_for",
+    "Scenario", "Sweep", "TierScenario", "TierSweep",
+    "SIZE_MODELS", "COST_MODELS", "SMALL_FRAC", "LARGE_FRAC", "k_for",
 ]
 
 # cache-size regimes, as fractions of the trace id footprint (paper §V-B:
@@ -43,7 +43,12 @@ COST_MODELS = {"fetch": fetch_costs}
 
 
 def k_for(N: int, regime: str) -> int:
-    """Resolve a regime letter to a capacity: S = 0.1%, L = 10% of N."""
+    """Resolve a regime letter to a capacity: S = 0.1%, L = 10% of N
+    (paper §V-B), floored at 4 slots.
+
+    >>> k_for(8192, "S"), k_for(8192, "L")
+    (8, 819)
+    """
     if regime not in ("S", "L"):
         raise ValueError(f"capacity regime must be 'S' or 'L', got {regime!r}")
     frac = SMALL_FRAC if regime == "S" else LARGE_FRAC
@@ -61,7 +66,16 @@ def _model_fn(registry: dict, kind: str, spec: str, skip: tuple):
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """One workload: trace spec + size/cost model + capacity regime."""
+    """One workload: trace spec + size/cost model + capacity regime.
+
+    >>> sc = Scenario("wiki", trace="wiki", T=1000, K=("S", 256))
+    >>> sc.trace                        # canonicalized at construction
+    'shifting_zipf(N=8192,alpha=0.9,phases=4)'
+    >>> sc.capacities()                 # "S" resolved vs the id footprint
+    (8, 256)
+    >>> Scenario.from_config(sc.to_config()) == sc
+    True
+    """
 
     name: str
     trace: str                  # trace spec string (repro.data.make_trace)
@@ -72,7 +86,12 @@ class Scenario:
 
     def __post_init__(self):
         # normalize: canonical trace string, K always a tuple
-        object.__setattr__(self, "trace", str(make_trace(self.trace)))
+        spec = make_trace(self.trace)
+        if spec.is_tier:
+            raise ValueError(
+                f"scenario {self.name!r}: {spec.family!r} is a multi-tenant "
+                "trace family — use TierScenario (repro.tier workloads)")
+        object.__setattr__(self, "trace", str(spec))
         K = self.K if isinstance(self.K, (tuple, list)) else (self.K,)
         object.__setattr__(self, "K", tuple(K))
         if self.cost_model is not None and self.size_model is None:
@@ -131,6 +150,170 @@ class Scenario:
 
 
 @dataclasses.dataclass(frozen=True)
+class TierScenario:
+    """One multi-tenant workload: a tier trace spec (``tenants(...)``)
+    plus the shared budget(s) and optional size/cost models.
+
+    ``budget`` entries are explicit ints or the regime letters ``"S"`` /
+    ``"L"``, resolved against the *total* id footprint (``n_tenants x
+    n_keys``) exactly like :func:`k_for`.  ``k0`` overrides each tenant's
+    initial active size (default: the policy's own headroom rule, see
+    :class:`repro.tier.CacheTier`).
+
+    >>> sc = TierScenario("flux", trace="tenants(N=256,n_tenants=4)",
+    ...                   T=1000, budget=(64, "S"))
+    >>> sc.budgets()
+    (64, 16)
+    >>> sc.n_tenants
+    4
+    """
+
+    name: str
+    trace: str                  # tier trace spec (repro.data.make_trace)
+    T: int
+    budget: tuple = (256,)      # ints and/or regime letters "S"/"L"
+    k0: int | None = None
+    size_model: str | None = None
+    cost_model: str | None = None
+
+    def __post_init__(self):
+        spec = make_trace(self.trace)
+        if not spec.is_tier:
+            raise ValueError(
+                f"tier scenario {self.name!r} needs a multi-tenant trace "
+                f"family, got {spec.family!r} — use Scenario for those")
+        object.__setattr__(self, "trace", str(spec))
+        b = self.budget if isinstance(self.budget, (tuple, list)) \
+            else (self.budget,)
+        object.__setattr__(self, "budget", tuple(b))
+        if self.cost_model is not None and self.size_model is None:
+            raise ValueError(
+                f"tier scenario {self.name!r}: cost_model requires a "
+                "size_model")
+        if self.size_model is not None:
+            _model_fn(SIZE_MODELS, "size", self.size_model,
+                      skip=("n_objects",))
+        if self.cost_model is not None:
+            _model_fn(COST_MODELS, "cost", self.cost_model,
+                      skip=("sizes_bytes",))
+
+    def trace_spec(self) -> TraceSpec:
+        return make_trace(self.trace)
+
+    @property
+    def n_tenants(self) -> int:
+        return self.trace_spec().n_tenants
+
+    def budgets(self) -> tuple:
+        """Budget entries with regime letters resolved against the total
+        footprint (``n_tenants * n_keys``), floored at four slots per
+        tenant (room for every tenant's initial active size — the same
+        floor :func:`k_for` applies to a single cache)."""
+        spec = self.trace_spec()
+        total = spec.n_tenants * spec.n_keys
+        return tuple(max(4 * self.n_tenants, k_for(total, b))
+                     if isinstance(b, str) else int(b)
+                     for b in self.budget)
+
+    def budget_label(self, b) -> str:
+        return b if isinstance(b, str) else str(int(b))
+
+    def size_table(self) -> np.ndarray | None:
+        """Per-object-id size table ``[n_keys]`` (bytes), shared by every
+        tenant (they address the same id space through private hot-set
+        permutations)."""
+        if self.size_model is None:
+            return None
+        fn, kw = _model_fn(SIZE_MODELS, "size", self.size_model,
+                           skip=("n_objects",))
+        return fn(n_objects=self.trace_spec().n_keys, **kw)
+
+    def cost_table(self, sizes: np.ndarray) -> np.ndarray | None:
+        if self.cost_model is None:
+            return None
+        fn, kw = _model_fn(COST_MODELS, "cost", self.cost_model,
+                           skip=("sizes_bytes",))
+        return fn(sizes, **kw)
+
+    def to_config(self) -> dict:
+        return {"name": self.name, "trace": self.trace, "T": self.T,
+                "budget": list(self.budget), "k0": self.k0,
+                "size_model": self.size_model,
+                "cost_model": self.cost_model}
+
+    @classmethod
+    def from_config(cls, cfg: dict) -> "TierScenario":
+        return cls(name=cfg["name"], trace=cfg["trace"], T=cfg["T"],
+                   budget=tuple(cfg["budget"]), k0=cfg.get("k0"),
+                   size_model=cfg.get("size_model"),
+                   cost_model=cfg.get("cost_model"))
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSweep:
+    """The tier evaluation grid: (policy, arbiter) entries x tier
+    scenarios x budgets x seeds.
+
+    Each ``entries`` element is a ``(policy_spec, arbiter_spec)`` pair —
+    e.g. ``("dac", "greedy")`` for the arbitrated tier,
+    ``("lru", "static")`` for a statically-partitioned baseline.
+
+    >>> sw = TierSweep("demo", entries=(("dac", "greedy"),),
+    ...                scenarios=(TierScenario(
+    ...                    "flux", trace="tenants(N=256,n_tenants=2)",
+    ...                    T=500),))
+    >>> TierSweep.from_config(sw.to_config()) == sw
+    True
+    """
+
+    name: str
+    entries: tuple              # of (policy_spec, arbiter_spec) pairs
+    scenarios: tuple            # of TierScenario
+    seeds: tuple = (0,)
+    # (no `observe` knob: tier records always carry per-tenant time-mean
+    # occupancy `avg_k`; the per-step trace is a replay_tier concern)
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "entries",
+            tuple((str(p), str(a)) for p, a in self.entries))
+        object.__setattr__(self, "scenarios", tuple(self.scenarios))
+        object.__setattr__(self, "seeds",
+                           tuple(int(s) for s in self.seeds))
+        if not self.entries:
+            raise ValueError("tier sweep needs at least one (policy, "
+                             "arbiter) entry")
+        if not self.scenarios:
+            raise ValueError("tier sweep needs at least one scenario")
+        if not self.seeds:
+            raise ValueError("tier sweep needs at least one seed")
+        names = [sc.name for sc in self.scenarios]
+        if len(set(names)) != len(names):
+            raise ValueError(f"scenario names must be unique, got {names}")
+
+    def cells(self):
+        """Iterate the grid: (policy, arbiter, scenario, budget, label)."""
+        for sc in self.scenarios:
+            for b_spec, B in zip(sc.budget, sc.budgets()):
+                for pol, arb in self.entries:
+                    yield pol, arb, sc, B, sc.budget_label(b_spec)
+
+    def to_config(self) -> dict:
+        return {"name": self.name,
+                "entries": [list(e) for e in self.entries],
+                "scenarios": [sc.to_config() for sc in self.scenarios],
+                "seeds": list(self.seeds)}
+
+    @classmethod
+    def from_config(cls, cfg: dict) -> "TierSweep":
+        return cls(name=cfg["name"],
+                   entries=tuple(tuple(e) for e in cfg["entries"]),
+                   scenarios=tuple(TierScenario.from_config(s)
+                                   for s in cfg["scenarios"]),
+                   seeds=tuple(cfg["seeds"]))
+
+
+@dataclasses.dataclass(frozen=True)
 class Sweep:
     """The evaluation grid: policies x scenarios x capacities x seeds.
 
@@ -138,6 +321,14 @@ class Sweep:
     the runner vmaps inside one jitted replay per (policy, scenario, K)
     cell; ``observe=True`` additionally collects policy observables (e.g.
     DAC's adapted size) and reports their per-seed time means.
+
+    >>> sw = Sweep("demo", policies=("lru", "dac"),
+    ...            scenarios=(Scenario("z", trace="zipf(N=64,alpha=1.0)",
+    ...                                T=100, K=(8,)),), seeds=(0, 1))
+    >>> [(pol, K) for pol, _, K, _ in sw.cells()]
+    [('lru', 8), ('dac', 8)]
+    >>> Sweep.from_config(sw.to_config()) == sw
+    True
     """
 
     name: str

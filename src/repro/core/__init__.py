@@ -44,7 +44,17 @@ def make_policy(spec) -> Policy:
     """Build a policy from a spec string: ``"lru"``, ``"dac"``,
     ``"dac(eps=0.5,growth=4)"``, ... — registry name (or alias) plus
     optional constructor kwargs (coerced to the parameter's declared
-    type; see :mod:`repro.specs`).  Policy instances pass through."""
+    type; see :mod:`repro.specs`).  Policy instances pass through.
+
+    >>> make_policy("dac(eps=0.25,growth=2)")
+    DynamicAdaptiveClimb(eps=0.25, growth=2, k_min=2)
+    >>> make_policy("2q").name           # aliases resolve
+    'twoq'
+    >>> make_policy("dac(nope=1)")
+    Traceback (most recent call last):
+        ...
+    ValueError: unknown parameter 'nope' for policy 'dynamicadaptiveclimb'; accepts: ['eps', 'growth', 'k_min']
+    """
     if isinstance(spec, Policy):
         return spec
     name, argstr = parse_spec(spec)

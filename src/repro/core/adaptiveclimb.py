@@ -21,6 +21,17 @@ from .policy import EMPTY, Policy, Request, rank_step, step_info
 
 
 class AdaptiveClimb(Policy):
+    """Algorithm 1: CLIMB with an adaptive jump distance — hits promote by
+    ``jump`` ranks (shrinking toward 1 on a hit streak), misses insert at
+    rank ``K - jump`` (growing toward K on a miss streak).  See
+    ``docs/PAPER_MAPPING.md`` for the line-by-line mapping.
+
+    >>> from repro.core import Engine
+    >>> int(Engine().replay("adaptiveclimb", [0, 1, 0, 2, 0, 1, 2, 0], K=2,
+    ...                     collect_info=False).metrics.hits)
+    2
+    """
+
     name = "adaptiveclimb"
 
     def init(self, K: int) -> dict:

@@ -55,6 +55,14 @@ def _first_empty(keys):
 
 
 class FIFO(Policy):
+    """First-in-first-out ring buffer: misses overwrite the oldest
+    insertion; hits touch nothing.
+
+    >>> from repro.core import Engine
+    >>> int(Engine().replay("fifo", [0, 1, 0, 2, 0, 1, 2, 0], K=2,
+    ...                     collect_info=False).metrics.hits)
+    1
+    """
     name = "fifo"
 
     def init(self, K: int) -> dict:
@@ -74,6 +82,14 @@ class FIFO(Policy):
 
 
 class LRU(Policy):
+    """Least-recently-used: every hit refreshes a per-slot timestamp,
+    misses evict the stalest slot.
+
+    >>> from repro.core import Engine
+    >>> int(Engine().replay("lru", [0, 1, 0, 2, 0, 1, 2, 0], K=2,
+    ...                     collect_info=False).metrics.hits)
+    2
+    """
     name = "lru"
 
     def init(self, K: int) -> dict:
@@ -98,8 +114,15 @@ class LRU(Policy):
 
 
 class BLRU(Policy):
-    """LRU with buffered (lazy) promotion: a hit refreshes recency only if the
-    entry's recorded recency is older than ``K//8`` requests."""
+    """LRU with buffered (lazy) promotion: a hit refreshes recency only
+    if the entry's recorded recency is older than ``K // lag_div``
+    requests (Yang et al.'s B-LRU churn reduction).
+
+    >>> from repro.core import Engine
+    >>> int(Engine().replay("blru", [0, 1, 0, 2, 0, 1, 2, 0], K=2,
+    ...                     collect_info=False).metrics.hits)
+    2
+    """
 
     name = "blru"
 
@@ -126,7 +149,14 @@ class BLRU(Policy):
 
 
 class Climb(Policy):
-    """Classic CLIMB: hit swaps one rank up; miss replaces the bottom."""
+    """Classic CLIMB: a hit swaps the entry one rank up; a miss replaces
+    the bottom rank in place.
+
+    >>> from repro.core import Engine
+    >>> int(Engine().replay("climb", [0, 1, 0, 2, 0, 1, 2, 0], K=2,
+    ...                     collect_info=False).metrics.hits)
+    0
+    """
 
     name = "climb"
 
@@ -148,6 +178,14 @@ class Climb(Policy):
 
 
 class LFU(Policy):
+    """Least-frequently-used over in-cache counts (history lost on
+    eviction); ties break toward the lowest slot index.
+
+    >>> from repro.core import Engine
+    >>> int(Engine().replay("lfu", [0, 1, 0, 2, 0, 1, 2, 0], K=2,
+    ...                     collect_info=False).metrics.hits)
+    3
+    """
     name = "lfu"
 
     def init(self, K: int) -> dict:
@@ -170,6 +208,14 @@ class LFU(Policy):
 
 
 class Clock(Policy):
+    """Second-chance CLOCK: the hand sweeps past referenced slots,
+    clearing their bits, and evicts the first unreferenced one.
+
+    >>> from repro.core import Engine
+    >>> int(Engine().replay("clock", [0, 1, 0, 2, 0, 1, 2, 0], K=2,
+    ...                     collect_info=False).metrics.hits)
+    2
+    """
     name = "clock"
 
     def init(self, K: int) -> dict:
@@ -207,8 +253,15 @@ class Clock(Policy):
 
 
 class Sieve(Policy):
-    """SIEVE (Yang et al. 2023): FIFO order, visited bits, hand sweeps from
-    tail (oldest) toward head clearing visited bits; survivors do not move."""
+    """SIEVE (Yang et al. 2023): FIFO order, visited bits, hand sweeps
+    from tail (oldest) toward head clearing visited bits; survivors do
+    not move.
+
+    >>> from repro.core import Engine
+    >>> int(Engine().replay("sieve", [0, 1, 0, 2, 0, 1, 2, 0], K=2,
+    ...                     collect_info=False).metrics.hits)
+    3
+    """
 
     name = "sieve"
 
@@ -266,7 +319,14 @@ class Sieve(Policy):
 
 
 class TwoQ(Policy):
-    """Full 2Q: A1in FIFO (K/4), A1out ghost keys (K/2), Am LRU (rest)."""
+    """Full 2Q: A1in FIFO (``K/4``), A1out ghost keys (``K/2``), Am LRU
+    (the rest); a ghost hit promotes straight into Am.
+
+    >>> from repro.core import Engine
+    >>> int(Engine().replay("twoq", [0, 1, 0, 2, 0, 1, 2, 0], K=2,
+    ...                     collect_info=False).metrics.hits)
+    2
+    """
 
     name = "twoq"
 
@@ -342,7 +402,14 @@ class TwoQ(Policy):
 
 
 class ARC(Policy):
-    """Adaptive Replacement Cache (Megiddo & Modha 2003, Fig. 4)."""
+    """Adaptive Replacement Cache (Megiddo & Modha 2003, Fig. 4): T1/T2
+    with B1/B2 ghost lists and the adaptive target ``p``.
+
+    >>> from repro.core import Engine
+    >>> int(Engine().replay("arc", [0, 1, 0, 2, 0, 1, 2, 0], K=2,
+    ...                     collect_info=False).metrics.hits)
+    3
+    """
 
     name = "arc"
 
@@ -502,7 +569,14 @@ class ARC(Policy):
 
 
 class TinyLFU(Policy):
-    """LRU eviction + count-min-sketch admission (window halving)."""
+    """LRU eviction + count-min-sketch admission filter with periodic
+    halving (window ``window_factor * K``).
+
+    >>> from repro.core import Engine
+    >>> int(Engine().replay("tinylfu", [0, 1, 0, 2, 0, 1, 2, 0], K=2,
+    ...                     collect_info=False).metrics.hits)
+    4
+    """
 
     name = "tinylfu"
 
@@ -578,7 +652,14 @@ class TinyLFU(Policy):
 
 
 class Hyperbolic(Policy):
-    """Hyperbolic caching: evict min frequency/age (exact, unsampled)."""
+    """Hyperbolic caching: evict the minimum frequency/age priority
+    (exact, unsampled).
+
+    >>> from repro.core import Engine
+    >>> int(Engine().replay("hyperbolic", [0, 1, 0, 2, 0, 1, 2, 0], K=2,
+    ...                     collect_info=False).metrics.hits)
+    2
+    """
 
     name = "hyperbolic"
 

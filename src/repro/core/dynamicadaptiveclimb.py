@@ -43,6 +43,22 @@ from .policy import EMPTY, Policy, Request, rank_step, step_info
 
 
 class DynamicAdaptiveClimb(Policy):
+    """Algorithm 2: AdaptiveClimb plus the jump'-driven dynamic resizing.
+
+    ``eps`` scales the halving threshold (line 2.36), ``growth`` sets the
+    allocation headroom (``K_max = K * growth``), ``k_min`` floors the
+    active size.  See ``docs/PAPER_MAPPING.md`` for the line-by-line
+    mapping and the documented post-resize-state choices.
+
+    >>> from repro.core import Engine
+    >>> res = Engine().replay("dac(eps=0.5,growth=4)", [0, 1] * 20, K=4,
+    ...                       observe=True)
+    >>> int(res.metrics.hits)
+    38
+    >>> int(res.obs["k"][-1])   # hits concentrate -> the cache halved
+    2
+    """
+
     name = "dynamicadaptiveclimb"
 
     def __init__(self, eps: float = 0.5, growth: int = 4, k_min: int = 2):
@@ -51,6 +67,13 @@ class DynamicAdaptiveClimb(Policy):
         self.k_min = int(k_min)
 
     def init(self, K: int) -> dict:
+        """Fresh state at initial active size ``K`` (array width
+        ``K * growth``).
+
+        >>> st = DynamicAdaptiveClimb(growth=2).init(4)
+        >>> st["cache"].shape, int(st["k"]), int(st["jump"])
+        ((8,), 4, 4)
+        """
         K_max = K * self.growth
         return {
             "cache": jnp.full((K_max,), EMPTY, dtype=jnp.int32),
@@ -60,14 +83,35 @@ class DynamicAdaptiveClimb(Policy):
         }
 
     def observables(self, state):
+        """Per-step signals the engine collects under ``observe=True``:
+        the active size ``k`` and the ``jump`` controller."""
         return {"k": state["k"], "jump": state["jump"]}
 
-    def step(self, state, req: Request):
-        K_max = state["cache"].shape[0]
+    def _plan(self, K_max: int, budgeted: bool):
+        """Build the Alg. 2 control law for :func:`rank_step`.
+
+        ``budgeted=False`` is the paper's law: grow iff ``jump`` saturates
+        at ``2k`` and ``2k <= K_max``.  ``budgeted=True`` threads one extra
+        control scalar — a dynamic capacity cap ``cap`` (granted by an
+        external arbiter, e.g. ``repro.tier``) — and the doubling becomes
+        ``k -> min(2k, cap)``: denied when ``cap == k``, partially granted
+        when ``k < cap < 2k``.  Everything else is byte-for-byte the same
+        arithmetic.  The vanilla law is reproduced exactly whenever the
+        cap never truncates a doubling it would have allowed — i.e. the
+        cap per step is either ``>= 2k`` or ``<= k``.  That is precisely
+        what the tier's ``arbiter("static")`` emits (``2k`` while
+        ``2k <= share``, else ``k``), which makes the static tier
+        bit-identical to independent vanilla caches for *any* share; a
+        cap merely pinned at a constant can instead yield one partial
+        grow where vanilla denies (e.g. a non-power-of-two ``growth``).
+        """
         eps, k_min = self.eps, self.k_min
 
         def plan(hit, i, scalars):
-            jump, jump2, k = scalars
+            if budgeted:
+                jump, jump2, k, cap = scalars
+            else:
+                jump, jump2, k = scalars
             half = k // 2
 
             # --- hit path ----------------------------------------------
@@ -100,11 +144,18 @@ class DynamicAdaptiveClimb(Policy):
             jump2 = jnp.where(jump == 0, 0, jump2)
             shrink_thresh = -jnp.ceil(
                 eps * half.astype(jnp.float32)).astype(jnp.int32)
-            grow = (jump >= 2 * k) & (2 * k <= K_max)
+            if budgeted:
+                # the arbiter's cap gates (and may partially grant) the
+                # doubling; cap == k denies, k < cap < 2k grants part
+                k_grow = jnp.minimum(2 * k, jnp.minimum(cap, K_max))
+                grow = (jump >= 2 * k) & (k_grow > k)
+            else:
+                k_grow = 2 * k
+                grow = (jump >= 2 * k) & (2 * k <= K_max)
             shrink = ((~grow) & (jump <= -half) & (jump2 <= shrink_thresh)
                       & (half >= k_min))
 
-            k_new = jnp.where(grow, 2 * k, jnp.where(shrink, half, k))
+            k_new = jnp.where(grow, k_grow, jnp.where(shrink, half, k))
             # deactivated ranks are wiped in the same fused pass
             wipe_from = jnp.where(shrink, k_new, jnp.int32(K_max))
             # Post-resize control state: after a grow, jump == 2k_old ==
@@ -119,10 +170,55 @@ class DynamicAdaptiveClimb(Policy):
             jump = jnp.where(shrink, 0,
                              jnp.clip(jump, -(k_new // 2), 2 * k_new))
             jump2 = jnp.where(resized, 0, jump2)
+            if budgeted:
+                return src, t, wipe_from, (jump, jump2, k_new, cap)
             return src, t, wipe_from, (jump, jump2, k_new)
 
+        return plan
+
+    def step(self, state, req: Request):
+        """One Alg. 2 request: hit/miss bookkeeping, promotion/insertion,
+        and the after-request resize checks — one fused
+        :func:`~repro.core.policy.rank_step`.
+
+        >>> import jax.numpy as jnp
+        >>> pol = DynamicAdaptiveClimb()
+        >>> st, info = pol.step(pol.init(4), Request.of(jnp.int32(7)))
+        >>> bool(info.hit), int(st["jump"])
+        (False, 5)
+        """
+        K_max = state["cache"].shape[0]
         cache, (jump, jump2, k), hit, evicted = rank_step(
             state["cache"], req.key,
-            (state["jump"], state["jump2"], state["k"]), plan)
+            (state["jump"], state["jump2"], state["k"]),
+            self._plan(K_max, budgeted=False))
         new_state = {"cache": cache, "jump": jump, "jump2": jump2, "k": k}
+        return new_state, step_info(hit, req, evicted_key=evicted)
+
+    def step_budgeted(self, state, req: Request):
+        """Like :meth:`step`, but growth is gated by a dynamic capacity cap
+        ``state["cap"]`` instead of the static array width: the doubling
+        becomes ``k -> min(2k, cap)`` (denied / granted / partially granted
+        by whoever sets the cap — the tier arbiter in ``repro.tier``).
+        ``cap`` rides through the fused step as a fourth control scalar
+        and is returned unchanged.  A cap that never truncates a doubling
+        (``>= 2k`` or ``<= k`` at every step — see :meth:`_plan`)
+        reproduces :meth:`step` bit-identically; pinning it to
+        ``K * growth`` does so for power-of-two ``growth``.
+
+        >>> import jax.numpy as jnp
+        >>> pol = DynamicAdaptiveClimb(growth=2)
+        >>> st = dict(pol.init(4), cap=jnp.int32(4))   # cap == k: never grow
+        >>> for key in [0, 1, 2, 3, 4, 5, 6, 7]:
+        ...     st, _ = pol.step_budgeted(st, Request.of(jnp.int32(key)))
+        >>> int(st["jump"]), int(st["k"])    # jump saturated at 2k, denied
+        (8, 4)
+        """
+        K_max = state["cache"].shape[0]
+        cache, (jump, jump2, k, cap), hit, evicted = rank_step(
+            state["cache"], req.key,
+            (state["jump"], state["jump2"], state["k"], state["cap"]),
+            self._plan(K_max, budgeted=True))
+        new_state = {"cache": cache, "jump": jump, "jump2": jump2, "k": k,
+                     "cap": cap}
         return new_state, step_info(hit, req, evicted_key=evicted)

@@ -33,6 +33,17 @@ FREE, LIR, HIR, GHOST = 0, 1, 2, 3
 
 
 class LIRS(Policy):
+    """LIRS (Jiang & Zhang 2002): inter-reference recency beats recency —
+    LIR blocks own most of the cache, HIR blocks pass through a small
+    residency window, ghosts remember evicted HIRs (see the module
+    docstring for the timestamp formulation).
+
+    >>> from repro.core import Engine
+    >>> int(Engine().replay("lirs", [0, 1, 0, 2, 0, 1, 2, 0], K=2,
+    ...                     collect_info=False).metrics.hits)
+    3
+    """
+
     name = "lirs"
 
     def __init__(self, hir_frac: float = 0.01, ghost_factor: int = 2):
@@ -144,6 +155,16 @@ class LIRS(Policy):
 
 
 class LHD(Policy):
+    """LHD (Beckmann et al. 2018): evict the slot with the lowest hit
+    density for its age bin (binned-age approximation, unsampled; see the
+    module docstring).
+
+    >>> from repro.core import Engine
+    >>> int(Engine().replay("lhd", [0, 1, 0, 2, 0, 1, 2, 0], K=2,
+    ...                     collect_info=False).metrics.hits)
+    2
+    """
+
     name = "lhd"
 
     def __init__(self, n_bins: int = 16, decay_every_factor: int = 4):

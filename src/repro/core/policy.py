@@ -48,7 +48,12 @@ class Request(NamedTuple):
     @classmethod
     def of(cls, keys, sizes=None, costs=None) -> "Request":
         """Build a ``Request`` from keys, broadcasting ``sizes``/``costs``
-        (scalars or per-key arrays; default 1 / 1.0)."""
+        (scalars or per-key arrays; default 1 / 1.0).
+
+        >>> r = Request.of([3, 1, 3], sizes=4096)
+        >>> r.key.shape, int(r.size[0]), float(r.cost[0])
+        ((3,), 4096, 1.0)
+        """
         if isinstance(keys, Request):
             if sizes is not None or costs is not None:
                 raise ValueError("pass sizes/costs inside the Request")
@@ -82,7 +87,14 @@ class StepInfo(NamedTuple):
 
 def step_info(hit, req: Request, evicted_key=EMPTY) -> StepInfo:
     """Assemble a ``StepInfo``: evictions only happen on misses, and a miss
-    charges the request's full size and cost."""
+    charges the request's full size and cost.
+
+    >>> info = step_info(False, Request.of(jnp.int32(7), sizes=100))
+    >>> int(info.bytes_missed), float(info.penalty)
+    (100, 1.0)
+    >>> int(step_info(True, Request.of(jnp.int32(7), sizes=100)).bytes_missed)
+    0
+    """
     hit = jnp.asarray(hit, jnp.bool_)
     return StepInfo(
         hit=hit,
@@ -94,7 +106,17 @@ def step_info(hit, req: Request, evicted_key=EMPTY) -> StepInfo:
 
 
 class Policy:
-    """Base class; subclasses implement init/step. Instances are static."""
+    """Base class for all replacement policies; subclasses implement
+    ``init(K) -> state`` and ``step(state, req) -> (state, StepInfo)``.
+    Instances are static: hashable and comparable by constructor fields,
+    so they work as ``jax.jit`` static arguments.
+
+    >>> from repro.core import make_policy
+    >>> make_policy("lru") == make_policy("lru")
+    True
+    >>> make_policy("dac(eps=0.25)") == make_policy("dac")
+    False
+    """
 
     name: str = "base"
 
@@ -124,7 +146,12 @@ class Policy:
 # ---------------------------------------------------------------------------
 
 def find(cache: jax.Array, key: jax.Array):
-    """Return (found, rank) of `key` in the rank-ordered `cache` array."""
+    """Return (found, rank) of `key` in the rank-ordered `cache` array.
+
+    >>> hit, i = find(jnp.array([5, 3, 9], jnp.int32), jnp.int32(3))
+    >>> bool(hit), int(i)
+    (True, 1)
+    """
     eq = cache == key
     return jnp.any(eq), jnp.argmax(eq).astype(jnp.int32)
 
@@ -132,14 +159,22 @@ def find(cache: jax.Array, key: jax.Array):
 def promote(cache: jax.Array, i: jax.Array, t: jax.Array, key: jax.Array):
     """Move `key` (currently at rank ``i``) to rank ``t`` (t <= i), shifting
     ranks [t, i-1] down one.  Also implements miss-insertion when ``i`` is the
-    eviction rank (the old occupant of rank ``i`` simply disappears)."""
+    eviction rank (the old occupant of rank ``i`` simply disappears).
+
+    >>> promote(jnp.array([5, 3, 9], jnp.int32), 2, 0, 9).tolist()
+    [9, 5, 3]
+    """
     r = jnp.arange(cache.shape[0], dtype=jnp.int32)
     rolled = jnp.roll(cache, 1)  # rolled[r] = cache[r-1]
     return jnp.where(r == t, key, jnp.where((r > t) & (r <= i), rolled, cache))
 
 
 def demote(cache: jax.Array, i: jax.Array, t: jax.Array, key: jax.Array):
-    """Move `key` from rank ``i`` down to rank ``t`` (t >= i); [i+1, t] shift up."""
+    """Move `key` from rank ``i`` down to rank ``t`` (t >= i); [i+1, t] shift up.
+
+    >>> demote(jnp.array([5, 3, 9], jnp.int32), 0, 2, 5).tolist()
+    [3, 9, 5]
+    """
     r = jnp.arange(cache.shape[0], dtype=jnp.int32)
     rolled = jnp.roll(cache, -1)  # rolled[r] = cache[r+1]
     return jnp.where(r == t, key, jnp.where((r >= i) & (r < t), rolled, cache))
@@ -188,6 +223,17 @@ def rank_step(cache: jax.Array, key: jax.Array, scalars: tuple, plan):
     under :func:`pallas_mode` the whole step — compare, iota-min reduce,
     scalar plan, rolled masked-select shift, wipe — is one Pallas kernel
     (one pass over the rank row in VMEM, interpret-mode on CPU).
+
+    A CLIMB-shaped plan (miss replaces the bottom rank in place):
+
+    >>> def plan(hit, i, scalars):
+    ...     src = jnp.where(hit, i, jnp.int32(2))
+    ...     t = jnp.where(hit, jnp.maximum(i - 1, 0), jnp.int32(2))
+    ...     return src, t, jnp.int32(3), ()
+    >>> cache = jnp.array([5, 3, 9], jnp.int32)
+    >>> new, _, hit, ev = rank_step(cache, jnp.int32(7), (), plan)
+    >>> new.tolist(), bool(hit), int(ev)
+    ([5, 3, 7], False, 9)
     """
     if _PALLAS_STEP.get():
         from ..kernels.policy_step import fused_policy_step

@@ -57,7 +57,13 @@ class Metrics(NamedTuple):
     """Per-lane replay totals, reduced inside the jitted replay program.
     ``requests``/``hits`` widen to int64 under x64 (multi-billion-request
     streams wrap int32); byte/cost totals accumulate in float32 (object
-    sizes in bytes overflow int32 over long traces)."""
+    sizes in bytes overflow int32 over long traces).
+
+    >>> from repro.core import Engine
+    >>> m = Engine().replay("lru", [0, 0, 1], K=2, collect_info=False).metrics
+    >>> int(m.requests), int(m.hits), float(m.bytes_missed)
+    (3, 1, 2.0)
+    """
 
     requests: jax.Array      # int32/int64 — trace length
     hits: jax.Array          # int32/int64
@@ -70,7 +76,15 @@ class Metrics(NamedTuple):
 class ReplayResult(NamedTuple):
     """Engine output: per-step ``StepInfo`` (leading dims match the input;
     ``None`` in metrics-only mode), per-lane ``Metrics``, and optional
-    stacked observables."""
+    stacked observables.
+
+    >>> from repro.core import Engine
+    >>> res = Engine().replay("lru", [0, 0, 0, 1], K=2)
+    >>> res.hit_ratio, res.miss_ratio
+    (0.5, 0.5)
+    >>> [bool(h) for h in res.hits]
+    [False, True, True, False]
+    """
 
     info: StepInfo | None
     metrics: Metrics
@@ -220,6 +234,11 @@ class Engine:
     ``use_pallas`` routes the rank-policy hot path through the fused Pallas
     policy-step kernel (overridable per call); slot-based policies are
     unaffected by the flag.
+
+    >>> import numpy as np
+    >>> res = Engine().replay("dac", np.zeros((2, 5), np.int32), K=4)
+    >>> res.miss_ratio.tolist()       # [B, T] batch -> per-lane ratios
+    [0.2, 0.2]
     """
 
     def __init__(self, mesh=None, axis: str = "data",
@@ -263,6 +282,26 @@ class Engine:
             reqs = jax.device_put(reqs, sharding)
         return _replay_batched(policy, reqs, K, observe, collect_info,
                                use_pallas)
+
+    def replay_tier(self, tier, requests, *, sizes=None, costs=None,
+                    observe: bool = False, use_pallas: bool | None = None):
+        """Replay an interleaved multi-tenant stream through a
+        :class:`repro.tier.CacheTier` (metrics-only, per-tenant
+        :class:`Metrics` + time-mean occupancy in the scan carry).
+
+        ``requests`` is ``[T, N]`` (one request per tenant per global
+        step) or ``[S, T, N]`` for a vmapped seed axis; returns a
+        :class:`repro.tier.TierResult`.  This is the first experiment
+        family the single-cache ``replay`` cannot express — tenants
+        compete for one budget, so their lanes are *not* independent.
+        """
+        from ..tier import CacheTier, replay_tier as _replay_tier
+        if not isinstance(tier, CacheTier):
+            raise TypeError(f"expected a CacheTier, got {type(tier).__name__}")
+        if use_pallas is None:
+            use_pallas = self.use_pallas
+        return _replay_tier(tier, requests, sizes=sizes, costs=costs,
+                            observe=observe, use_pallas=use_pallas)
 
     def replay_stream(self, policy, requests, K: int, *, sizes=None,
                       costs=None, chunk: int = 1 << 18,
@@ -340,13 +379,26 @@ class Engine:
 # ---------------------------------------------------------------------------
 
 def miss_ratio(hits) -> float:
+    """Miss ratio of a boolean hit mask (host-side convenience).
+
+    >>> miss_ratio([True, False, False, False])
+    0.75
+    """
     return float(1.0 - np.asarray(hits, dtype=np.float64).mean())
 
 
 def mrr(mr_algo: float, mr_fifo: float) -> float:
     """Miss-ratio reduction relative to FIFO (paper's signed definition).
     Both-zero is explicitly no-reduction (0.0) rather than falling through
-    either signed branch."""
+    either signed branch.
+
+    >>> mrr(0.2, 0.4)       # halved the misses
+    0.5
+    >>> mrr(0.4, 0.2)       # doubled them
+    -0.5
+    >>> mrr(0.0, 0.0)
+    0.0
+    """
     if mr_algo == 0.0 and mr_fifo == 0.0:
         return 0.0
     if mr_algo <= mr_fifo:

@@ -1,4 +1,6 @@
-from .traces import (DATASET_FAMILIES, TRACE_ALIASES, TRACES, TraceSpec,
-                     churn_trace, dataset_family, fetch_costs, make_trace,
-                     object_sizes, scan_mix_trace, shifting_zipf_trace,
-                     zipf_trace)
+"""Trace data layer: synthetic generators + the spec-string trace registry
+(see :mod:`repro.data.traces`)."""
+from .traces import (DATASET_FAMILIES, TIER_FAMILIES, TRACE_ALIASES, TRACES,
+                     TraceSpec, churn_trace, dataset_family, fetch_costs,
+                     make_trace, object_sizes, scan_mix_trace,
+                     shifting_zipf_trace, tenants_trace, zipf_trace)

@@ -27,8 +27,9 @@ from ..specs import build_kwargs, coerce_value, format_spec, parse_spec
 
 __all__ = [
     "zipf_trace", "shifting_zipf_trace", "scan_mix_trace", "churn_trace",
-    "dataset_family", "DATASET_FAMILIES", "object_sizes", "fetch_costs",
-    "TraceSpec", "make_trace", "TRACES", "TRACE_ALIASES",
+    "tenants_trace", "dataset_family", "DATASET_FAMILIES", "object_sizes",
+    "fetch_costs", "TraceSpec", "make_trace", "TRACES", "TRACE_ALIASES",
+    "TIER_FAMILIES",
 ]
 
 
@@ -39,7 +40,14 @@ def _zipf_pmf(N: int, alpha: float) -> np.ndarray:
 
 
 def zipf_trace(N: int, T: int, alpha: float, seed: int = 0) -> np.ndarray:
-    """IID Zipf(alpha) requests over N objects."""
+    """IID Zipf(alpha) requests over N objects.
+
+    >>> keys = zipf_trace(N=64, T=100, alpha=1.0, seed=0)
+    >>> keys.shape, keys.dtype.name, bool((keys < 64).all())
+    ((100,), 'int32', True)
+    >>> bool((keys == zipf_trace(N=64, T=100, alpha=1.0, seed=0)).all())
+    True
+    """
     rng = np.random.default_rng(seed)
     pmf = _zipf_pmf(N, alpha)
     return rng.choice(N, size=T, p=pmf).astype(np.int32)
@@ -52,6 +60,9 @@ def shifting_zipf_trace(N: int, T: int, alpha: float, phases: int,
     Models working-set churn: popular objects change identity abruptly.
     This is the regime where the paper claims DynamicAdaptiveClimb shines
     ("fluctuating working set sizes").
+
+    >>> shifting_zipf_trace(N=64, T=50, alpha=0.9, phases=2).shape
+    (50,)
     """
     rng = np.random.default_rng(seed)
     pmf = _zipf_pmf(N, alpha)
@@ -73,6 +84,11 @@ def scan_mix_trace(N: int, T: int, alpha: float, scan_frac: float,
     Scan keys live in a disjoint id range [N, 2N): a scan run that would
     pass 2N-1 wraps around *within* the cold range (modulo N on the
     offset), never back into the hot Zipf range [0, N).
+
+    >>> keys = scan_mix_trace(N=64, T=200, alpha=1.0, scan_frac=0.3,
+    ...                       scan_len=16)
+    >>> bool((keys < 128).all())       # ids span [0, 2N)
+    True
     """
     rng = np.random.default_rng(seed)
     out = zipf_trace(N, T, alpha, seed=seed + 1).astype(np.int64)
@@ -99,7 +115,11 @@ def churn_trace(N: int, T: int, alpha: float, mean_phase: int,
                 drift: float, seed: int = 0) -> np.ndarray:
     """Zipf with gradual popularity drift: each phase, a `drift` fraction of
     the hot set is rotated out (ids shift), the rest persists.  Closer to
-    production KV churn than full re-permutation."""
+    production KV churn than full re-permutation.
+
+    >>> churn_trace(N=64, T=50, alpha=1.0, mean_phase=20, drift=0.1).shape
+    (50,)
+    """
     rng = np.random.default_rng(seed)
     pmf = _zipf_pmf(N, alpha)
     perm = rng.permutation(N).astype(np.int32)
@@ -113,6 +133,46 @@ def churn_trace(N: int, T: int, alpha: float, mean_phase: int,
         draws = rng.choice(N, size=size, p=pmf)
         out[pos:pos + size] = perm[draws]
         pos += size
+    return out
+
+
+def tenants_trace(N: int, T: int, n_tenants: int, alpha: float = 0.9,
+                  period: int = 8192, duty: float = 0.25, lo: int = 64,
+                  alpha_lo: float = 1.6, seed: int = 0) -> np.ndarray:
+    """``[T, n_tenants]`` interleaved multi-tenant streams with
+    phase-shifted working-set fluctuation.
+
+    Each tenant alternates between a *wide* phase (working set = all ``N``
+    keys — the cache thrashes, DAC's ``jump`` saturates and demands
+    capacity) and a *narrow* phase (working set = ``lo`` keys — hits
+    concentrate, DAC shrinks and returns capacity).  Tenant ``t``'s phase
+    is shifted by ``t * period / n_tenants``, so at any instant roughly
+    ``duty * n_tenants`` tenants are wide while the rest are narrow: the
+    paper's §5 "fluctuating working set" regime, but *across* tenants —
+    total demand stays near-constant while its owner rotates, which is
+    exactly the workload where a shared budget beats static partitioning.
+
+    Wide-phase draws are Zipf(``alpha``) over all ``N`` keys (broad, weak
+    locality — capacity is what earns hits); narrow-phase draws are
+    Zipf(``alpha_lo``) over the ``lo``-key hot set (tight, strong locality
+    — a small cache suffices and the concentrated hits are exactly the
+    signal DAC's shrink rule keys on).  Both go through a private
+    per-tenant key permutation (all tenants address ``[0, N)`` but their
+    hot sets differ).  Deterministic in ``seed``.
+
+    >>> tenants_trace(N=64, T=10, n_tenants=4, seed=0).shape
+    (10, 4)
+    """
+    rng = np.random.default_rng(seed)
+    out = np.empty((T, n_tenants), np.int32)
+    i = np.arange(T)
+    wide_len = max(1, int(period * duty))
+    for t in range(n_tenants):
+        perm = rng.permutation(N).astype(np.int32)
+        wide = rng.choice(N, size=T, p=_zipf_pmf(N, alpha))
+        narrow = rng.choice(lo, size=T, p=_zipf_pmf(lo, alpha_lo))
+        phase = (i + (t * period) // n_tenants) % period
+        out[:, t] = perm[np.where(phase < wide_len, wide, narrow)]
     return out
 
 
@@ -150,7 +210,12 @@ TRACES = {
     "shifting_zipf": shifting_zipf_trace,
     "scan_mix": scan_mix_trace,
     "churn": churn_trace,
+    "tenants": tenants_trace,
 }
+
+# families whose generators emit [T, n_tenants] interleaved tier streams
+# (repro.tier.replay_tier input) rather than a single [T] key trace
+TIER_FAMILIES = frozenset({"tenants"})
 
 _RUNTIME_PARAMS = ("T", "seed")
 
@@ -179,6 +244,14 @@ class TraceSpec:
     ``params`` is stored as a tuple of ``(name, value)`` pairs in the
     generator's signature order, so specs are hashable and ``str(spec)``
     is canonical (parsing it back yields an equal spec).
+
+    >>> spec = make_trace("zipf(N=128,alpha=1.0)")
+    >>> str(spec), spec.n_keys, spec.is_tier
+    ('zipf(N=128,alpha=1.0)', 128, False)
+    >>> spec.generate(T=50, seed=3).shape
+    (50,)
+    >>> spec.generate_batch(T=50, seeds=(0, 1)).shape
+    (2, 50)
     """
 
     family: str
@@ -194,6 +267,18 @@ class TraceSpec:
         address ``[0, 2N)`` (cold scan keys live in ``[N, 2N)``)."""
         N = self.kwargs["N"]
         return 2 * N if self.family == "scan_mix" else N
+
+    @property
+    def is_tier(self) -> bool:
+        """True for multi-tenant families: ``generate`` returns a
+        ``[T, n_tenants]`` interleaved stream (``repro.tier`` input), not
+        a single ``[T]`` trace."""
+        return self.family in TIER_FAMILIES
+
+    @property
+    def n_tenants(self) -> int:
+        """Tenant-axis width for tier families; 1 for single-cache ones."""
+        return self.kwargs["n_tenants"] if self.is_tier else 1
 
     def __str__(self) -> str:
         return format_spec(self.family, self.kwargs)
@@ -215,7 +300,15 @@ def make_trace(spec) -> TraceSpec:
     generator parameter's declared type; unknown families, unknown
     parameters, and missing required parameters raise ``ValueError`` —
     the same contract as ``make_policy``.  ``TraceSpec`` instances pass
-    through."""
+    through.
+
+    >>> str(make_trace("wiki"))                 # alias expansion
+    'shifting_zipf(N=8192,alpha=0.9,phases=4)'
+    >>> str(make_trace("wiki(alpha=1.2)"))      # ... with overrides
+    'shifting_zipf(N=8192,alpha=1.2,phases=4)'
+    >>> make_trace("tenants(N=64,n_tenants=2)").n_tenants
+    2
+    """
     if isinstance(spec, TraceSpec):
         return spec
     name, argstr = parse_spec(spec)
@@ -246,7 +339,11 @@ def dataset_family(name: str, T: int = 200_000, n_traces: int = 3,
     """Return [n_traces, T] synthetic traces for one dataset family.
 
     Back-compat wrapper over the registry: ``make_trace(name)`` plus the
-    historical ``seed * 1000 + i`` per-trace seeding."""
+    historical ``seed * 1000 + i`` per-trace seeding.
+
+    >>> dataset_family("wiki", T=100, n_traces=2).shape
+    (2, 100)
+    """
     if name not in TRACE_ALIASES:
         raise ValueError(
             f"unknown dataset family {name!r}; known: {sorted(TRACE_ALIASES)}")
@@ -257,7 +354,12 @@ def dataset_family(name: str, T: int = 200_000, n_traces: int = 3,
 
 def object_sizes(n_objects: int, seed: int = 0,
                  median_kb: float = 16.0, sigma: float = 1.5) -> np.ndarray:
-    """Log-normal object sizes in bytes (wiki-like heavy tail)."""
+    """Log-normal object sizes in bytes (wiki-like heavy tail).
+
+    >>> sizes = object_sizes(1000, seed=0)
+    >>> sizes.shape, bool((sizes >= 1).all())
+    ((1000,), True)
+    """
     rng = np.random.default_rng(seed)
     kb = rng.lognormal(mean=np.log(median_kb), sigma=sigma, size=n_objects)
     return np.maximum(1, (kb * 1024).astype(np.int64))
@@ -268,6 +370,10 @@ def fetch_costs(sizes_bytes: np.ndarray, base_ms: float = 2.0,
     """Miss penalty (ms) for fetching an object from the backing store:
     a fixed round-trip plus a bandwidth term.  Feeds ``Request.cost`` so
     the engine's ``penalty_ratio`` measures latency-weighted misses, not
-    just request- or byte-weighted ones."""
+    just request- or byte-weighted ones.
+
+    >>> float(fetch_costs(np.array([0.0]), base_ms=2.0)[0])
+    2.0
+    """
     sizes_bytes = np.asarray(sizes_bytes, dtype=np.float64)
     return (base_ms + per_mb_ms * sizes_bytes / 2**20).astype(np.float32)

@@ -1,7 +1,7 @@
 """Recurrent blocks: Mamba selective SSM (jamba) and xLSTM cells (sLSTM +
 mLSTM).
 
-TPU adaptation notes (see DESIGN.md):
+TPU adaptation notes (kernel-layer context in ``docs/ARCHITECTURE.md``):
   * Mamba's CUDA selective-scan kernel fuses the recurrence to avoid
     materializing h[B,S,d_inner,d_state].  The TPU-native equivalent here is
     *chunking*: an outer `lax.scan` over time-chunks carries h[B,di,ds] while

@@ -1,6 +1,8 @@
 """Bounded KV-cache slot pool managed by DynamicAdaptiveClimb.
 
-The paper's control law, mapped 1:1 onto KV-cache management (DESIGN.md §2):
+The paper's control law, mapped 1:1 onto KV-cache management (see
+``docs/ARCHITECTURE.md``, serving section, and ``docs/PAPER_MAPPING.md``
+for the Alg. 2 line mapping):
 
   * The per-layer slot table is the cache.  ``rank2slot`` is the paper's
     rank-ordered list; its entries are *physical slot ids* into the KV slot

@@ -1,0 +1,31 @@
+"""Multi-tenant shared-budget cache tier driven by DAC resize signals.
+
+The paper's headline contribution — DynamicAdaptiveClimb returns capacity
+it doesn't need and claims capacity when it thrashes — only matters when
+the capacity has somewhere to go.  This package gives it a marketplace:
+N tenant caches share one global slot budget, shrinks feed a free pool,
+and saturated ``jump`` controllers draw their doublings from it through a
+pluggable arbiter (``static`` / ``greedy`` / ``proportional``).
+
+>>> import numpy as np
+>>> from repro.data.traces import tenants_trace
+>>> tier = CacheTier("dac", n_tenants=4, budget=64, arbiter="greedy")
+>>> reqs = tenants_trace(N=64, T=500, n_tenants=4, period=128, lo=8)
+>>> res = replay_tier(tier, reqs, observe=True)   # [T, N] stream
+>>> res.miss_ratio.shape                          # per-tenant ratios
+(4,)
+>>> bool(np.asarray(res.obs["k"]).sum(axis=1).max() <= 64)   # conservation
+True
+
+See ``docs/ARCHITECTURE.md`` (tier section) and the ``tenant_sweep``
+benchmark for the DAC-arbitrated vs statically-partitioned comparison.
+"""
+from .arbiter import (ARBITERS, Arbiter, GreedyArbiter, ProportionalArbiter,
+                      StaticArbiter, make_arbiter)
+from .tier import CacheTier, TierResult, replay_tier
+
+__all__ = [
+    "CacheTier", "TierResult", "replay_tier",
+    "Arbiter", "StaticArbiter", "GreedyArbiter", "ProportionalArbiter",
+    "ARBITERS", "make_arbiter",
+]

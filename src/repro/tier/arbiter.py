@@ -1,0 +1,177 @@
+"""Capacity arbiters: who gets the shared budget's free slots.
+
+The tier closes the control loop the paper leaves open.  Each tenant's
+DynamicAdaptiveClimb instance *signals* — ``jump`` saturating at ``2k`` is
+a grow demand, a shrink returns slots — and the arbiter turns those
+signals into per-tenant capacity **caps** for the next step.  A cap is the
+largest active size the tenant may reach on its next resize check:
+``cap == k`` denies growth, ``cap == 2k`` grants the full doubling,
+``k < cap < 2k`` is a partial grant under contention.
+
+Arbiters are pure vectorized functions of the post-step tier state::
+
+    caps = arbiter(k, demanding, budget)     # all int32[N] / bool[N]
+
+and must respect the conservation law the tier tests enforce: granted
+headroom never exceeds the free pool ``budget - sum(k)``, so
+``sum(k) <= budget`` holds at every step no matter which tenants cash
+their caps in.
+
+Arbiters are addressed by spec strings through :func:`make_arbiter`,
+mirroring ``make_policy`` / ``make_trace``::
+
+    >>> make_arbiter("greedy")
+    GreedyArbiter()
+    >>> make_arbiter("static(share=64)")
+    StaticArbiter(share=64)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..specs import build_kwargs, parse_spec
+
+__all__ = ["Arbiter", "StaticArbiter", "GreedyArbiter",
+           "ProportionalArbiter", "ARBITERS", "make_arbiter"]
+
+
+class Arbiter:
+    """Base class: hashable/static (jit-safe as a static argument), one
+    ``__call__(k, demanding, budget, n_tenants) -> caps`` method."""
+
+    name: str = "base"
+
+    def __call__(self, k, demanding, budget: int, n_tenants: int):
+        raise NotImplementedError
+
+    # hashability for jit static args (same scheme as core.policy.Policy)
+    def _fields(self):
+        return tuple(sorted(self.__dict__.items()))
+
+    def __hash__(self):
+        return hash((type(self).__name__, self._fields()))
+
+    def __eq__(self, other):
+        return type(self) is type(other) and self._fields() == other._fields()
+
+    def __repr__(self):
+        args = ", ".join(f"{k}={v}" for k, v in self.__dict__.items())
+        return f"{type(self).__name__}({args})"
+
+
+def _free_pool(k, budget: int):
+    """Unclaimed slots: the global budget minus every tenant's active size."""
+    return jnp.maximum(budget - jnp.sum(k), 0)
+
+
+def _demand(k, demanding, budget: int):
+    """Requested extra slots per tenant: a saturated tenant wants to double
+    (``+k``), bounded by the budget-wide array width."""
+    want = jnp.minimum(k, budget - k)
+    return jnp.where(demanding, jnp.maximum(want, 0), 0)
+
+
+class StaticArbiter(Arbiter):
+    """No-op baseline: hard partitioning.  Every tenant owns a fixed
+    ``share`` (default ``budget // n_tenants``) and the cap reproduces the
+    paper's un-arbitrated law *within* that share — grow iff
+    ``2k <= share`` — so a static tier is exactly N independent
+    DynamicAdaptiveClimb caches with ``K_max = share``.
+
+    >>> import jax.numpy as jnp
+    >>> arb = StaticArbiter()
+    >>> k = jnp.array([4, 8], jnp.int32)
+    >>> demanding = jnp.array([True, True])
+    >>> [int(c) for c in arb(k, demanding, budget=16, n_tenants=2)]
+    [8, 8]
+    """
+
+    name = "static"
+
+    def __init__(self, share: int = 0):
+        self.share = int(share)   # 0 -> budget // n_tenants
+
+    def __call__(self, k, demanding, budget: int, n_tenants: int):
+        share = self.share or budget // n_tenants
+        return jnp.where(2 * k <= share, 2 * k, k).astype(jnp.int32)
+
+
+class GreedyArbiter(Arbiter):
+    """First-come-first-served over the tenant axis: walk tenants in index
+    order, grant each demander as much of its doubling as the remaining
+    free pool covers (partial at the boundary), vectorized as a cumulative
+    sum — no data-dependent Python control flow.
+
+    >>> import jax.numpy as jnp
+    >>> arb = GreedyArbiter()
+    >>> k = jnp.array([4, 4, 4], jnp.int32)
+    >>> demanding = jnp.array([True, True, True])
+    >>> # free pool = 18 - 12 = 6: tenant 0 gets +4, tenant 1 the last +2
+    >>> [int(c) for c in arb(k, demanding, budget=18, n_tenants=3)]
+    [8, 6, 4]
+    """
+
+    name = "greedy"
+
+    def __call__(self, k, demanding, budget: int, n_tenants: int):
+        free = _free_pool(k, budget)
+        demand = _demand(k, demanding, budget)
+        before = jnp.cumsum(demand) - demand   # pool already spoken for
+        grant = jnp.clip(free - before, 0, demand)
+        return (k + grant).astype(jnp.int32)
+
+
+class ProportionalArbiter(Arbiter):
+    """Split the free pool among demanders in proportion to their demand
+    (floor division — never over-grants), so contention degrades every
+    tenant's grant smoothly instead of starving the tail of the index
+    order.
+
+    >>> import jax.numpy as jnp
+    >>> arb = ProportionalArbiter()
+    >>> k = jnp.array([4, 4, 4], jnp.int32)
+    >>> demanding = jnp.array([True, True, False])
+    >>> # free pool = 16 - 12 = 4 split over 8 demanded: +2 each
+    >>> [int(c) for c in arb(k, demanding, budget=16, n_tenants=3)]
+    [6, 6, 4]
+    """
+
+    name = "proportional"
+
+    def __call__(self, k, demanding, budget: int, n_tenants: int):
+        free = _free_pool(k, budget)
+        demand = _demand(k, demanding, budget)
+        total = jnp.sum(demand)
+        prop = jnp.where(total > 0, free * demand // jnp.maximum(total, 1), 0)
+        grant = jnp.minimum(demand, prop)
+        return (k + grant).astype(jnp.int32)
+
+
+ARBITERS = {
+    "static": StaticArbiter,
+    "greedy": GreedyArbiter,
+    "proportional": ProportionalArbiter,
+}
+
+
+def make_arbiter(spec) -> Arbiter:
+    """Build an arbiter from a spec string — registry name plus optional
+    constructor kwargs, coerced exactly like ``make_policy`` /
+    ``make_trace`` (see :mod:`repro.specs`).  Arbiter instances pass
+    through.
+
+    >>> make_arbiter("proportional")
+    ProportionalArbiter()
+    >>> make_arbiter("nope")
+    Traceback (most recent call last):
+        ...
+    ValueError: unknown arbiter 'nope'; known: ['greedy', 'proportional', 'static']
+    """
+    if isinstance(spec, Arbiter):
+        return spec
+    name, argstr = parse_spec(spec)
+    if name not in ARBITERS:
+        raise ValueError(
+            f"unknown arbiter {name!r}; known: {sorted(ARBITERS)}")
+    cls = ARBITERS[name]
+    return cls(**build_kwargs("arbiter", name, cls.__init__, argstr))

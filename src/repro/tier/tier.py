@@ -1,0 +1,294 @@
+"""Shared-budget multi-tenant cache tier.
+
+N independent tenant caches — one :class:`~repro.core.DynamicAdaptiveClimb`
+instance each, state stacked on a leading tenant axis — share one global
+slot budget.  Per global step every tenant serves one request (the
+``tenants(...)`` trace family interleaves the per-tenant streams along
+time), stepped together with ``vmap`` over the existing fused
+``rank_step`` path, and then the **arbiter** closes the loop the paper
+leaves open:
+
+* a tenant whose shrink fires *returns* its deactivated slots — they fall
+  into the global free pool (``budget - sum(k)``) simply by no longer
+  being counted;
+* a tenant whose ``jump`` saturates at ``2k`` *demands* a doubling, and
+  the arbiter grants / partially grants / denies it out of the free pool
+  by setting the tenant's capacity cap for the next step (see
+  :mod:`repro.tier.arbiter`).
+
+``arbiter("static")`` is the no-op baseline — hard partitioning into
+``budget // n_tenants`` shares, bit-identical to N independent
+``Engine.replay`` calls — so every improvement the dynamic arbiters show
+is attributable to capacity trading, not to a different policy.
+
+Non-resizing policies (LRU, Climb, ...) are also accepted (with the
+static arbiter only): each tenant runs a fixed ``budget // n_tenants``
+cache, which is exactly the statically-partitioned baseline the
+``tenant_sweep`` benchmark compares against.
+
+>>> import numpy as np
+>>> from repro.tier import CacheTier, replay_tier
+>>> tier = CacheTier("dac", n_tenants=2, budget=32, arbiter="greedy")
+>>> reqs = np.zeros((100, 2), np.int32)           # [T, n_tenants] keys
+>>> res = replay_tier(tier, reqs)
+>>> [int(h) for h in res.metrics.hits]            # per-tenant totals
+[99, 99]
+>>> float(res.agg_miss_ratio) == 2 / 200
+True
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import make_policy
+from ..core.dynamicadaptiveclimb import DynamicAdaptiveClimb
+from ..core.policy import EMPTY, Request, pallas_mode
+from ..core.simulator import Metrics, _acc_step, _count_dtype, _ratio
+from .arbiter import make_arbiter
+
+__all__ = ["CacheTier", "TierResult", "replay_tier"]
+
+
+class TierResult(NamedTuple):
+    """Per-tenant replay totals plus the tier's occupancy trace.
+
+    ``metrics`` leaves carry a trailing tenant axis (``[N]``, or ``[S, N]``
+    for a seed-batched replay); ``avg_k`` is each tenant's time-mean active
+    size — the occupancy the arbiter actually granted it; ``obs`` is
+    ``{"k": [T, N]}`` under ``observe=True`` (else ``None``).
+    """
+
+    metrics: Metrics
+    avg_k: jax.Array
+    obs: Any
+
+    # -- per-tenant ratios --------------------------------------------------
+    @property
+    def hit_ratio(self):
+        return _ratio(self.metrics.hits, self.metrics.requests)
+
+    @property
+    def miss_ratio(self):
+        m = self.metrics
+        return _ratio(np.asarray(m.requests) - np.asarray(m.hits),
+                      m.requests)
+
+    @property
+    def byte_miss_ratio(self):
+        return _ratio(self.metrics.bytes_missed, self.metrics.bytes_total)
+
+    @property
+    def penalty_ratio(self):
+        return _ratio(self.metrics.penalty, self.metrics.cost_total)
+
+    # -- tier aggregates (sum over the tenant axis, then the ratio) ---------
+    def _agg(self, num, den):
+        return _ratio(np.asarray(num, dtype=np.float64).sum(axis=-1),
+                      np.asarray(den, dtype=np.float64).sum(axis=-1))
+
+    @property
+    def agg_miss_ratio(self):
+        """Request-weighted aggregate: total misses / total requests."""
+        m = self.metrics
+        return self._agg(np.asarray(m.requests) - np.asarray(m.hits),
+                         m.requests)
+
+    @property
+    def agg_byte_miss_ratio(self):
+        """Byte-weighted aggregate: total bytes missed / total bytes."""
+        return self._agg(self.metrics.bytes_missed, self.metrics.bytes_total)
+
+    @property
+    def agg_penalty_ratio(self):
+        """Cost-weighted aggregate: total penalty / total cost."""
+        return self._agg(self.metrics.penalty, self.metrics.cost_total)
+
+
+class CacheTier:
+    """Static description of one tier: policy x n_tenants x budget x
+    arbiter.  Hashable (a jit static argument, like ``Policy``).
+
+    ``policy`` / ``arbiter`` accept spec strings or instances.  ``k0`` is
+    each tenant's initial active size; the default mirrors
+    ``DynamicAdaptiveClimb.init`` — the static share divided by the
+    policy's ``growth`` headroom — so a tenant starts with the same
+    slack a standalone DAC cache would have.
+
+    >>> CacheTier("dac(growth=2)", n_tenants=4, budget=64, arbiter="static")
+    CacheTier(dynamicadaptiveclimb, n_tenants=4, budget=64, arbiter=static, k0=8)
+    """
+
+    def __init__(self, policy="dac", n_tenants: int = 4, budget: int = 256,
+                 arbiter="greedy", k0: int | None = None):
+        self.policy = make_policy(policy)
+        self.arbiter = make_arbiter(arbiter)
+        self.n_tenants = int(n_tenants)
+        self.budget = int(budget)
+        self.resizable = isinstance(self.policy, DynamicAdaptiveClimb)
+        if self.n_tenants < 1:
+            raise ValueError("n_tenants must be >= 1")
+        share = self.budget // self.n_tenants
+        if share < 1:
+            raise ValueError(
+                f"budget {self.budget} too small for {self.n_tenants} tenants")
+        if not self.resizable and self.arbiter.name != "static":
+            raise ValueError(
+                f"policy {self.policy.name!r} emits no resize signals; only "
+                "arbiter('static') is meaningful for it")
+        # an explicit static share above the fair partition would let the
+        # tenants jointly exceed the budget — the conservation law every
+        # arbiter must respect (sum(k) <= budget at every step)
+        if (self.arbiter.name == "static"
+                and getattr(self.arbiter, "share", 0) * self.n_tenants
+                > self.budget):
+            raise ValueError(
+                f"static share {self.arbiter.share} x {self.n_tenants} "
+                f"tenants exceeds the budget {self.budget}")
+        if k0 is None:
+            k0 = (max(self.policy.k_min, share // self.policy.growth)
+                  if self.resizable else share)
+        self.k0 = int(k0)
+        if self.k0 * self.n_tenants > self.budget:
+            raise ValueError(
+                f"initial sizes exceed the budget: {self.n_tenants} x "
+                f"{self.k0} > {self.budget}")
+
+    @property
+    def share(self) -> int:
+        """The static per-tenant partition, ``budget // n_tenants``."""
+        return self.budget // self.n_tenants
+
+    # -- state --------------------------------------------------------------
+    def init(self) -> dict:
+        """Stacked tenant state (leading axis ``n_tenants``).  Resizable
+        tenants get budget-wide rank rows (any single tenant may absorb
+        the whole budget) plus the arbiter's initial caps."""
+        n = self.n_tenants
+        if not self.resizable:
+            st = self.policy.init(self.share)
+            return jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), st)
+        k0 = jnp.full((n,), self.k0, jnp.int32)
+        demanding = jnp.zeros((n,), bool)
+        return {
+            "cache": jnp.full((n, self.budget), EMPTY, dtype=jnp.int32),
+            "jump": jnp.full((n,), self.k0, jnp.int32),
+            "jump2": jnp.zeros((n,), jnp.int32),
+            "k": k0,
+            "cap": self.arbiter(k0, demanding, self.budget, n),
+        }
+
+    # -- one tier step -------------------------------------------------------
+    def step(self, state: dict, req: Request):
+        """Advance every tenant one request (``req`` leaves are ``[N]``),
+        then re-arbitrate the caps from the post-step resize signals.
+        Returns ``(state, info, k)`` with per-tenant ``StepInfo`` and
+        active sizes."""
+        if not self.resizable:
+            state, info = jax.vmap(self.policy.step)(state, req)
+            k = jnp.full((self.n_tenants,), self.share, jnp.int32)
+            return state, info, k
+        state, info = jax.vmap(self.policy.step_budgeted)(state, req)
+        k = state["k"]
+        demanding = state["jump"] >= 2 * k
+        state = dict(state, cap=self.arbiter(k, demanding, self.budget,
+                                             self.n_tenants))
+        return state, info, k
+
+    # -- hashability for jit static args ------------------------------------
+    def _fields(self):
+        return (self.policy, self.arbiter, self.n_tenants, self.budget,
+                self.k0)
+
+    def __hash__(self):
+        return hash((type(self).__name__, self._fields()))
+
+    def __eq__(self, other):
+        return type(self) is type(other) and self._fields() == other._fields()
+
+    def __repr__(self):
+        return (f"CacheTier({self.policy.name}, n_tenants={self.n_tenants}, "
+                f"budget={self.budget}, arbiter={self.arbiter.name}, "
+                f"k0={self.k0})")
+
+
+def _zero_acc_tier(n: int) -> Metrics:
+    return Metrics(
+        requests=jnp.zeros((n,), _count_dtype()),
+        hits=jnp.zeros((n,), _count_dtype()),
+        bytes_total=jnp.zeros((n,), jnp.float32),
+        bytes_missed=jnp.zeros((n,), jnp.float32),
+        cost_total=jnp.zeros((n,), jnp.float32),
+        penalty=jnp.zeros((n,), jnp.float32),
+    )
+
+
+def _scan_tier(tier: CacheTier, reqs: Request, observe: bool) -> TierResult:
+    """Scan one interleaved ``[T, N]`` stream metrics-only: per-tenant
+    ``Metrics`` and the running ``k`` sum ride in the carry (no ``[T]``
+    StepInfo is ever stacked), mirroring ``Engine.replay``'s
+    ``collect_info=False`` path."""
+    n = tier.n_tenants
+    T = reqs.key.shape[0]
+
+    def body(carry, req):
+        st, acc, ksum = carry
+        st, info, k = tier.step(st, req)
+        acc = _acc_step(acc, req, info)
+        return (st, acc, ksum + k.astype(jnp.float32)), (k if observe
+                                                         else None)
+
+    carry0 = (tier.init(), _zero_acc_tier(n), jnp.zeros((n,), jnp.float32))
+    (_, acc, ksum), ks = jax.lax.scan(body, carry0, reqs)
+    return TierResult(metrics=acc, avg_k=ksum / T,
+                      obs={"k": ks} if observe else None)
+
+
+@partial(jax.jit, static_argnames=("tier", "observe", "use_pallas"))
+def _replay_tier_single(tier, reqs, observe, use_pallas):
+    with pallas_mode(use_pallas):
+        return _scan_tier(tier, reqs, observe)
+
+
+@partial(jax.jit, static_argnames=("tier", "observe", "use_pallas"))
+def _replay_tier_batched(tier, reqs, observe, use_pallas):
+    with pallas_mode(use_pallas):
+        return jax.vmap(lambda r: _scan_tier(tier, r, observe))(reqs)
+
+
+def replay_tier(tier: CacheTier, requests, *, sizes=None, costs=None,
+                observe: bool = False,
+                use_pallas: bool = False) -> TierResult:
+    """Replay an interleaved multi-tenant request stream through ``tier``.
+
+    ``requests``: a :class:`~repro.core.Request` (or bare keys, with
+    ``sizes``/``costs`` broadcast per ``Request.of``) of shape ``[T, N]``
+    — at each of the T global steps, one request per tenant — or
+    ``[S, T, N]`` to vmap a seed axis of independent streams.  Metrics are
+    reduced in the scan carry (per tenant), and each tenant's time-mean
+    active size comes back as ``avg_k``; ``observe=True`` additionally
+    stacks the per-step occupancy ``obs["k"]`` (``[T, N]``).
+
+    ``use_pallas=True`` routes each tenant's fused rank step through the
+    Pallas policy-step kernel, exactly as in ``Engine.replay``.
+    """
+    reqs = Request.of(requests, sizes, costs)
+    if reqs.key.ndim == 2:
+        if reqs.key.shape[1] != tier.n_tenants:
+            raise ValueError(
+                f"requests [T, N] must have N == n_tenants "
+                f"({tier.n_tenants}), got {reqs.key.shape}")
+        return _replay_tier_single(tier, reqs, observe, use_pallas)
+    if reqs.key.ndim == 3:
+        if reqs.key.shape[2] != tier.n_tenants:
+            raise ValueError(
+                f"requests [S, T, N] must have N == n_tenants "
+                f"({tier.n_tenants}), got {reqs.key.shape}")
+        return _replay_tier_batched(tier, reqs, observe, use_pallas)
+    raise ValueError(
+        f"requests must be [T, N] or [S, T, N], got shape {reqs.key.shape}")

@@ -1,0 +1,61 @@
+"""Doctest runner for the public API surface.
+
+Every symbol exported from ``repro.core``, ``repro.bench``, ``repro.data``
+and ``repro.tier`` carries a docstring with an executable example; this
+suite runs them all (the scoped equivalent of ``pytest --doctest-modules``)
+so the examples in the docs can't rot.  ``tools/check_docs.py`` relies on
+the same modules importing cleanly for its anchor checks.
+"""
+import doctest
+import importlib
+
+import pytest
+
+# the documented public surface: repro.core / repro.bench / repro.data /
+# repro.tier and the modules their __init__ re-exports from
+MODULES = [
+    "repro.core",
+    "repro.core.policy",
+    "repro.core.simulator",
+    "repro.core.adaptiveclimb",
+    "repro.core.dynamicadaptiveclimb",
+    "repro.core.baselines",
+    "repro.core.lirs_lhd",
+    "repro.data.traces",
+    "repro.bench.scenario",
+    "repro.bench.runner",
+    "repro.bench.results",
+    "repro.bench.report",
+    "repro.specs",
+    "repro.tier",
+    "repro.tier.arbiter",
+    "repro.tier.tier",
+]
+
+
+@pytest.mark.parametrize("module", MODULES)
+def test_doctests(module):
+    mod = importlib.import_module(module)
+    result = doctest.testmod(mod, verbose=False,
+                             optionflags=doctest.NORMALIZE_WHITESPACE)
+    assert result.failed == 0, (
+        f"{result.failed} doctest failure(s) in {module}")
+    # the public surface must actually carry examples (a module whose
+    # docstrings all lost their examples silently passes otherwise)
+    if module not in ("repro.specs",):
+        assert result.attempted > 0, f"{module} has no doctest examples"
+
+
+def test_public_exports_have_docstrings():
+    """Every public export of the four packages is documented."""
+    for pkg_name in ("repro.core", "repro.bench", "repro.data", "repro.tier"):
+        pkg = importlib.import_module(pkg_name)
+        exports = getattr(pkg, "__all__", None) or [
+            n for n in vars(pkg) if not n.startswith("_")]
+        for name in exports:
+            obj = getattr(pkg, name)
+            if not (callable(obj) or isinstance(obj, type)):
+                continue   # data constants (POLICIES, EMPTY, ...) can't
+                           # carry docstrings
+            assert getattr(obj, "__doc__", None), (
+                f"{pkg_name}.{name} has no docstring")

@@ -1,0 +1,260 @@
+"""Tier conservation laws (hypothesis-free, like test_dac_resize):
+under any arbiter the summed active sizes never exceed the global budget,
+grants never exceed the free pool, and the static arbiter reproduces N
+independent single-cache replays bit-identically."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.bench import Scenario, TierScenario, TierSweep, results, run_tier_sweep
+from repro.core import Engine, make_policy
+from repro.data.traces import make_trace, tenants_trace
+from repro.tier import (ARBITERS, CacheTier, make_arbiter, replay_tier)
+
+ENGINE = Engine()
+
+N_TENANTS, K0, GROWTH = 4, 8, 4
+BUDGET = N_TENANTS * K0 * GROWTH          # static share == K0 * GROWTH
+
+
+def _mixed_streams(n=N_TENANTS, T=2500, seed=0):
+    """[T, n] independent thrash/concentrate streams (grow + shrink both
+    fire for every tenant)."""
+    def one(rng):
+        segs = []
+        while sum(len(s) for s in segs) < T:
+            wide = rng.random() < 0.5
+            segs.append(rng.integers(0, 400 if wide else 3, 150))
+        return np.concatenate(segs)[:T].astype(np.int32)
+    return np.stack([one(np.random.default_rng(seed * 100 + t))
+                     for t in range(n)], axis=1)
+
+
+# --- law 1: the static arbiter is exact hard partitioning ------------------
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_static_tier_bit_identical_to_independent_replays(use_pallas):
+    """arbiter('static') tier replay == N independent Engine.replay calls,
+    field-for-field, for both step lowerings."""
+    streams = _mixed_streams()
+    tier = CacheTier("dac", n_tenants=N_TENANTS, budget=BUDGET,
+                     arbiter="static", k0=K0)
+    res = replay_tier(tier, streams, use_pallas=use_pallas)
+    for t in range(N_TENANTS):
+        single = ENGINE.replay(make_policy("dac"), streams[:, t], K0,
+                               collect_info=False, use_pallas=use_pallas)
+        for field in single.metrics._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(res.metrics, field))[t],
+                np.asarray(getattr(single.metrics, field)),
+                err_msg=f"tenant {t} {field} (use_pallas={use_pallas})")
+
+
+def test_budgeted_step_with_pinned_cap_matches_step():
+    """step_budgeted degenerates to step when cap is pinned at K_max."""
+    from repro.core.policy import Request
+    pol = make_policy("dac(growth=2)")
+    st_a = pol.init(8)
+    st_b = dict(pol.init(8), cap=jnp.int32(16))
+    rng = np.random.default_rng(3)
+    for key in rng.integers(0, 40, 600):
+        req = Request.of(jnp.int32(int(key)))
+        st_a, info_a = pol.step(st_a, req)
+        st_b, info_b = pol.step_budgeted(st_b, req)
+        assert int(st_a["k"]) == int(st_b["k"])
+        assert int(st_a["jump"]) == int(st_b["jump"])
+        assert bool(info_a.hit) == bool(info_b.hit)
+        np.testing.assert_array_equal(np.asarray(st_a["cache"]),
+                                      np.asarray(st_b["cache"]))
+
+
+# --- law 2: sum(k) <= budget at every step, under every arbiter ------------
+
+@pytest.mark.parametrize("arbiter", sorted(ARBITERS))
+def test_sum_k_never_exceeds_budget(arbiter):
+    streams = _mixed_streams(T=3000)
+    # a tight budget so grants actually contend
+    budget = N_TENANTS * K0 * 2
+    tier = CacheTier("dac", n_tenants=N_TENANTS, budget=budget,
+                     arbiter=arbiter, k0=K0)
+    res = replay_tier(tier, streams, observe=True)
+    ks = np.asarray(res.obs["k"])                 # [T, N]
+    assert ks.shape == (streams.shape[0], N_TENANTS)
+    assert (ks >= tier.policy.k_min).all()
+    assert (ks.sum(axis=1) <= budget).all(), (
+        f"{arbiter}: sum k peaked at {ks.sum(axis=1).max()} > {budget}")
+    # shrinks really do return capacity: the pool was drawn on at least once
+    if arbiter != "static":
+        assert (ks.max(axis=0) > budget // N_TENANTS).any(), (
+            f"{arbiter}: no tenant ever outgrew its static share")
+
+
+# --- law 3: grants never exceed the free pool ------------------------------
+
+@pytest.mark.parametrize("arbiter", ["greedy", "proportional"])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_grants_never_exceed_free_pool(arbiter, seed):
+    """Direct arbiter contract on random tier states: caps >= k, granted
+    headroom sums to at most budget - sum(k)."""
+    arb = make_arbiter(arbiter)
+    rng = np.random.default_rng(seed)
+    n = 8
+    budget = 512
+    k = rng.integers(2, budget // n + 1, n).astype(np.int32)
+    demanding = rng.random(n) < 0.6
+    caps = np.asarray(arb(jnp.asarray(k), jnp.asarray(demanding),
+                          budget, n))
+    free = budget - k.sum()
+    assert (caps >= k).all()
+    assert (caps - k).sum() <= max(free, 0)
+    assert (caps[~demanding] == k[~demanding]).all()
+
+
+def test_static_arbiter_caps_bounded_by_share():
+    arb = make_arbiter("static")
+    k = jnp.asarray(np.array([2, 8, 16, 5], np.int32))
+    caps = np.asarray(arb(k, jnp.ones(4, bool), budget=64, n_tenants=4))
+    assert (caps <= 16).all()          # share = 64 // 4
+    assert (caps >= np.asarray(k)).all()
+
+
+def test_over_budget_static_share_rejected():
+    """An explicit static share above budget // n_tenants would let the
+    tenants jointly exceed the budget — CacheTier refuses it."""
+    with pytest.raises(ValueError, match="exceeds the budget"):
+        CacheTier("dac", n_tenants=2, budget=32, arbiter="static(share=32)")
+    # a fair-or-smaller share is fine
+    CacheTier("dac", n_tenants=2, budget=32, arbiter="static(share=8)")
+
+
+def test_tier_budget_regime_letters_are_usable():
+    """'S'/'L' budgets resolve to something every tier policy can start
+    at (regression: the 'S' floor used to be below DAC's footprint)."""
+    sc = TierScenario("f", trace="tenants(N=256,n_tenants=4)", T=100,
+                      budget=("S", "L"))
+    for B in sc.budgets():
+        CacheTier("dac", n_tenants=4, budget=B)   # must not raise
+
+
+def test_non_resizable_policy_requires_static_arbiter():
+    with pytest.raises(ValueError, match="static"):
+        CacheTier("lru", n_tenants=2, budget=32, arbiter="greedy")
+    tier = CacheTier("lru", n_tenants=2, budget=32, arbiter="static")
+    streams = _mixed_streams(n=2, T=500)
+    res = replay_tier(tier, streams)
+    for t in range(2):
+        single = ENGINE.replay("lru", streams[:, t], 16, collect_info=False)
+        assert float(np.asarray(res.metrics.hits)[t]) == float(
+            np.asarray(single.metrics.hits))
+
+
+# --- the tenants(...) trace family -----------------------------------------
+
+def test_tenants_trace_registry_round_trip():
+    spec = make_trace("tenants(N=128,n_tenants=4)")
+    assert spec.is_tier and spec.n_tenants == 4 and spec.n_keys == 128
+    assert make_trace(str(spec)) == spec
+    keys = spec.generate(T=200, seed=1)
+    assert keys.shape == (200, 4) and keys.dtype == np.int32
+    np.testing.assert_array_equal(keys, spec.generate(T=200, seed=1))
+    batch = spec.generate_batch(T=100, seeds=(0, 1))
+    assert batch.shape == (2, 100, 4)
+    assert (keys >= 0).all() and (keys < 128).all()
+
+
+def test_tenants_phase_shift_rotates_wide_phase():
+    """Phase shifting staggers the wide phases: per window, the tenant with
+    the largest distinct-key count rotates."""
+    keys = tenants_trace(N=256, T=4000, n_tenants=4, alpha=0.5,
+                         period=4000, duty=0.25, lo=8, seed=0)
+    widest = [int(np.argmax([len(np.unique(keys[lo:lo + 1000, t]))
+                             for t in range(4)]))
+              for lo in range(0, 4000, 1000)]
+    assert sorted(widest) == [0, 1, 2, 3], widest
+
+
+def test_scenario_rejects_tier_family_and_vice_versa():
+    with pytest.raises(ValueError, match="TierScenario"):
+        Scenario("x", trace="tenants(N=64,n_tenants=2)", T=100)
+    with pytest.raises(ValueError, match="multi-tenant"):
+        TierScenario("x", trace="zipf(N=64,alpha=1.0)", T=100)
+
+
+def test_replay_tier_shape_validation():
+    tier = CacheTier("dac", n_tenants=4, budget=64)
+    with pytest.raises(ValueError, match="n_tenants"):
+        replay_tier(tier, np.zeros((100, 3), np.int32))
+    with pytest.raises(ValueError, match="T, N"):
+        replay_tier(tier, np.zeros((100,), np.int32))
+
+
+# --- tier sweep machinery ---------------------------------------------------
+
+def _tiny_sweep(seeds=(0, 1)):
+    sc = TierScenario(
+        "flux", trace="tenants(N=64,n_tenants=2,period=512,lo=8)",
+        T=600, budget=(32,))
+    return TierSweep("tiny", entries=(("dac", "greedy"), ("lru", "static")),
+                     scenarios=(sc,), seeds=seeds)
+
+
+def test_tier_sweep_config_round_trip():
+    sw = _tiny_sweep()
+    assert TierSweep.from_config(sw.to_config()) == sw
+
+
+def test_run_tier_sweep_records_and_v2_schema():
+    res = run_tier_sweep(_tiny_sweep())
+    assert len(res.records) == 2
+    payload = res.payload()
+    assert payload["schema"] == results.SCHEMA_V2
+    results.validate(payload)
+    rec = res.select(policy="dac", arbiter="greedy")[0]
+    assert rec["n_tenants"] == 2 and rec["budget"] == 32
+    assert len(rec["tenants"]) == 2
+    for ten in rec["tenants"]:
+        assert len(ten["metrics"]["miss_ratio"]) == 2   # per-seed lists
+        assert len(ten["metrics"]["avg_k"]) == 2
+
+
+def test_run_tier_sweep_matches_per_seed_loop():
+    """Seed-vmapped tier cells == per-seed replay_tier loop."""
+    sw = _tiny_sweep(seeds=(0, 1, 2))
+    res = run_tier_sweep(sw)
+    rec = res.select(policy="dac", arbiter="greedy")[0]
+    sc = sw.scenarios[0]
+    spec = make_trace(sc.trace)
+    tier = CacheTier("dac", n_tenants=2, budget=32, arbiter="greedy")
+    for i, seed in enumerate(sw.seeds):
+        single = replay_tier(tier, spec.generate(sc.T, seed=seed))
+        assert rec["metrics"]["miss_ratio"][i] == float(
+            np.asarray(single.agg_miss_ratio))
+        for ten in rec["tenants"]:
+            assert ten["metrics"]["miss_ratio"][i] == float(
+                np.asarray(single.miss_ratio)[ten["tenant"]])
+
+
+def test_v1_schema_rejects_tenant_records():
+    payload = results.build_payload(
+        "x", config={}, records=[
+            {"metrics": {"miss_ratio": [0.1]}, "seeds": [0],
+             "tenants": [{"tenant": 0, "metrics": {"miss_ratio": [0.1]}}]}])
+    with pytest.raises(ValueError, match="v2"):
+        results.validate(payload)
+
+
+def test_v2_schema_rejects_malformed_tenants():
+    def v2(records):
+        return results.build_payload("x", config={}, records=records,
+                                     schema=results.SCHEMA_V2)
+    good = {"metrics": {"m": [0.1]}, "seeds": [0],
+            "tenants": [{"tenant": 0, "metrics": {"m": [0.1]}}]}
+    results.validate(v2([good]))
+    bad_missing = {"metrics": {"m": [0.1]},
+                   "tenants": [{"metrics": {"m": [0.1]}}]}
+    with pytest.raises(ValueError, match="tenant"):
+        results.validate(v2([bad_missing]))
+    bad_len = {"metrics": {"m": [0.1]}, "seeds": [0],
+               "tenants": [{"tenant": 0, "metrics": {"m": [0.1, 0.2]}}]}
+    with pytest.raises(ValueError, match="len"):
+        results.validate(v2([bad_len]))

@@ -12,6 +12,7 @@ EXAMPLE_SPECS = {
     "shifting_zipf": "shifting_zipf(N=128,alpha=1.0,phases=3)",
     "scan_mix": "scan_mix(N=128,alpha=1.0,scan_frac=0.2,scan_len=32)",
     "churn": "churn(N=128,alpha=1.0,mean_phase=500,drift=0.1)",
+    "tenants": "tenants(N=128,n_tenants=4,period=512,lo=16)",
 }
 
 
@@ -48,7 +49,9 @@ def test_same_seed_determinism(family):
     a = spec.generate(T=4000, seed=3)
     b = spec.generate(T=4000, seed=3)
     np.testing.assert_array_equal(a, b)
-    assert a.shape == (4000,) and a.dtype == np.int32
+    # tier families emit [T, n_tenants] interleaved streams
+    want = (4000, spec.n_tenants) if spec.is_tier else (4000,)
+    assert a.shape == want and a.dtype == np.int32
     assert a.min() >= 0 and a.max() < spec.n_keys
     # a different seed produces a different trace
     assert not np.array_equal(a, spec.generate(T=4000, seed=4))

@@ -1,0 +1,103 @@
+#!/usr/bin/env python
+"""Docs checker: every internal link and code anchor in docs/ + README
+must resolve.  No Sphinx — three plain rules over the markdown sources:
+
+1. markdown links ``[text](target)`` with relative targets -> the file
+   must exist (``#fragment``-only links and http(s) URLs are skipped);
+2. inline code spans that look like repo paths (``src/...``, ``docs/...``,
+   ``tools/...``, ``tests/...``, ``benchmarks/...``) -> the file must
+   exist;
+3. inline code spans that look like dotted code anchors (``repro.x.y`` or
+   ``repro.x.y.Symbol.attr``) -> the module must import and the symbol
+   chain must resolve via getattr.
+
+Exit code 0 iff everything resolves; each failure prints one
+``file: problem`` line.  Run from the repo root (CI does), or pass the
+root as argv[1].
+"""
+from __future__ import annotations
+
+import importlib
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_RE = re.compile(r"`([^`\n]+)`")
+PATH_RE = re.compile(r"^(src|docs|tools|tests|benchmarks|examples)/[\w/-]+(\.\w+)?$")
+ANCHOR_RE = re.compile(r"^repro(\.\w+)+$")
+FENCE_RE = re.compile(r"^```.*?^```", re.M | re.S)
+
+
+def _prose(md: pathlib.Path) -> str:
+    """Markdown source with fenced code blocks stripped — anchors are a
+    prose convention; example code inside fences is illustrative."""
+    return FENCE_RE.sub("", md.read_text())
+
+
+def check_file(md: pathlib.Path, root: pathlib.Path) -> list[str]:
+    errors = []
+    text = _prose(md)
+    # links are scanned with inline code spans blanked out — backticked
+    # code like `arr[i](x)` is not a markdown link
+    for target in LINK_RE.findall(CODE_RE.sub("", text)):
+        if target.startswith(("http://", "https://", "#", "mailto:")):
+            continue
+        path = (md.parent / target.split("#", 1)[0]).resolve()
+        if not path.exists():
+            errors.append(f"{md}: broken link -> {target}")
+    for span in CODE_RE.findall(text):
+        span = span.strip()
+        if PATH_RE.match(span):
+            if not (root / span).exists():
+                errors.append(f"{md}: missing path anchor -> {span}")
+        elif ANCHOR_RE.match(span):
+            err = _check_import(span)
+            if err:
+                errors.append(f"{md}: {err}")
+    return errors
+
+
+def _check_import(anchor: str) -> str | None:
+    """Import the longest importable module prefix of ``anchor``, then
+    getattr the rest of the chain.  Returns an error string or None."""
+    parts = anchor.split(".")
+    for cut in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:cut]))
+            break
+        except ImportError:
+            continue
+    else:
+        return f"unimportable anchor -> {anchor}"
+    for attr in parts[cut:]:
+        try:
+            obj = getattr(obj, attr)
+        except AttributeError:
+            return f"unresolvable anchor -> {anchor} (no attribute {attr!r})"
+    return None
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    sys.path.insert(0, str(root / "src"))
+    sources = sorted((root / "docs").glob("**/*.md")) + [root / "README.md"]
+    errors = []
+    n_anchors = 0
+    for md in sources:
+        if not md.exists():
+            errors.append(f"{md}: missing")
+            continue
+        n_anchors += len([s for s in CODE_RE.findall(_prose(md))
+                          if PATH_RE.match(s.strip())
+                          or ANCHOR_RE.match(s.strip())])
+        errors.extend(check_file(md, root))
+    for err in errors:
+        print(err, file=sys.stderr)
+    print(f"checked {len(sources)} docs, {n_anchors} code anchors: "
+          f"{'FAIL' if errors else 'OK'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
