@@ -18,8 +18,8 @@ from repro.bench import results
 
 def _jobs():
     from . import (ablation_eps, byte_miss, curve_cachesize, kv_bounded,
-                   mrr_table, ops_per_request, skew_sweep, tenant_sweep,
-                   throughput)
+                   mrr_table, ops_per_request, real_traces, skew_sweep,
+                   tenant_sweep, throughput)
 
     # name -> (description, fn(fast) -> validated payload)
     return {
@@ -44,6 +44,10 @@ def _jobs():
         "kv_bounded": (
             "beyond-paper",
             lambda fast: kv_bounded.run(gen=16 if fast else 32)),
+        "real_traces": (
+            "paper's real-trace grid (miniature corpus, streaming path, "
+            "v2 schema)",
+            lambda fast: real_traces.run(T=2000 if fast else None)),
         "tenant_sweep": (
             "beyond-paper (multi-tenant tier, v2 schema)",
             lambda fast: tenant_sweep.run(

@@ -24,13 +24,15 @@ Multi-tenant tier grids use the same shapes one level up:
 per-tenant records — see ``docs/EXPERIMENTS.md``.
 """
 from . import report, results
-from .runner import (SweepResult, TierSweepResult, materialize, run_sweep,
-                     run_tier_sweep)
+from .runner import (STREAM_THRESHOLD, SweepResult, TierSweepResult,
+                     materialize, run_sweep, run_tier_sweep, should_stream,
+                     stream_chunks)
 from .scenario import (COST_MODELS, LARGE_FRAC, SIZE_MODELS, SMALL_FRAC,
                        Scenario, Sweep, TierScenario, TierSweep, k_for)
 
 __all__ = [
     "Scenario", "Sweep", "SweepResult", "run_sweep", "materialize",
+    "should_stream", "stream_chunks", "STREAM_THRESHOLD",
     "TierScenario", "TierSweep", "TierSweepResult", "run_tier_sweep",
     "results", "report", "k_for",
     "SIZE_MODELS", "COST_MODELS", "SMALL_FRAC", "LARGE_FRAC",

@@ -9,6 +9,22 @@ seeds.  Pass ``mesh=`` (or an Engine built with one) to shard the seed
 axis over devices, and ``use_pallas=True`` to route rank policies through
 the fused Pallas policy-step kernel — both knobs reach every cell.
 
+Two execution paths per cell, producing identical records (bit-for-bit
+whenever the float32 byte/cost running sums are exact — always for the
+integer count/ratio metrics; see :func:`run_sweep` for the fine print):
+
+* *materialized* — the whole ``[S, T]`` batch lives on device
+  (``Engine.replay``);
+* *streaming* — the cell replays through ``Engine.replay_stream`` in
+  fixed-size ``[S, chunk]`` slices with donated state buffers: device
+  memory is O(K + chunk), and file-backed traces
+  (``trace="file(path=...)"``) are read straight off disk chunk by chunk
+  (``repro.data.ingest.iter_chunks``), never fully resident.
+
+``run_sweep(stream="auto")`` picks streaming when a scenario is
+file-backed or its ``T`` exceeds :data:`STREAM_THRESHOLD`
+(:func:`should_stream`); ``stream=True`` / ``False`` forces a path.
+
 The output is a list of flat, JSON-able records (one per cell, per-seed
 metric lists) wrapped in a :class:`SweepResult` that renders the canonical
 payload of :mod:`repro.bench.results`.
@@ -17,17 +33,35 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 
 import jax
 import numpy as np
 
 from ..core import Engine
 from ..core.policy import Request
+from ..data import ingest
 from . import report, results
 from .scenario import Scenario, Sweep, TierScenario, TierSweep
 
 __all__ = ["materialize", "run_sweep", "SweepResult",
-           "run_tier_sweep", "TierSweepResult"]
+           "run_tier_sweep", "TierSweepResult",
+           "should_stream", "stream_chunks", "STREAM_THRESHOLD"]
+
+# per-lane trace length above which run_sweep(stream="auto") switches a
+# synthetic scenario to the streaming path (file-backed scenarios always
+# stream): past ~half a million requests the [S, T] device batch and the
+# scan's working set start to dominate device memory
+STREAM_THRESHOLD = 1 << 19
+
+
+def _file_parts(spec):
+    return spec.kwargs["path"], spec.kwargs.get("format", "auto")
+
+
+def _tile(x, S):
+    """Lay a per-request column out across S identical seed lanes."""
+    return None if x is None else np.broadcast_to(x, (S,) + x.shape)
 
 
 def materialize(scenario, seeds) -> Request:
@@ -35,36 +69,134 @@ def materialize(scenario, seeds) -> Request:
     the registry (one lane per seed) with the scenario's size/cost tables
     gathered per request.  A :class:`TierScenario` materializes the same
     way, one ``[T, N]`` interleaved stream per seed (``[S, T, N]``).
+    File-backed scenarios replicate the real trace across the seed lanes,
+    sizes/costs sourced from the file.
 
     >>> sc = Scenario("z", trace="zipf(N=64,alpha=1.0)", T=50, K=(8,))
     >>> materialize(sc, seeds=(0, 1)).key.shape
     (2, 50)
     """
     spec = scenario.trace_spec()
-    keys = spec.generate_batch(scenario.T, seeds)
-    sizes = scenario.size_table()
+    if spec.is_file:
+        path, fmt = _file_parts(spec)
+        tr = ingest.load_trace(path, fmt, limit=scenario.T)
+        S = len(tuple(seeds))
+        return Request.of(_tile(tr.keys, S), sizes=_tile(tr.sizes, S),
+                          costs=_tile(tr.costs, S))
+    keys, sizes, costs = _synthetic_host(scenario, seeds)
     if sizes is None:
         return Request.of(keys)
-    costs = scenario.cost_table(sizes)
     return Request.of(keys, sizes=sizes[keys],
                       costs=None if costs is None else costs[keys])
+
+
+def should_stream(scenario, stream="auto", *,
+                  threshold: int = STREAM_THRESHOLD) -> bool:
+    """Resolve the execution path for one scenario: ``True`` / ``False``
+    pass through; ``"auto"`` streams file-backed scenarios (out-of-core
+    by construction) and any whose ``T`` exceeds ``threshold``.  Anything
+    else (e.g. the string ``"false"``) is an error, not a truthy
+    surprise.
+
+    >>> sc = Scenario("z", trace="zipf(N=64,alpha=1.0)", T=50, K=(8,))
+    >>> should_stream(sc), should_stream(sc, True)
+    (False, True)
+    >>> should_stream(sc, threshold=10)
+    True
+    """
+    if isinstance(stream, str) and stream == "auto":
+        return scenario.trace_spec().is_file or scenario.T > threshold
+    if not isinstance(stream, bool):
+        raise ValueError(
+            f"stream must be True, False or 'auto', got {stream!r}")
+    return stream
+
+
+def _synthetic_host(scenario, seeds):
+    """Host-side ``([S, T] keys, size table, cost table)`` of a synthetic
+    scenario — the arrays :func:`stream_chunks` slices."""
+    spec = scenario.trace_spec()
+    keys = spec.generate_batch(scenario.T, seeds)
+    sizes = scenario.size_table()
+    costs = None if sizes is None else scenario.cost_table(sizes)
+    return keys, sizes, costs
+
+
+def _slice_host(host, T, chunk):
+    keys, sizes, costs = host
+    for lo in range(0, T, chunk):
+        k = keys[:, lo:lo + chunk]
+        yield Request.of(k, sizes=None if sizes is None else sizes[k],
+                         costs=None if costs is None else costs[k])
+
+
+def stream_chunks(scenario, seeds, chunk: int = ingest.DEFAULT_CHUNK,
+                  _host=None):
+    """Yield the ``[S, c]`` :class:`Request` chunks of one scenario for
+    ``Engine.replay_stream`` — the same requests :func:`materialize`
+    builds, sliced into ``chunk``-request pieces.  File-backed traces are
+    read off disk chunk by chunk (memory-mapped where possible) and
+    replicated across the seed lanes; synthetic traces are generated on
+    the host and sliced.
+
+    >>> sc = Scenario("z", trace="zipf(N=64,alpha=1.0)", T=50, K=(8,))
+    >>> [c.key.shape for c in stream_chunks(sc, seeds=(0, 1), chunk=32)]
+    [(2, 32), (2, 18)]
+    """
+    if chunk <= 0:
+        raise ValueError(f"chunk must be positive, got {chunk}")
+    spec = scenario.trace_spec()
+    S = len(tuple(seeds))
+    if spec.is_file:
+        path, fmt = _file_parts(spec)
+        if spec.n_requests <= STREAM_THRESHOLD:
+            # small file: slice the (lru-cached) materialized load so a
+            # grid of cells decodes the file once, not once per cell;
+            # device memory is still O(chunk)
+            tr = ingest.load_trace(path, fmt, limit=scenario.T)
+            for lo in range(0, len(tr.keys), chunk):
+                cut = lambda x: (None if x is None
+                                 else _tile(x[lo:lo + chunk], S))
+                yield Request.of(cut(tr.keys), sizes=cut(tr.sizes),
+                                 costs=cut(tr.costs))
+            return
+        # past the threshold the whole point is out-of-core: re-read
+        # chunk by chunk, never holding the decoded trace in host memory
+        for ch in ingest.iter_chunks(path, fmt, chunk=chunk,
+                                     limit=scenario.T):
+            yield Request.of(_tile(ch.keys, S), sizes=_tile(ch.sizes, S),
+                             costs=_tile(ch.costs, S))
+        return
+    host = _synthetic_host(scenario, seeds) if _host is None else _host
+    yield from _slice_host(host, scenario.T, chunk)
 
 
 def _per_seed(x) -> list:
     return [float(v) for v in np.atleast_1d(np.asarray(x))]
 
 
-def _cell_record(pol, sc, K, k_label, seeds, res, wall_s) -> dict:
+def _avg_k(res, streamed: bool):
+    """Per-seed time-mean adapted size, whichever path produced ``res``:
+    the streaming path already carries time means in ``obs``; the
+    materialized path stacks per-step observables to average.  Identical
+    for integer observables (64-bit sums of exact values either way)."""
+    if res.obs is None or "k" not in res.obs:
+        return None
+    k = np.asarray(res.obs["k"], dtype=np.float64)
+    return k if streamed else k.mean(axis=-1)
+
+
+def _cell_record(pol, sc, K, k_label, seeds, res, wall_s,
+                 avg_k=None) -> dict:
     metrics = {
         "miss_ratio": _per_seed(res.miss_ratio),
         "hit_ratio": _per_seed(res.hit_ratio),
         "byte_miss_ratio": _per_seed(res.byte_miss_ratio),
         "penalty_ratio": _per_seed(res.penalty_ratio),
     }
-    if res.obs is not None and "k" in res.obs:
+    if avg_k is not None:
         # adaptive policies: time-mean of the adapted cache size per seed
-        metrics["avg_k"] = _per_seed(
-            np.asarray(res.obs["k"], dtype=np.float64).mean(axis=-1))
+        metrics["avg_k"] = _per_seed(avg_k)
     return {
         "policy": pol, "scenario": sc.name, "trace": sc.trace,
         "T": int(sc.T), "K": int(K), "K_label": k_label,
@@ -90,15 +222,18 @@ class SweepResult:
         """Per-seed values of one metric for the single matching record."""
         return report.seed_values(self.records, name, **eq)
 
-    def payload(self, extras: dict | None = None) -> dict:
+    def payload(self, extras: dict | None = None, *,
+                schema: str = results.SCHEMA_VERSION) -> dict:
         return results.build_payload(
             self.sweep.name, config=self.sweep.to_config(),
-            records=self.records, extras=extras, wall_s=self.wall_s)
+            records=self.records, extras=extras, wall_s=self.wall_s,
+            schema=schema)
 
     def save(self, extras: dict | None = None, *,
-             results_dir: str | None = None) -> dict:
+             results_dir: str | None = None,
+             schema: str = results.SCHEMA_VERSION) -> dict:
         """Validate + write the canonical payload; returns it."""
-        payload = self.payload(extras)
+        payload = self.payload(extras, schema=schema)
         results.save(payload, results_dir=results_dir)
         return payload
 
@@ -203,13 +338,33 @@ def run_tier_sweep(sweep: TierSweep, *, engine: Engine | None = None,
 
 def run_sweep(sweep: Sweep, *, engine: Engine | None = None,
               mesh=None, use_pallas: bool | None = None,
+              stream="auto", chunk: int = ingest.DEFAULT_CHUNK,
               progress=None) -> SweepResult:
     """Execute every cell of ``sweep`` through the Engine.
 
-    Each scenario's ``[S, T]`` request batch is materialized once and
-    shared across its policies and capacities; each cell is one vmapped
-    metrics-only replay.  ``progress`` (e.g. ``print``) receives a line
-    per cell.
+    Materialized cells share one ``[S, T]`` request batch per scenario
+    across policies and capacities; each cell is one vmapped metrics-only
+    replay.  Streaming cells (``stream=True``, or ``"auto"`` for
+    file-backed / over-:data:`STREAM_THRESHOLD` scenarios — see
+    :func:`should_stream`) replay the same requests through
+    ``Engine.replay_stream`` in ``[S, chunk]`` slices instead: device
+    memory stays O(K + chunk), synthetic host batches are generated once
+    per scenario and sliced, and file-backed traces come straight off
+    disk — decoded once per scenario for small files (the cached
+    materialized load), re-read chunk by chunk past
+    :data:`STREAM_THRESHOLD` requests (the out-of-core contract: a huge
+    decoded trace is never held in host memory).  Both paths emit
+    identical counts, ratios and
+    time-mean observables; the float byte/cost totals agree bit-for-bit
+    while their float32 running sums are exact (integer sizes summing
+    under 2^24, as in the committed corpus) and to float32 rounding
+    beyond that — the streaming path's host-side 64-bit chunk reduction
+    is the *more* accurate of the two at scale.  ``mesh`` applies to
+    materialized cells only (streamed chunks run unsharded): under
+    ``"auto"`` a mesh keeps synthetic cells on the sharded materialized
+    path, and any cell that still streams (file-backed, or forced with
+    ``stream=True``) warns that the mesh is not consulted.  ``progress``
+    (e.g. ``print``) receives a line per cell.
 
     >>> sw = Sweep("doc", policies=("lru",), seeds=(0,),
     ...            scenarios=(Scenario("z", trace="zipf(N=64,alpha=1.0)",
@@ -219,24 +374,52 @@ def run_sweep(sweep: Sweep, *, engine: Engine | None = None,
     ['byte_miss_ratio', 'hit_ratio', 'miss_ratio', 'penalty_ratio']
     """
     engine = engine or Engine(mesh=mesh)
+    have_mesh = mesh is not None or engine.mesh is not None
     t_start = time.perf_counter()
     records = []
     reqs_cache = {}
+    # single-entry host cache: cells() iterates scenario-major, so only
+    # the current streamed scenario's [S, T] batch is ever held
+    host_name, host_val = None, None
     for pol, sc, K, k_label in sweep.cells():
-        if sc.name not in reqs_cache:
-            reqs_cache[sc.name] = materialize(sc, sweep.seeds)
-        reqs = reqs_cache[sc.name]
-        t0 = time.perf_counter()
-        res = engine.replay(pol, reqs, K, observe=sweep.observe,
-                            collect_info=False, mesh=mesh,
-                            use_pallas=use_pallas)
-        jax.block_until_ready(res.metrics.hits)
+        streamed = should_stream(sc, stream)
+        if streamed and have_mesh:
+            if stream == "auto" and not sc.trace_spec().is_file:
+                streamed = False    # a mesh-sharded materialized cell
+                                    # beats an unsharded stream
+            else:
+                warnings.warn(
+                    f"cell ({pol}, {sc.name}, K={K}) streams unsharded: "
+                    "replay_stream does not consult mesh=", stacklevel=2)
+        # one-time per-scenario host work (trace generation, request
+        # materialization) stays outside the per-cell wall timer, as it
+        # always has for the materialized path
+        if streamed:
+            host = None
+            if not sc.trace_spec().is_file:
+                if host_name != sc.name:
+                    host_name = sc.name
+                    host_val = _synthetic_host(sc, sweep.seeds)
+                host = host_val
+            t0 = time.perf_counter()
+            res = engine.replay_stream(
+                pol, stream_chunks(sc, sweep.seeds, chunk, _host=host), K,
+                observe=sweep.observe, use_pallas=use_pallas)
+        else:
+            if sc.name not in reqs_cache:
+                reqs_cache[sc.name] = materialize(sc, sweep.seeds)
+            t0 = time.perf_counter()
+            res = engine.replay(pol, reqs_cache[sc.name], K,
+                                observe=sweep.observe, collect_info=False,
+                                mesh=mesh, use_pallas=use_pallas)
+            jax.block_until_ready(res.metrics.hits)
         wall = time.perf_counter() - t0
         records.append(_cell_record(pol, sc, K, k_label, sweep.seeds,
-                                    res, wall))
+                                    res, wall, avg_k=_avg_k(res, streamed)))
         if progress is not None:
             mr = np.mean(records[-1]["metrics"]["miss_ratio"])
             progress(f"[{sweep.name}] {sc.name} K={K}({k_label}) "
-                     f"{pol}: miss={mr:.3f} [{wall:.2f}s]")
+                     f"{pol}{' [stream]' if streamed else ''}: "
+                     f"miss={mr:.3f} [{wall:.2f}s]")
     return SweepResult(sweep=sweep, records=records,
                        wall_s=time.perf_counter() - t_start)

@@ -91,6 +91,22 @@ class Scenario:
             raise ValueError(
                 f"scenario {self.name!r}: {spec.family!r} is a multi-tenant "
                 "trace family — use TierScenario (repro.tier workloads)")
+        if spec.is_file:
+            # real traces carry their own sizes/costs; validate the file
+            # (and its length vs T) eagerly, like every other spec error
+            if self.size_model is not None or self.cost_model is not None:
+                raise ValueError(
+                    f"scenario {self.name!r}: file-backed traces source "
+                    "sizes/costs from the trace file — size_model/"
+                    "cost_model do not apply")
+            # the cheap length check (O(1) for uncompressed oracle) —
+            # full characterization stats stay lazy until capacities()
+            # resolves an "S"/"L" regime against the id footprint
+            n = spec.n_requests
+            if self.T > n:
+                raise ValueError(
+                    f"scenario {self.name!r}: T={self.T} exceeds the "
+                    f"{n} requests in {spec.kwargs['path']!r}")
         object.__setattr__(self, "trace", str(spec))
         K = self.K if isinstance(self.K, (tuple, list)) else (self.K,)
         object.__setattr__(self, "K", tuple(K))

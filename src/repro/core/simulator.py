@@ -25,7 +25,10 @@ Two scale paths (the paper's Tables IV/V throughput regime):
 * ``replay_stream(...)`` scans arbitrarily long traces in fixed-size
   chunks, donating the policy-state and accumulator buffers between chunks
   and summing per-chunk totals on the host in 64-bit — multi-billion-
-  request streams never materialize on device and never wrap int32.
+  request streams never materialize on device and never wrap int32.  It
+  also accepts an *iterator* of request chunks (the out-of-core path for
+  file-backed traces, see ``repro.data.ingest``) and reports time-mean
+  policy observables under ``observe=True``.
 
 ``use_pallas=True`` (an ``Engine`` or per-call switch) lowers the rank-
 policy hot path (find + promote) through the fused Pallas policy-step
@@ -209,16 +212,18 @@ def _replay_batched(policy, reqs, K, observe, collect_info, use_pallas):
         )(reqs)
 
 
-@partial(jax.jit, static_argnames=("policy", "use_pallas"),
+@partial(jax.jit, static_argnames=("policy", "use_pallas", "observe"),
          donate_argnums=(1,))
-def _replay_chunk(policy, state, reqs, use_pallas):
+def _replay_chunk(policy, state, reqs, use_pallas, observe):
     """One streaming chunk: advance donated policy state, return per-chunk
-    totals.  Handles [T] and [B, T] chunks (state batched alike)."""
+    totals (plus the chunk's stacked observables under ``observe`` — only
+    ever chunk-shaped, summed into time means on the host).  Handles [T]
+    and [B, T] chunks (state batched alike)."""
     with pallas_mode(use_pallas):
         def one(st, r):
-            res, st = _scan_replay(policy, r, K=0, observe=False,
+            res, st = _scan_replay(policy, r, K=0, observe=observe,
                                    collect_info=False, state=st)
-            return st, res.metrics
+            return st, res.metrics, res.obs
 
         if reqs.key.ndim == 2:
             return jax.vmap(one)(state, reqs)
@@ -304,74 +309,154 @@ class Engine:
                             observe=observe, use_pallas=use_pallas)
 
     def replay_stream(self, policy, requests, K: int, *, sizes=None,
-                      costs=None, chunk: int = 1 << 18,
+                      costs=None, chunk: int | None = None,
+                      observe: bool = False,
                       use_pallas: bool | None = None) -> ReplayResult:
         """Metrics-only replay of an arbitrarily long trace in fixed-size
         chunks.
 
-        ``requests`` stays on the host (numpy); each chunk is shipped to
-        the device, scanned with the metrics-in-carry body, and the policy
+        ``requests`` stays on the host; each chunk is shipped to the
+        device, scanned with the metrics-in-carry body, and the policy
         state + accumulator buffers are *donated* between chunks, so device
         memory is O(K + chunk) regardless of trace length.  Per-chunk
         totals are summed on the host in 64-bit, so multi-billion-request
         streams cannot wrap int32 even without x64.  At most two programs
         compile: the full-chunk shape and one remainder shape.
 
-        Supports ``[T]`` and ``[B, T]`` traces; per-request ``sizes`` /
-        ``costs`` may be scalars or arrays of the same shape.  Returns a
-        :class:`ReplayResult` with ``info=None`` and host-side metrics.
+        ``requests`` is either dense — ``[T]`` / ``[B, T]`` keys or a
+        :class:`Request`, with per-request ``sizes`` / ``costs`` as scalars
+        or same-shape arrays, sliced into ``chunk``-request pieces
+        (default 2^18) — or an **iterator of chunks** (each item a
+        ``Request``, a key array, or a ``(keys, sizes, costs)`` record
+        like ``repro.data.ingest.TraceChunk``, unwrapped with its
+        sizes/costs — ``replay_stream(pol,
+        ingest.iter_chunks(path), K)`` just works), in which case the
+        caller owns the chunking, nothing longer than one chunk is ever
+        resident, and ``sizes``/``costs``/``chunk`` must be left unset
+        (enforced — this method does not re-chunk an iterator) — the
+        out-of-core path for file-backed traces.
 
-        Unlike :meth:`replay`, streaming does not consult the engine's
-        ``mesh`` — chunks run unsharded on the default device; for
-        mesh-sharded batch replay use ``replay(..., mesh=...)``.
+        ``observe=True`` accumulates each policy observable's time total
+        in 64 bits on the host and returns its **time mean** per lane in
+        ``result.obs`` (e.g. DAC's average active size ``obs["k"]``) —
+        the streaming equivalent of averaging :meth:`replay`'s stacked
+        per-step observables, without ever materializing a ``[T]`` stack.
+        For integer observables the two are bit-identical.
+
+        Returns a :class:`ReplayResult` with ``info=None`` and host-side
+        metrics.  Unlike :meth:`replay`, streaming does not consult the
+        engine's ``mesh`` — chunks run unsharded on the default device;
+        for mesh-sharded batch replay use ``replay(..., mesh=...)``.
         """
-        if chunk <= 0:
-            raise ValueError(f"chunk must be positive, got {chunk}")
         policy, use_pallas = self._resolve(policy, use_pallas)
-        if isinstance(requests, Request):
+
+        if hasattr(requests, "__next__"):      # iterator of chunks
             if sizes is not None or costs is not None:
-                raise ValueError("pass sizes/costs inside the Request")
-            keys = np.asarray(requests.key)
-            sizes, costs = np.asarray(requests.size), np.asarray(requests.cost)
-        else:
-            keys = np.asarray(requests)
-        if keys.ndim not in (1, 2):
-            raise ValueError(
-                f"requests must be [T] or [B, T], got shape {keys.shape}")
-        batched = keys.ndim == 2
-        T = keys.shape[-1]
+                raise ValueError(
+                    "iterator input: sizes/costs travel inside each chunk")
+            if chunk is not None:
+                raise ValueError(
+                    "iterator input owns its chunking — chunk= is not "
+                    "applied to an iterator; size the chunks at the source")
 
-        def sl(x, lo, hi):
-            if x is None or np.ndim(x) == 0:
-                return x
-            return np.asarray(x)[..., lo:hi]
+            def coerce(item):
+                # unwrap (keys, sizes, costs) chunk records —
+                # repro.data.ingest.TraceChunk or a plain 3-tuple of
+                # array-or-None columns — instead of letting them stack
+                # into a bogus [3, T] key batch (lane batches are
+                # arrays, never tuples)
+                if isinstance(item, (tuple, list)) and len(item) == 3 \
+                        and not isinstance(item, Request) \
+                        and np.ndim(item[0]) > 0 \
+                        and all(x is None or np.ndim(x) > 0
+                                for x in item[1:]):
+                    keys, sizes, costs = item
+                    return Request.of(np.asarray(keys), sizes=sizes,
+                                      costs=costs)
+                return Request.of(item)
 
-        state = policy.init(K)
-        if batched:
-            B = keys.shape[0]
-            state = jax.tree_util.tree_map(
-                lambda x: jnp.broadcast_to(x, (B,) + x.shape).copy(), state)
+            chunks = (coerce(item) for item in requests)
+            lead = None                        # lane shape learned on entry
+        else:                                  # dense host array
+            chunk = (1 << 18) if chunk is None else chunk
+            if chunk <= 0:
+                raise ValueError(f"chunk must be positive, got {chunk}")
+            if isinstance(requests, Request):
+                if sizes is not None or costs is not None:
+                    raise ValueError("pass sizes/costs inside the Request")
+                keys = np.asarray(requests.key)
+                sizes = np.asarray(requests.size)
+                costs = np.asarray(requests.cost)
+            else:
+                keys = np.asarray(requests)
+            if keys.ndim not in (1, 2):
+                raise ValueError(
+                    f"requests must be [T] or [B, T], got shape {keys.shape}")
+            lead = keys.shape[:-1]
 
-        totals = np.zeros(
-            (6,) + ((B,) if batched else ()), dtype=np.float64)
+            def sl(x, lo, hi):
+                if x is None or np.ndim(x) == 0:
+                    return x
+                return np.asarray(x)[..., lo:hi]
+
+            def dense_chunks():
+                for lo in range(0, keys.shape[-1], chunk):
+                    hi = min(lo + chunk, keys.shape[-1])
+                    yield Request.of(keys[..., lo:hi], sl(sizes, lo, hi),
+                                     sl(costs, lo, hi))
+
+            chunks = dense_chunks()
+
+        def init_state(lead):
+            state = policy.init(K)
+            if lead:
+                state = jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(x, lead + x.shape).copy(),
+                    state)
+            return state
+
+        state = None if lead is None else init_state(lead)
+        totals = None if lead is None else np.zeros((6,) + lead, np.float64)
+        obs_sums, T_total = None, 0
         with warnings.catch_warnings():
             # buffer donation is a no-op on some backends (CPU) — harmless
             warnings.filterwarnings(
                 "ignore", message=".*[Dd]onat.*", category=UserWarning)
-            for lo in range(0, T, chunk):
-                hi = min(lo + chunk, T)
-                reqs = Request.of(keys[..., lo:hi], sl(sizes, lo, hi),
-                                  sl(costs, lo, hi))
-                state, m = _replay_chunk(policy, state, reqs, use_pallas)
+            for reqs in chunks:
+                if reqs.key.ndim not in (1, 2):
+                    raise ValueError(
+                        f"chunks must be [T] or [B, T], got shape "
+                        f"{reqs.key.shape}")
+                if state is None:              # first iterator chunk
+                    lead = tuple(reqs.key.shape[:-1])
+                    state = init_state(lead)
+                    totals = np.zeros((6,) + lead, np.float64)
+                elif tuple(reqs.key.shape[:-1]) != tuple(lead):
+                    raise ValueError(
+                        f"chunk lane shape changed mid-stream: "
+                        f"{tuple(reqs.key.shape[:-1])} != {tuple(lead)}")
+                state, m, obs = _replay_chunk(policy, state, reqs,
+                                              use_pallas, observe)
                 totals += np.stack(
                     [np.asarray(f, dtype=np.float64) for f in m])
+                T_total += reqs.key.shape[-1]
+                if obs is not None:
+                    part = {k: np.asarray(v, np.float64).sum(axis=-1)
+                            for k, v in obs.items()}
+                    obs_sums = part if obs_sums is None else {
+                        k: obs_sums[k] + part[k] for k in part}
+        if totals is None:                     # empty iterator
+            totals = np.zeros(6, np.float64)
         metrics = Metrics(
             requests=totals[0].astype(np.int64),
             hits=totals[1].astype(np.int64),
             bytes_total=totals[2], bytes_missed=totals[3],
             cost_total=totals[4], penalty=totals[5],
         )
-        return ReplayResult(info=None, metrics=metrics, obs=None)
+        obs_out = None
+        if obs_sums is not None and T_total:
+            obs_out = {k: v / T_total for k, v in obs_sums.items()}
+        return ReplayResult(info=None, metrics=metrics, obs=obs_out)
 
 
 # ---------------------------------------------------------------------------

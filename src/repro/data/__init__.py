@@ -1,6 +1,11 @@
 """Trace data layer: synthetic generators + the spec-string trace registry
-(see :mod:`repro.data.traces`)."""
+(:mod:`repro.data.traces`) and real-trace file ingestion
+(:mod:`repro.data.ingest`)."""
+from . import ingest
+from .ingest import (DenseRemap, Trace, TraceChunk, TraceStats, characterize,
+                     count_requests, detect_format, iter_chunks, load_trace,
+                     write_csv, write_keys, write_oracle_general)
 from .traces import (DATASET_FAMILIES, TIER_FAMILIES, TRACE_ALIASES, TRACES,
                      TraceSpec, churn_trace, dataset_family, fetch_costs,
-                     make_trace, object_sizes, scan_mix_trace,
+                     file_trace, make_trace, object_sizes, scan_mix_trace,
                      shifting_zipf_trace, tenants_trace, zipf_trace)

@@ -24,12 +24,13 @@ import inspect
 import numpy as np
 
 from ..specs import build_kwargs, coerce_value, format_spec, parse_spec
+from . import ingest
 
 __all__ = [
     "zipf_trace", "shifting_zipf_trace", "scan_mix_trace", "churn_trace",
-    "tenants_trace", "dataset_family", "DATASET_FAMILIES", "object_sizes",
-    "fetch_costs", "TraceSpec", "make_trace", "TRACES", "TRACE_ALIASES",
-    "TIER_FAMILIES",
+    "tenants_trace", "file_trace", "dataset_family", "DATASET_FAMILIES",
+    "object_sizes", "fetch_costs", "TraceSpec", "make_trace", "TRACES",
+    "TRACE_ALIASES", "TIER_FAMILIES",
 ]
 
 
@@ -111,28 +112,75 @@ def _phase_sizes(rng, T, mean_phase):
     return sizes
 
 
+def _churn_phases(N: int, T: int, mean_phase: int, drift: float,
+                  hot_frac: float, seed: int):
+    """Yield ``(start, stop, perm)`` per churn phase, where ``perm[r]`` is
+    the object id occupying popularity rank ``r`` during that phase.
+
+    Each phase swaps ``round(H * drift)`` ids out of the hot ranks
+    ``[0, H)`` (``H = max(1, int(N * hot_frac))``) against ids drawn from
+    the cold ranks ``[H, N)`` — so the realized hot-set turnover is
+    *exactly* ``round(H * drift) / H`` every phase, not a lumpy binomial
+    whose typical value is far below ``drift`` for skewed traces (the old
+    uniform-over-all-``N`` rotation touched the hot ranks only in
+    expectation).  Any positive ``drift`` rotates at least one id, so the
+    turnover is floored at ``1/H`` when ``H * drift < 1/2`` rather than
+    silently rounding to a drift-free trace.  The per-phase test in
+    ``tests/test_traces.py`` measures turnover through this generator."""
+    if not 0 < hot_frac < 1:
+        raise ValueError(
+            f"hot_frac must lie in (0, 1), got {hot_frac} — with no cold "
+            "ranks there is nothing to rotate against")
+    if not 0 <= drift <= 1:
+        raise ValueError(
+            f"drift must lie in [0, 1], got {drift} — it is the fraction "
+            "of the hot set rotated per phase")
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 0]))
+    perm = rng.permutation(N).astype(np.int32)
+    H = max(1, int(N * hot_frac))
+    n_rot = max(1, int(round(H * drift))) if drift > 0 else 0
+    if n_rot > N - H:
+        # clamping would silently deliver less turnover than promised
+        raise ValueError(
+            f"drift={drift} with hot_frac={hot_frac} needs {n_rot} cold "
+            f"ids per phase but only {N - H} exist; shrink hot_frac or "
+            "drift")
+    pos = 0
+    for size in _phase_sizes(rng, T, mean_phase):
+        if n_rot > 0:
+            hot = rng.choice(H, size=n_rot, replace=False)
+            cold = H + rng.choice(N - H, size=n_rot, replace=False)
+            swap_in, swap_out = perm[cold].copy(), perm[hot].copy()
+            perm[hot], perm[cold] = swap_in, swap_out
+        yield pos, pos + size, perm.copy()
+        pos += size
+
+
 def churn_trace(N: int, T: int, alpha: float, mean_phase: int,
-                drift: float, seed: int = 0) -> np.ndarray:
-    """Zipf with gradual popularity drift: each phase, a `drift` fraction of
-    the hot set is rotated out (ids shift), the rest persists.  Closer to
-    production KV churn than full re-permutation.
+                drift: float, seed: int = 0, *,
+                hot_frac: float = 0.1) -> np.ndarray:
+    """Zipf with gradual popularity drift: each phase, a ``drift`` fraction
+    of the hot set — the ids on the top ``hot_frac * N`` popularity ranks —
+    is rotated out against previously-cold ids; the rest persists.  Closer
+    to production KV churn than full re-permutation.
+
+    The rotation swaps exactly ``round(H * drift)`` hot-ranked ids
+    (at least one while ``drift > 0``) with cold-ranked ones per phase
+    (``H = hot_frac * N``), so the realized hot-set turnover *is* the
+    ``drift`` parameter, deterministically —
+    rather than a drift-in-expectation-only shuffle spread uniformly over
+    all ``N`` ids, which left the typical phase of a skewed trace with no
+    hot turnover at all.
 
     >>> churn_trace(N=64, T=50, alpha=1.0, mean_phase=20, drift=0.1).shape
     (50,)
     """
-    rng = np.random.default_rng(seed)
     pmf = _zipf_pmf(N, alpha)
-    perm = rng.permutation(N).astype(np.int32)
+    draw = np.random.default_rng(np.random.SeedSequence([seed, 1]))
     out = np.empty(T, dtype=np.int32)
-    pos = 0
-    for size in _phase_sizes(rng, T, mean_phase):
-        n_rot = int(N * drift)
-        if n_rot > 0:
-            idx = rng.choice(N, size=n_rot, replace=False)
-            perm[idx] = rng.permutation(perm[idx])
-        draws = rng.choice(N, size=size, p=pmf)
-        out[pos:pos + size] = perm[draws]
-        pos += size
+    for start, stop, perm in _churn_phases(N, T, mean_phase, drift,
+                                           hot_frac, seed):
+        out[start:stop] = perm[draw.choice(N, size=stop - start, p=pmf)]
     return out
 
 
@@ -176,6 +224,29 @@ def tenants_trace(N: int, T: int, n_tenants: int, alpha: float = 0.9,
     return out
 
 
+def file_trace(path: str, format: str = "auto", T: int = 0,
+               seed: int = 0) -> np.ndarray:
+    """Keys of a *real* trace file (``repro.data.ingest`` formats:
+    oracleGeneral binary / CSV / key-per-line, gzip-transparent), densely
+    remapped to ``[0, n_objects)`` int32 in first-appearance order.
+
+    Real data has no seed axis: ``seed`` is accepted (the registry's
+    runtime contract) and ignored.  ``T > 0`` takes the first ``T``
+    requests and raises if the file is shorter — a silent wrap-around
+    would distort reuse distances; ``T <= 0`` returns the whole trace.
+    Per-request sizes/costs carried by the file are exposed through
+    :func:`repro.data.ingest.load_trace`, which the bench layer uses for
+    file-backed scenarios.
+    """
+    del seed  # real traces are data, not a distribution to resample
+    tr = ingest.load_trace(path, format=format, limit=max(0, T))
+    if T > 0 and len(tr.keys) < T:
+        raise ValueError(
+            f"file trace {path!r} has only {len(tr.keys)} requests, "
+            f"T={T} requested (no implicit wrap-around)")
+    return tr.keys
+
+
 # --- dataset families ------------------------------------------------------
 # Parameters chosen to mimic the published character of each dataset:
 #   alibaba   block storage, high skew, heavy churn, large footprint
@@ -211,6 +282,7 @@ TRACES = {
     "scan_mix": scan_mix_trace,
     "churn": churn_trace,
     "tenants": tenants_trace,
+    "file": file_trace,
 }
 
 # families whose generators emit [T, n_tenants] interleaved tier streams
@@ -264,9 +336,43 @@ class TraceSpec:
     @property
     def n_keys(self) -> int:
         """Id-space footprint: keys lie in ``[0, n_keys)``.  Scan mixes
-        address ``[0, 2N)`` (cold scan keys live in ``[N, 2N)``)."""
+        address ``[0, 2N)`` (cold scan keys live in ``[N, 2N)``); file
+        traces resolve their distinct-key count from the file itself
+        (``repro.data.ingest.characterize``, cached by path + mtime)."""
+        if self.is_file:
+            return self.stats().n_objects
         N = self.kwargs["N"]
         return 2 * N if self.family == "scan_mix" else N
+
+    @property
+    def is_file(self) -> bool:
+        """True for file-backed traces (family ``"file"``): real data —
+        ``generate`` ignores the seed, and per-request sizes/costs come
+        from the file rather than a synthetic size model."""
+        return self.family == "file"
+
+    def stats(self) -> "ingest.TraceStats":
+        """File-backed traces only: the underlying file's
+        :class:`repro.data.ingest.TraceStats` (request/object counts,
+        byte footprint, skew estimate)."""
+        if not self.is_file:
+            raise ValueError(
+                f"stats() is for file-backed traces; {self.family!r} is "
+                "synthetic — its footprint is the N parameter")
+        return ingest.characterize(self.kwargs["path"],
+                                   self.kwargs.get("format", "auto"))
+
+    @property
+    def n_requests(self) -> int:
+        """File-backed traces only: the trace length, via the cheap
+        :func:`repro.data.ingest.count_requests` path (O(1) for
+        uncompressed oracle files — no full characterization pass)."""
+        if not self.is_file:
+            raise ValueError(
+                f"n_requests is for file-backed traces; {self.family!r} "
+                "is synthetic — any T can be generated")
+        return ingest.count_requests(self.kwargs["path"],
+                                     self.kwargs.get("format", "auto"))
 
     @property
     def is_tier(self) -> bool:
@@ -284,7 +390,8 @@ class TraceSpec:
         return format_spec(self.family, self.kwargs)
 
     def generate(self, T: int, seed: int = 0) -> np.ndarray:
-        """One ``[T]`` int32 trace, deterministic in ``seed``."""
+        """One ``[T]`` int32 trace, deterministic in ``seed`` (file-backed
+        traces are real data — every seed returns the same keys)."""
         return TRACES[self.family](T=T, seed=seed, **self.kwargs)
 
     def generate_batch(self, T: int, seeds) -> np.ndarray:
@@ -295,9 +402,10 @@ class TraceSpec:
 
 def make_trace(spec) -> TraceSpec:
     """Build a :class:`TraceSpec` from a spec string: a registered family
-    (``"zipf(N=8192,alpha=0.9)"``) or a dataset alias (``"alibaba"``,
-    optionally with parameter overrides).  Values are coerced to the
-    generator parameter's declared type; unknown families, unknown
+    (``"zipf(N=8192,alpha=0.9)"``), a dataset alias (``"alibaba"``,
+    optionally with parameter overrides), or a real trace file
+    (``"file(path=benchmarks/corpus/kv.csv.gz)"``).  Values are coerced
+    to the generator parameter's declared type; unknown families, unknown
     parameters, and missing required parameters raise ``ValueError`` —
     the same contract as ``make_policy``.  ``TraceSpec`` instances pass
     through.

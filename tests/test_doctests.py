@@ -22,6 +22,7 @@ MODULES = [
     "repro.core.baselines",
     "repro.core.lirs_lhd",
     "repro.data.traces",
+    "repro.data.ingest",
     "repro.bench.scenario",
     "repro.bench.runner",
     "repro.bench.results",

@@ -1,0 +1,340 @@
+"""Trace ingestion: per-format write->read round-trips, dense-remap
+determinism and chunked/full equivalence, characterization stats, and the
+``file(path=...)`` registry family's contract (spec round-trip, footprint
+resolution, scenario validation, corpus freshness)."""
+import importlib.util
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.bench import Scenario
+from repro.data import ingest
+from repro.data.traces import make_trace
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+CORPUS = ROOT / "benchmarks" / "corpus"
+
+
+@pytest.fixture
+def trace_arrays():
+    rng = np.random.default_rng(42)
+    keys = (rng.integers(0, 60, 500) * 997 + 13).astype(np.int64)
+    sizes = rng.integers(1, 200, 500).astype(np.int64)
+    costs = (sizes / 64 + 1).astype(np.float32)   # dyadic: exact in text
+    return keys, sizes, costs
+
+
+FORMAT_CASES = [
+    ("t.oracleGeneral.bin", "oracle"),
+    ("t.oracleGeneral.bin.gz", "oracle"),
+    ("t.csv", "csv"),
+    ("t.csv.gz", "csv"),
+    ("t.keys.txt", "txt"),
+    ("t.keys.txt.gz", "txt"),
+]
+
+
+def _write(path, fmt, keys, sizes, costs):
+    if fmt == "oracle":
+        ingest.write_oracle_general(path, keys, sizes)
+    elif fmt == "csv":
+        ingest.write_csv(path, keys, sizes, costs)
+    else:
+        ingest.write_keys(path, keys)
+
+
+# --- write -> read round-trips ---------------------------------------------
+
+@pytest.mark.parametrize("name,fmt", FORMAT_CASES)
+def test_roundtrip_preserves_columns(tmp_path, trace_arrays, name, fmt):
+    """Each format preserves exactly the columns it carries: keys always
+    (via the order-isomorphic dense remap), sizes for oracle/csv, costs
+    for csv."""
+    keys, sizes, costs = trace_arrays
+    path = str(tmp_path / name)
+    _write(path, fmt, keys, sizes, costs)
+    tr = ingest.load_trace(path)
+    # dense ids are first-appearance-ordered: remapping the original keys
+    # the same way must reproduce them exactly
+    np.testing.assert_array_equal(tr.keys, ingest.DenseRemap()(keys))
+    assert tr.keys.dtype == np.int32
+    assert tr.n_objects == len(np.unique(keys))
+    if fmt in ("oracle", "csv"):
+        np.testing.assert_array_equal(tr.sizes, sizes)
+    else:
+        assert tr.sizes is None
+    if fmt == "csv":
+        np.testing.assert_array_equal(tr.costs, costs)
+    else:
+        assert tr.costs is None
+
+
+def test_oracle_record_layout(tmp_path, trace_arrays):
+    """The oracleGeneral writer emits libCacheSim's packed 24-byte
+    little-endian records — raw obj ids and sizes survive unremapped."""
+    keys, sizes, _ = trace_arrays
+    path = str(tmp_path / "t.oracleGeneral.bin")
+    ingest.write_oracle_general(path, keys, sizes)
+    rec = np.fromfile(path, dtype=ingest.ORACLE_DTYPE)
+    assert ingest.ORACLE_DTYPE.itemsize == 24
+    np.testing.assert_array_equal(rec["obj"], keys.astype(np.uint64))
+    np.testing.assert_array_equal(rec["size"], sizes.astype(np.uint32))
+    # next_access_vtime: position of the key's next occurrence, or -1
+    i = int(np.argmax(rec["next"] >= 0))
+    nxt = int(rec["next"][i])
+    assert keys[nxt] == keys[i] and not np.any(keys[i + 1:nxt] == keys[i])
+
+
+def test_truncated_oracle_raises(tmp_path):
+    path = str(tmp_path / "t.oracleGeneral.bin")
+    ingest.write_oracle_general(path, [1, 2, 3])
+    with open(path, "ab") as f:
+        f.write(b"\x00" * 7)
+    with pytest.raises(ValueError, match="24-byte"):
+        ingest.load_trace(path)
+
+
+def test_csv_header_reorder_and_extra_columns(tmp_path):
+    path = str(tmp_path / "t.csv")
+    with open(path, "w") as f:
+        f.write("op,size,key,cost\nGET,10,7,1.5\nGET,20,9,2.5\n")
+    tr = ingest.load_trace(path)
+    assert tr.keys.tolist() == [0, 1]
+    assert tr.sizes.tolist() == [10, 20]
+    assert tr.costs.tolist() == [1.5, 2.5]
+    with open(path, "w") as f:
+        f.write("op,size\nGET,10\n")
+    ingest._load_full.cache_clear()
+    with pytest.raises(ValueError, match="no 'key'"):
+        ingest.load_trace(path)
+
+
+def test_csv_headerless_positional(tmp_path):
+    path = str(tmp_path / "t.csv")
+    with open(path, "w") as f:
+        f.write("5,10\n5,10\n8,30\n")
+    tr = ingest.load_trace(path)
+    assert tr.keys.tolist() == [0, 0, 1]
+    assert tr.sizes.tolist() == [10, 10, 30]
+    assert tr.costs is None
+
+
+def test_csv_headerless_string_keys(tmp_path):
+    """A first data row with a textual key (hash-keyed traces) must not
+    be swallowed by header sniffing — only a row naming `key` (or an
+    all-textual multi-column foreign header, refused) is special."""
+    path = str(tmp_path / "t.csv")
+    with open(path, "w") as f:
+        f.write("deadbeef,10\ncafe,20\ndeadbeef,10\n")
+    tr = ingest.load_trace(path)
+    assert tr.keys.tolist() == [0, 1, 0]
+    assert tr.sizes.tolist() == [10, 20, 10]
+
+
+def test_mixed_token_keys_chunk_invariant(tmp_path):
+    """Regression: keys are compared as raw text, so a chunk's token mix
+    cannot change identities across chunk boundaries ('1234' stays
+    '1234' whether its chunk also contains 'abcd' or not), and '007' is
+    a different object than '7'."""
+    path = str(tmp_path / "t.keys.txt")
+    ingest.write_keys(path, np.array(
+        ["1234", "abcd", "1234", "5678", "abcd", "5678", "007", "7"]))
+    full = ingest.load_trace(path)
+    assert full.keys.tolist() == [0, 1, 0, 2, 1, 2, 3, 4]
+    for chunk in (1, 2, 3):
+        got = np.concatenate(
+            [c.keys for c in ingest.iter_chunks(path, chunk=chunk)])
+        np.testing.assert_array_equal(got, full.keys,
+                                      err_msg=f"chunk={chunk}")
+
+
+def test_csv_single_textual_column_is_ambiguous(tmp_path):
+    """'obj_id\\nA\\nB\\n' is undecidable (header? bare string keys?) —
+    refuse with guidance instead of ingesting a phantom object."""
+    path = str(tmp_path / "t.csv")
+    with open(path, "w") as f:
+        f.write("obj_id\nA\nB\nA\n")
+    with pytest.raises(ValueError, match="no 'key' column"):
+        ingest.load_trace(path)
+
+
+def test_count_requests_cheap_path(tmp_path, trace_arrays):
+    """count_requests agrees with characterize on every format, and the
+    uncompressed-oracle fast path is pure arithmetic on the file size."""
+    keys, sizes, costs = trace_arrays
+    for name, fmt in FORMAT_CASES:
+        path = str(tmp_path / name)
+        _write(path, fmt, keys, sizes, costs)
+        assert ingest.count_requests(path) == 500
+        assert ingest.characterize(path).n_requests == 500
+    bad = str(tmp_path / "bad.oracleGeneral.bin")
+    with open(bad, "wb") as f:
+        f.write(b"\x00" * 25)
+    with pytest.raises(ValueError, match="24-byte"):
+        ingest.count_requests(bad)
+
+
+def test_txt_string_keys(tmp_path):
+    path = str(tmp_path / "t.keys.txt")
+    with open(path, "w") as f:
+        f.write("alpha\nbeta\nalpha\n42\n")
+    tr = ingest.load_trace(path)
+    assert tr.keys.tolist() == [0, 1, 0, 2]
+
+
+# --- dense remap -----------------------------------------------------------
+
+def test_dense_remap_first_appearance_order():
+    out = ingest.DenseRemap()(np.array([50, 20, 50, 90, 20]))
+    assert out.tolist() == [0, 1, 0, 2, 1]
+
+
+def test_dense_remap_deterministic_and_chunk_invariant(tmp_path,
+                                                       trace_arrays):
+    """The remap depends only on the key sequence: loading twice is
+    identical, and chunked iteration (any chunk size) reproduces the
+    full load bit for bit."""
+    keys, sizes, costs = trace_arrays
+    path = str(tmp_path / "t.csv")
+    ingest.write_csv(path, keys, sizes, costs)
+    full = ingest.load_trace(path)
+    np.testing.assert_array_equal(full.keys, ingest.load_trace(path).keys)
+    for chunk in (1, 7, 64, 10_000):
+        got = np.concatenate(
+            [c.keys for c in ingest.iter_chunks(path, chunk=chunk)])
+        np.testing.assert_array_equal(got, full.keys, err_msg=f"chunk={chunk}")
+
+
+def test_limit_is_a_prefix(tmp_path, trace_arrays):
+    keys, sizes, costs = trace_arrays
+    path = str(tmp_path / "t.csv")
+    ingest.write_csv(path, keys, sizes, costs)
+    full = ingest.load_trace(path)
+    part = ingest.load_trace(path, limit=123)
+    np.testing.assert_array_equal(part.keys, full.keys[:123])
+    np.testing.assert_array_equal(part.sizes, full.sizes[:123])
+    chunks = list(ingest.iter_chunks(path, chunk=50, limit=123))
+    assert sum(len(c.keys) for c in chunks) == 123
+    np.testing.assert_array_equal(
+        np.concatenate([c.keys for c in chunks]), part.keys)
+
+
+# --- format detection ------------------------------------------------------
+
+def test_detect_format():
+    assert ingest.detect_format("x/mix.oracleGeneral.bin.gz") == "oracle"
+    assert ingest.detect_format("kv.csv") == "csv"
+    assert ingest.detect_format("a.keys") == "txt"
+    with pytest.raises(ValueError, match="pass format="):
+        ingest.detect_format("trace.dat")
+    with pytest.raises(ValueError, match="unknown trace format"):
+        ingest.load_trace("whatever.csv", format="parquet")
+
+
+# --- characterization ------------------------------------------------------
+
+def test_characterize_counts_and_footprint(tmp_path):
+    path = str(tmp_path / "t.csv")
+    ingest.write_csv(path, [1, 1, 1, 2], sizes=[100, 100, 100, 50])
+    st = ingest.characterize(path)
+    assert (st.n_requests, st.n_objects) == (4, 2)
+    assert st.total_bytes == 350          # traffic volume
+    assert st.footprint_bytes == 150      # storage demand (first-seen)
+    assert st.unique_frac == 0.5
+
+
+def test_characterize_skew_orders_zipf_exponents(tmp_path):
+    from repro.data.traces import zipf_trace
+    skews = []
+    for alpha in (0.2, 1.4):
+        path = str(tmp_path / f"z{alpha}.keys.txt")
+        ingest.write_keys(path, zipf_trace(N=512, T=20_000, alpha=alpha,
+                                           seed=0))
+        skews.append(ingest.characterize(path).skew)
+    assert skews[1] > skews[0] > 0
+
+
+# --- the file(...) registry family -----------------------------------------
+
+def _file_spec(tmp_path, **kw):
+    path = str(tmp_path / "t.csv")
+    keys = np.array([5, 2, 5, 9, 2, 5])
+    ingest.write_csv(path, keys, sizes=[10, 20, 10, 30, 20, 10], **kw)
+    return make_trace(f"file(path={path})")
+
+
+def test_file_spec_roundtrips_like_every_family(tmp_path):
+    spec = _file_spec(tmp_path)
+    assert spec.family == "file" and spec.is_file
+    assert make_trace(str(spec)) == spec
+    assert str(make_trace(str(spec))) == str(spec)
+    assert spec.n_keys == 3               # dense footprint from the file
+    assert spec.stats().n_requests == 6
+
+
+def test_file_spec_generate_ignores_seed_and_bounds_T(tmp_path):
+    spec = _file_spec(tmp_path)
+    np.testing.assert_array_equal(spec.generate(T=4, seed=0),
+                                  spec.generate(T=4, seed=99))
+    assert spec.generate(T=4).tolist() == [0, 1, 0, 2]
+    with pytest.raises(ValueError, match="wrap-around"):
+        spec.generate(T=7)
+
+
+def test_file_spec_requires_path():
+    with pytest.raises(ValueError, match="missing required"):
+        make_trace("file")
+    with pytest.raises(ValueError, match="unknown parameter"):
+        make_trace("file(path=x.csv,N=4)")
+
+
+def test_scenario_file_backed_validation(tmp_path):
+    spec = _file_spec(tmp_path)
+    sc = Scenario("real", trace=str(spec), T=6, K=("L", 2))
+    assert sc.capacities() == (4, 2)      # "L" floored at 4 of footprint 3
+    with pytest.raises(ValueError, match="size_model"):
+        Scenario("real", trace=str(spec), T=6, size_model="lognormal")
+    with pytest.raises(ValueError, match="exceeds"):
+        Scenario("real", trace=str(spec), T=1000)
+    with pytest.raises(FileNotFoundError):
+        Scenario("real", trace=f"file(path={tmp_path}/missing.csv)", T=5)
+
+
+# --- the committed corpus --------------------------------------------------
+
+def _load_make_corpus():
+    spec = importlib.util.spec_from_file_location(
+        "make_corpus", ROOT / "tools" / "make_corpus.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_committed_corpus_is_fresh(tmp_path):
+    """tools/make_corpus.py regenerates the committed corpus byte for
+    byte (gzip mtime pinned to 0) — CI diffs on this same property."""
+    mod = _load_make_corpus()
+    paths = mod.build(str(tmp_path))
+    committed = sorted(p.name for p in CORPUS.iterdir())
+    assert sorted(pathlib.Path(p).name for p in paths) == committed
+    for path in paths:
+        fresh = pathlib.Path(path).read_bytes()
+        assert fresh == (CORPUS / pathlib.Path(path).name).read_bytes(), \
+            f"{path} drifted from the committed corpus"
+
+
+@pytest.mark.parametrize("name", ["mix.oracleGeneral.bin.gz", "kv.csv.gz",
+                                  "scan.keys.txt"])
+def test_corpus_files_replay_through_registry(name):
+    spec = make_trace(f"file(path={CORPUS / name})")
+    keys = spec.generate(T=1000)
+    assert keys.dtype == np.int32 and keys.min() >= 0
+    assert keys.max() < spec.n_keys
+
+
+def test_corpus_gz_pair_is_same_trace():
+    a = ingest.load_trace(str(CORPUS / "mix.oracleGeneral.bin"))
+    b = ingest.load_trace(str(CORPUS / "mix.oracleGeneral.bin.gz"))
+    np.testing.assert_array_equal(a.keys, b.keys)
+    np.testing.assert_array_equal(a.sizes, b.sizes)

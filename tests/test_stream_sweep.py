@@ -1,0 +1,210 @@
+"""Streaming replay/sweep parity: ``replay_stream(observe=True)`` matches
+``replay(observe=True)`` (the occupancy-observation gap), iterator-chunk
+input matches dense input, and a Sweep run through the streaming path
+emits records bit-identical to the materialized path — for both Pallas
+settings, synthetic and file-backed scenarios alike."""
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.bench import (Scenario, Sweep, results, run_sweep, should_stream,
+                         stream_chunks)
+from repro.core import Engine, Request
+from repro.data.traces import make_trace, zipf_trace
+
+ENGINE = Engine()
+CORPUS = pathlib.Path(__file__).resolve().parent.parent / "benchmarks" \
+    / "corpus"
+
+
+# --- replay_stream observe= (the satellite bugfix) -------------------------
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_replay_stream_observe_matches_replay(use_pallas):
+    """A streamed DAC run reports the same time-mean observables as the
+    stacked-obs replay — exactly, since integer observables sum without
+    rounding in 64 bits on both paths."""
+    trace = zipf_trace(N=256, T=5000, alpha=1.0, seed=9)
+    full = ENGINE.replay("dac", trace, 24, observe=True,
+                         use_pallas=use_pallas)
+    stream = ENGINE.replay_stream("dac", trace, 24, chunk=1024,
+                                  observe=True, use_pallas=use_pallas)
+    assert int(stream.metrics.hits) == int(full.metrics.hits)
+    for name in ("k", "jump"):
+        want = np.asarray(full.obs[name], np.float64).mean()
+        assert stream.obs[name] == want, (name, stream.obs[name], want)
+
+
+def test_replay_stream_observe_batched():
+    traces = np.stack([zipf_trace(N=96, T=2300, alpha=a, seed=s)
+                       for s, a in enumerate((0.8, 1.1))])
+    full = ENGINE.replay("dac", traces, 16, observe=True,
+                         collect_info=False)
+    stream = ENGINE.replay_stream("dac", traces, 16, chunk=512,
+                                  observe=True)
+    np.testing.assert_array_equal(
+        stream.obs["k"],
+        np.asarray(full.obs["k"], np.float64).mean(axis=-1))
+
+
+def test_replay_stream_observe_none_without_observables():
+    trace = zipf_trace(N=64, T=800, alpha=1.0, seed=1)
+    assert ENGINE.replay_stream("lru", trace, 8, observe=True,
+                                chunk=300).obs is None
+    assert ENGINE.replay_stream("dac", trace, 8, chunk=300).obs is None
+
+
+# --- iterator-chunk input --------------------------------------------------
+
+def test_replay_stream_iterator_matches_dense():
+    trace = zipf_trace(N=256, T=5000, alpha=1.0, seed=4)
+    sizes = (1 + (trace % 11)).astype(np.int32)
+    dense = ENGINE.replay_stream("arc", trace, 24, sizes=sizes, chunk=777)
+    it = ENGINE.replay_stream(
+        "arc", (Request.of(trace[lo:lo + 777], sizes=sizes[lo:lo + 777])
+                for lo in range(0, 5000, 777)), 24)
+    for field in dense.metrics._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(it.metrics, field)),
+            np.asarray(getattr(dense.metrics, field)), err_msg=field)
+
+
+def test_replay_stream_accepts_ingest_chunks_directly():
+    """The advertised pairing — replay_stream over iter_chunks output —
+    unwraps TraceChunk records (keys AND sizes/costs) instead of
+    stacking the three columns into a bogus [3, T] key batch."""
+    from repro.data import ingest
+    path = str(CORPUS / "kv.csv.gz")
+    tr = ingest.load_trace(path)
+    full = ENGINE.replay("lru", Request.of(tr.keys, sizes=tr.sizes,
+                                           costs=tr.costs), 49,
+                         collect_info=False)
+    got = ENGINE.replay_stream("lru", ingest.iter_chunks(path, chunk=777),
+                               49)
+    assert int(got.metrics.requests) == len(tr.keys)      # one lane, not 3
+    assert int(got.metrics.hits) == int(full.metrics.hits)
+    np.testing.assert_allclose(np.asarray(got.metrics.bytes_missed),
+                               np.asarray(full.metrics.bytes_missed),
+                               rtol=1e-6)
+    # a plain (keys, sizes, costs) tuple unwraps the same way
+    plain = ENGINE.replay_stream(
+        "lru", iter([(tr.keys, tr.sizes, tr.costs)]), 49)
+    assert int(plain.metrics.requests) == len(tr.keys)
+    assert int(plain.metrics.hits) == int(full.metrics.hits)
+
+
+def test_replay_stream_iterator_contract():
+    trace = zipf_trace(N=64, T=400, alpha=1.0, seed=2)
+    empty = ENGINE.replay_stream("lru", iter(()), 8)
+    assert int(empty.metrics.requests) == 0 and empty.obs is None
+    with pytest.raises(ValueError, match="inside each chunk"):
+        ENGINE.replay_stream("lru", iter((Request.of(trace),)), 8, sizes=2)
+    with pytest.raises(ValueError, match="owns its chunking"):
+        ENGINE.replay_stream("lru", iter((Request.of(trace),)), 8,
+                             chunk=128)
+    with pytest.raises(ValueError, match="lane shape"):
+        ENGINE.replay_stream(
+            "lru", iter((Request.of(trace),
+                         Request.of(np.stack([trace, trace])))), 8)
+
+
+# --- streaming path selection ----------------------------------------------
+
+def test_should_stream_rules():
+    syn = Scenario("z", trace="zipf(N=64,alpha=1.0)", T=50, K=(8,))
+    real = Scenario("r", trace=f"file(path={CORPUS / 'scan.keys.txt'})",
+                    T=1000)
+    assert not should_stream(syn)
+    assert should_stream(syn, True) and not should_stream(real, False)
+    assert should_stream(syn, threshold=10)    # T beyond the threshold
+    assert should_stream(real)                 # file-backed always streams
+    # strings other than "auto" are an error, not a truthy surprise
+    for bad in ("false", "no", "Auto", 1):
+        with pytest.raises(ValueError, match="stream must be"):
+            should_stream(syn, bad)
+    # a bad chunk errors instead of emitting zero-request "perfect" cells
+    for bad_chunk in (0, -7):
+        with pytest.raises(ValueError, match="chunk"):
+            list(stream_chunks(syn, seeds=(0,), chunk=bad_chunk))
+
+
+def test_stream_chunks_match_materialized_requests():
+    """The streamed chunks concatenate to exactly the materialized batch
+    — keys, sizes and costs — for synthetic and file-backed scenarios."""
+    from repro.bench import materialize
+    for sc in (Scenario("syn", trace="zipf(N=128,alpha=1.0)", T=500,
+                        K=(8,), size_model="lognormal", cost_model="fetch"),
+               Scenario("real", trace=f"file(path={CORPUS / 'kv.csv.gz'})",
+                        T=900)):
+        whole = materialize(sc, seeds=(0, 1))
+        parts = list(stream_chunks(sc, seeds=(0, 1), chunk=256))
+        for field in ("key", "size", "cost"):
+            np.testing.assert_array_equal(
+                np.concatenate([np.asarray(getattr(c, field))
+                                for c in parts], axis=-1),
+                np.asarray(getattr(whole, field)),
+                err_msg=f"{sc.name}.{field}")
+
+
+# --- sweep-level bit-parity (the satellite guarantee) ----------------------
+
+def _parity_sweep():
+    # corpus sizes < 256 B and dyadic costs: every float32 running total
+    # stays exact, so the two paths' records must match *bitwise*
+    return Sweep(
+        "stream_parity",
+        policies=("lru", "dac"),
+        scenarios=(
+            Scenario("syn", trace="zipf(N=256,alpha=1.0)", T=2000,
+                     K=("S", 16)),
+            Scenario("real",
+                     trace=f"file(path={CORPUS / 'mix.oracleGeneral.bin.gz'})",
+                     T=5000, K=("L",)),
+        ),
+        seeds=(0, 1), observe=True)
+
+
+def _strip_wall(record):
+    return {k: v for k, v in record.items() if k != "wall_s"}
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_sweep_records_identical_across_paths(use_pallas):
+    sweep = _parity_sweep()
+    mat = run_sweep(sweep, stream=False, use_pallas=use_pallas)
+    stm = run_sweep(sweep, stream=True, use_pallas=use_pallas)
+    assert len(mat.records) == len(stm.records) == 6
+    for a, b in zip(mat.records, stm.records):
+        assert _strip_wall(a) == _strip_wall(b), (a["policy"], a["scenario"])
+    # adaptive cells carry avg_k on both paths, from real per-step obs
+    for res in (mat, stm):
+        avg_k = res.metric("avg_k", policy="dac", scenario="real")
+        assert avg_k.shape == (2,) and (avg_k > 0).all()
+
+
+def test_sweep_payloads_identical_and_valid(tmp_path):
+    """The full serialized payloads (v2, as benchmarks/real_traces.py
+    emits) agree modulo wall-time and creation provenance."""
+    sweep = _parity_sweep()
+    pa = run_sweep(sweep, stream=False).payload(schema=results.SCHEMA_V2)
+    pb = run_sweep(sweep, stream=True).payload(schema=results.SCHEMA_V2)
+    for p in (pa, pb):
+        results.validate(p)
+        assert p["schema"] == results.SCHEMA_V2
+    assert [_strip_wall(r) for r in pa["records"]] == \
+        [_strip_wall(r) for r in pb["records"]]
+    assert pa["config"] == pb["config"]
+    results.save(pb, results_dir=str(tmp_path))
+    assert results.load(str(tmp_path / "stream_parity.json"))["records"]
+
+
+def test_auto_stream_is_default_and_equivalent():
+    """stream="auto" streams the file-backed scenario and materializes
+    the small synthetic one — with records identical to both forced
+    paths."""
+    sweep = _parity_sweep()
+    auto = run_sweep(sweep)                     # default stream="auto"
+    forced = run_sweep(sweep, stream=True)
+    for a, b in zip(auto.records, forced.records):
+        assert _strip_wall(a) == _strip_wall(b)

@@ -1,12 +1,15 @@
 """Trace-generator regressions: scan/Zipf key-range disjointness (the
 scan_mix_trace wraparound bug aliased "cold" scan keys back into the hot
-Zipf range) and the public surface of the traces module."""
+Zipf range), churn_trace's realized hot-set turnover (the old
+uniform-over-N rotation delivered the docstring's `drift` only in
+expectation — lumpily, with zero-turnover typical phases on skewed
+parameters), and the public surface of the traces module."""
 import numpy as np
 import pytest
 
 from repro.data import traces
-from repro.data.traces import (DATASET_FAMILIES, churn_trace, dataset_family,
-                               scan_mix_trace, zipf_trace)
+from repro.data.traces import (DATASET_FAMILIES, _churn_phases, churn_trace,
+                               dataset_family, scan_mix_trace, zipf_trace)
 
 SCAN_FAMILIES = {name: cfg for name, cfg in DATASET_FAMILIES.items()
                  if cfg["kind"] == "scan"}
@@ -57,6 +60,100 @@ def test_scan_mix_deterministic_and_int32():
     b = scan_mix_trace(128, 5000, 1.0, 0.2, 64, seed=9)
     np.testing.assert_array_equal(a, b)
     assert a.dtype == np.int32
+
+
+@pytest.mark.parametrize("drift,hot_frac", [(0.2, 0.1), (0.05, 0.1),
+                                            (0.25, 0.01)])
+def test_churn_hot_set_turnover_is_exactly_drift(drift, hot_frac):
+    """Regression for the drift-semantics bug: every phase rotates exactly
+    ``round(H * drift)`` ids out of the hot ranks (swapped against cold
+    ids), so the realized per-phase hot-set turnover *is* the documented
+    drift fraction — including the skewed small-hot-set regimes where the
+    old uniform rotation left the typical phase with no turnover at all."""
+    N = 4096
+    H = max(1, int(N * hot_frac))
+    n_rot = min(int(round(H * drift)), N - H)
+    assert n_rot > 0, "parameter set must demand turnover"
+    prev = None
+    n_phases = 0
+    for start, stop, perm in _churn_phases(N, 60_000, 2500, drift,
+                                           hot_frac, seed=3):
+        hot = set(perm[:H].tolist())
+        assert len(hot) == H
+        if prev is not None:
+            survivors = len(hot & prev)
+            assert survivors == H - n_rot, \
+                f"turnover {1 - survivors / H:.3f} != drift {n_rot / H:.3f}"
+            n_phases += 1
+        prev = hot
+    assert n_phases >= 3
+
+
+def test_churn_tiny_drift_still_rotates():
+    """Regression: H * drift < 1/2 must not round the rotation away — a
+    positive drift rotates at least one id per phase (turnover floored
+    at 1/H); drift=0 rotates none."""
+    N, hot_frac = 1000, 0.01          # H = 10; 10 * 0.04 rounds to 0
+    H = 10
+    prev = None
+    for _, _, perm in _churn_phases(N, 20_000, 2000, 0.04, hot_frac,
+                                    seed=1):
+        hot = set(perm[:H].tolist())
+        if prev is not None:
+            assert len(hot & prev) == H - 1
+        prev = hot
+    frozen = [perm[:H].tolist()
+              for _, _, perm in _churn_phases(N, 20_000, 2000, 0.0,
+                                              hot_frac, seed=1)]
+    assert all(h == frozen[0] for h in frozen)
+
+
+def test_churn_rejects_degenerate_parameters():
+    """Parameter sets that cannot deliver the promised turnover raise
+    instead of silently clamping to less drift (or none at all)."""
+    for bad in (0.0, 1.0, 1.5, -0.1):
+        with pytest.raises(ValueError, match="hot_frac"):
+            churn_trace(N=100, T=200, alpha=1.0, mean_phase=50, drift=0.1,
+                        hot_frac=bad)
+    for bad in (-0.2, 1.2):
+        with pytest.raises(ValueError, match="drift"):
+            churn_trace(N=100, T=200, alpha=1.0, mean_phase=50, drift=bad)
+    # feasibility: rotating 50% of an 80% hot set needs more cold ids
+    # than exist — refuse rather than deliver half the drift
+    with pytest.raises(ValueError, match="cold ids"):
+        churn_trace(N=100, T=200, alpha=1.0, mean_phase=50, drift=0.5,
+                    hot_frac=0.8)
+
+
+def test_churn_trace_seed_stays_sixth_positional():
+    """hot_frac is keyword-only, so pre-existing positional callers
+    (seed as the 6th argument) keep their meaning."""
+    a = churn_trace(64, 500, 1.0, 100, 0.1, 7)
+    b = churn_trace(N=64, T=500, alpha=1.0, mean_phase=100, drift=0.1,
+                    seed=7)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_churn_phases_tile_the_trace():
+    phases = list(_churn_phases(512, 10_000, 900, 0.1, 0.1, seed=0))
+    assert phases[0][0] == 0 and phases[-1][1] == 10_000
+    for (a, b, _), (c, d, _) in zip(phases, phases[1:]):
+        assert b == c and a < b
+    ids = np.sort(phases[0][2])
+    np.testing.assert_array_equal(ids, np.arange(512))   # perm stays a perm
+
+
+def test_churn_trace_draws_through_phase_perms():
+    """churn_trace is exactly `perm[zipf draws]` phase by phase — the
+    generator the turnover test measures is the one the trace uses."""
+    kw = dict(N=256, T=8000, alpha=1.0, mean_phase=1000, drift=0.2)
+    tr = churn_trace(**kw, seed=5)
+    draw = np.random.default_rng(np.random.SeedSequence([5, 1]))
+    pmf = traces._zipf_pmf(256, 1.0)
+    for start, stop, perm in _churn_phases(256, 8000, 1000, 0.2, 0.1,
+                                           seed=5):
+        want = perm[draw.choice(256, size=stop - start, p=pmf)]
+        np.testing.assert_array_equal(tr[start:stop], want)
 
 
 def test_churn_trace_exported_and_reachable():

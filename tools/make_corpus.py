@@ -1,0 +1,100 @@
+#!/usr/bin/env python
+"""Regenerate the committed miniature real-trace corpus.
+
+The corpus under ``benchmarks/corpus/`` exercises every ingest format
+(oracleGeneral binary, the same bytes gzipped, CSV-with-costs gzipped,
+key-per-line text) end to end: ``tools/make_corpus.py`` -> ``repro.data.ingest``
+-> the ``file(path=...)`` trace family -> ``run_sweep``'s streaming path
+(``benchmarks/real_traces.py``).  Everything is deterministic — fixed
+seeds, gzip ``mtime=0`` — so CI regenerates the corpus and ``git diff``s
+it against the committed files.
+
+Sizes are small integers (< 256 bytes) and costs are dyadic rationals:
+their float32 running sums stay exact at corpus scale, which is what
+lets the streaming/materialized parity tests assert *bit-identical*
+records rather than tolerances.
+
+Usage::
+
+    PYTHONPATH=src python tools/make_corpus.py [--out benchmarks/corpus] [--T 5000]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.data import ingest  # noqa: E402
+from repro.data.traces import (churn_trace, scan_mix_trace,  # noqa: E402
+                               zipf_trace)
+
+DEFAULT_OUT = os.path.join("benchmarks", "corpus")
+
+
+def _sizes(keys: np.ndarray, seed: int) -> np.ndarray:
+    """Per-object sizes in [1, 256): a deterministic table indexed by key,
+    so every request for an object carries the same size (as in a real
+    trace) and float32 byte totals stay exact at corpus scale."""
+    n = int(keys.max()) + 1
+    table = np.random.default_rng(seed).integers(1, 256, n)
+    return table[keys]
+
+
+def build(out_dir: str = DEFAULT_OUT, T: int = 5000) -> list[str]:
+    """Write the four corpus files; returns their paths."""
+    os.makedirs(out_dir, exist_ok=True)
+    paths = []
+
+    def emit(name, writer, *args, **kw):
+        path = os.path.join(out_dir, name)
+        writer(path, *args, **kw)
+        paths.append(path)
+        return path
+
+    # churn workload with sizes — the oracleGeneral pair (plain + gzip
+    # share content: the gzip reader must see identical requests)
+    mix = churn_trace(N=600, T=T, alpha=1.1, mean_phase=T // 5, drift=0.2,
+                      seed=7)
+    mix_sizes = _sizes(mix, seed=70)
+    emit("mix.oracleGeneral.bin", ingest.write_oracle_general, mix,
+         mix_sizes)
+    emit("mix.oracleGeneral.bin.gz", ingest.write_oracle_general, mix,
+         mix_sizes)
+
+    # skewed KV workload with sizes *and* costs — CSV, gzipped.  Costs are
+    # dyadic (size/64 + 1): exact in float32 and in decimal text.
+    kv = zipf_trace(N=800, T=T, alpha=1.2, seed=11)
+    kv_sizes = _sizes(kv, seed=110)
+    kv_costs = (kv_sizes / 64 + 1).astype(np.float32)
+    emit("kv.csv.gz", ingest.write_csv, kv, kv_sizes, kv_costs)
+
+    # scan-heavy workload, keys only — plain text, unit sizes downstream
+    scan = scan_mix_trace(N=500, T=T, alpha=0.9, scan_frac=0.3,
+                          scan_len=64, seed=13)
+    emit("scan.keys.txt", ingest.write_keys, scan)
+    return paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help=f"output directory (default {DEFAULT_OUT})")
+    ap.add_argument("--T", type=int, default=5000,
+                    help="requests per trace (default 5000)")
+    args = ap.parse_args(argv)
+    for path in build(args.out, args.T):
+        st = ingest.characterize(path)
+        print(f"{path}: {st.n_requests} reqs, {st.n_objects} objects, "
+              f"{st.footprint_bytes} B footprint, skew~{st.skew:.2f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
