@@ -17,10 +17,13 @@ RESULTS_DIR = results.RESULTS_DIR
 
 
 def save(name: str, payload: dict, *, config: dict | None = None,
-         records: list | None = None) -> dict:
+         records: list | None = None,
+         results_dir: str | None = None) -> dict:
     """Wrap a free-form payload as the ``extras`` of a canonical result
-    envelope, validate it, and write ``<RESULTS_DIR>/<name>.json``."""
+    envelope, validate it, and write ``<results_dir>/<name>.json``
+    (default: the live ``repro.bench.results`` directory, which
+    ``benchmarks.run --out-dir`` redirects)."""
     out = results.build_payload(name, config=config or {},
                                 records=records or [], extras=payload)
-    results.save(out)
+    results.save(out, results_dir=results_dir)
     return out

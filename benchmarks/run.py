@@ -3,9 +3,11 @@
   PYTHONPATH=src python -m benchmarks.run [--fast] [--list] [--only NAME ...]
 
 Every table runs through the declarative Sweep API (repro.bench) and
-writes a schema-validated JSON result to experiments/bench/.  ``--only``
-takes *exact* job names (repeatable, comma-separable; see ``--list``) and
-exits non-zero when a requested name doesn't exist — no silent no-op runs.
+writes a schema-validated JSON result to experiments/bench/ (or
+``--out-dir DIR``, so ad-hoc runs and campaign stores never interleave
+JSONs into the same directory).  ``--only`` takes *exact* job names
+(repeatable, comma-separable; see ``--list``) and exits non-zero when a
+requested name doesn't exist — no silent no-op runs.
 """
 from __future__ import annotations
 
@@ -70,7 +72,12 @@ def main(argv=None) -> int:
     ap.add_argument("--only", action="append", default=[], metavar="NAME",
                     help="run only these jobs (exact names; repeatable or "
                          "comma-separated)")
+    ap.add_argument("--out-dir", default=None, metavar="DIR",
+                    help="write result JSONs here instead of "
+                         f"{results.RESULTS_DIR} (BENCH_OUT)")
     args = ap.parse_args(argv)
+    if args.out_dir:
+        results.set_results_dir(args.out_dir)
 
     jobs = _jobs()
     if args.list:

@@ -12,7 +12,7 @@ import numpy as np
 from ..core import mrr
 
 __all__ = ["select", "seed_values", "cell_label", "pivot",
-           "mrr_matrix", "winners", "fmt_row", "print_table",
+           "mrr_matrix", "winners", "metric_cdf", "fmt_row", "print_table",
            "tier_mrr_matrix", "tier_winners", "tenant_occupancy"]
 
 
@@ -77,15 +77,33 @@ def _mrr_over_cells(records, rows, baseline, metric, key_field, values,
 
 
 def _winners_over_cells(records, rows, metric, key_field, values,
-                        label) -> dict:
+                        label, margin=False) -> dict:
     out = {}
     for scenario, cell in _cells(records, key_field):
+        labels = [label(row) for row in rows]
         stack = np.stack([values(records, metric, row, scenario, cell)
                           for row in rows])
-        best = np.argmin(stack, axis=0)
-        out[f"{scenario}({cell})"] = {
-            label(rows[i]): float((best == i).mean())
-            for i in sorted(set(best.tolist()))}
+        best_val = stack.min(axis=0)
+        # ties break deterministically: the lexicographically smallest
+        # label among the tied rows wins, independent of caller ordering
+        by_label = sorted(range(len(rows)), key=lambda i: labels[i])
+        counts: dict = {}
+        for s in range(stack.shape[1]):
+            w = next(labels[i] for i in by_label
+                     if stack[i, s] == best_val[s])
+            counts[w] = counts.get(w, 0) + 1
+        frac = {w: counts[w] / stack.shape[1] for w in sorted(counts)}
+        if not margin:
+            out[f"{scenario}({cell})"] = frac
+            continue
+        # margin: runner-up minus winner metric per seed, averaged — how
+        # much the win is worth (0.0 on exact ties or a single row)
+        if len(rows) > 1:
+            part = np.partition(stack, 1, axis=0)
+            marg = float((part[1] - part[0]).mean())
+        else:
+            marg = 0.0
+        out[f"{scenario}({cell})"] = {"winners": frac, "margin": marg}
     return out
 
 
@@ -129,18 +147,54 @@ def mrr_matrix(records, policies, baseline: str = "fifo",
                            "K_label", _policy_values, lambda p: p)
 
 
-def winners(records, policies, metric: str = "miss_ratio") -> dict:
+def winners(records, policies, metric: str = "miss_ratio", *,
+            margin: bool = False) -> dict:
     """Fig. 6: per cell, the fraction of seeds on which each policy attains
-    the lowest metric (only winning policies appear).
+    the lowest metric (only winning policies appear).  Exact ties go to
+    the lexicographically smallest policy id — winner tables are stable
+    across runs and caller orderings — and ``margin=True`` additionally
+    reports how far the runner-up trailed (seed-mean metric gap), so a
+    "win" by 0.000 is visible as one.
 
     >>> recs = [{"policy": p, "scenario": "z", "K_label": "8",
     ...          "metrics": {"miss_ratio": [m, m]}}
     ...         for p, m in [("lru", 0.4), ("dac", 0.2)]]
     >>> winners(recs, ["lru", "dac"])
     {'z(8)': {'dac': 1.0}}
+    >>> winners(recs, ["lru", "dac"], margin=True)
+    {'z(8)': {'winners': {'dac': 1.0}, 'margin': 0.2}}
+    >>> tied = [{"policy": p, "scenario": "z", "K_label": "8",
+    ...          "metrics": {"miss_ratio": [0.3]}} for p in ("lru", "arc")]
+    >>> winners(tied, ["lru", "arc"])     # tie -> lexicographic, not order
+    {'z(8)': {'arc': 1.0}}
     """
     return _winners_over_cells(records, policies, metric, "K_label",
-                               _policy_values, lambda p: p)
+                               _policy_values, lambda p: p, margin=margin)
+
+
+def metric_cdf(records, policies, metric: str = "hit_ratio") -> dict:
+    """Per-policy empirical CDF of the seed-mean metric across every
+    (scenario, K) cell — the paper's hit-ratio-CDF-across-traces figure
+    shape.  ``values`` are sorted ascending; ``cdf[i]`` is the fraction
+    of cells at or below ``values[i]``.
+
+    >>> recs = [{"policy": "lru", "scenario": s, "K_label": "8",
+    ...          "metrics": {"hit_ratio": [v]}}
+    ...         for s, v in [("a", 0.8), ("b", 0.4)]]
+    >>> metric_cdf(recs, ["lru"])
+    {'lru': {'values': [0.4, 0.8], 'cdf': [0.5, 1.0]}}
+    """
+    out = {}
+    for pol in policies:
+        recs = select(records, policy=pol)
+        vals = sorted(
+            float(np.mean(seed_values(recs, metric, scenario=sc,
+                                      K_label=kl)))
+            for sc, kl in _cells(recs))
+        n = len(vals)
+        out[pol] = {"values": vals,
+                    "cdf": [(i + 1) / n for i in range(n)]}
+    return out
 
 
 # --- tier (v2) views -------------------------------------------------------
@@ -177,11 +231,13 @@ def tier_mrr_matrix(records, entries, baseline=("fifo", "static"),
                            "budget_label", _entry_values, _tier_label)
 
 
-def tier_winners(records, entries, metric: str = "byte_miss_ratio") -> dict:
+def tier_winners(records, entries, metric: str = "byte_miss_ratio", *,
+                 margin: bool = False) -> dict:
     """Per tier cell, the fraction of seeds on which each (policy,
-    arbiter) entry attains the lowest aggregate metric."""
+    arbiter) entry attains the lowest aggregate metric — same tie-break
+    and ``margin=`` semantics as :func:`winners`."""
     return _winners_over_cells(records, entries, metric, "budget_label",
-                               _entry_values, _tier_label)
+                               _entry_values, _tier_label, margin=margin)
 
 
 def occupancy_timeline(ks, windows: int = 8) -> list:

@@ -42,6 +42,7 @@ import time
 import jax
 
 __all__ = ["SCHEMA_VERSION", "SCHEMA_V2", "SCHEMA_VERSIONS", "RESULTS_DIR",
+           "set_results_dir", "atomic_write_json",
            "provenance", "build_payload", "validate", "save", "load"]
 
 SCHEMA_VERSION = "repro.bench.result/v1"
@@ -54,6 +55,30 @@ SCHEMA_V2 = "repro.bench.result/v2"
 SCHEMA_VERSIONS = (SCHEMA_VERSION, SCHEMA_V2)
 
 RESULTS_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
+
+
+def set_results_dir(path: str) -> str:
+    """Redirect the default results directory for this process (what
+    ``benchmarks.run --out-dir`` plumbs through): every later
+    :func:`save` without an explicit ``results_dir`` writes there, so
+    campaign runs and ad-hoc benchmark runs don't interleave JSONs."""
+    global RESULTS_DIR
+    RESULTS_DIR = str(path)
+    return RESULTS_DIR
+
+
+def atomic_write_json(path: str, payload: dict, *, sort_keys: bool = False,
+                      indent: int = 1) -> str:
+    """Durably write JSON via temp-file + ``os.replace``: a reader (or a
+    crash) never observes a torn file.  Returns ``path``."""
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=indent, sort_keys=sort_keys)
+        f.write("\n")
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return path
 
 _RECORD_OPTIONAL = {
     "policy": str, "scenario": str, "trace": str, "K_label": str,
@@ -220,14 +245,13 @@ def validate(payload: dict) -> dict:
 
 
 def save(payload: dict, *, results_dir: str | None = None) -> str:
-    """Validate and write ``<results_dir>/<bench>.json``; returns the path."""
+    """Validate and write ``<results_dir>/<bench>.json`` (atomically, via
+    :func:`atomic_write_json`); returns the path."""
     validate(payload)
     out_dir = RESULTS_DIR if results_dir is None else results_dir
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"{payload['bench']}.json")
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1)
-    return path
+    return atomic_write_json(path, payload)
 
 
 def load(path: str) -> dict:

@@ -1,0 +1,54 @@
+"""Campaign orchestration: resumable, sharded, corpus-scale evaluation.
+
+The paper's headline result is a 1067-trace, 6-dataset grid; one
+``run_sweep`` call cannot deliver that.  This package runs whole trace
+*directories* through the existing Scenario/Sweep machinery, built to
+survive the realities of corpus scale::
+
+    from repro.campaign import load_manifest, run_campaign, render_report
+    from repro.campaign import CampaignStore
+
+    manifest = load_manifest("campaign.json")    # datasets x grid, as data
+    run_campaign(manifest, "runs/corpus",        # resumable: reruns skip
+                 workers=4, progress=print)      #   completed cells
+    report = render_report(CampaignStore("runs/corpus"))
+
+Four layers (see ``docs/EXPERIMENTS.md`` "Campaigns"):
+
+* :mod:`repro.campaign.manifest` — the versioned
+  ``repro.campaign.manifest/v1`` format: datasets as globs (or pinned
+  lists with frozen :func:`repro.data.ingest.characterize` stats, what
+  ``tools/make_manifest.py`` emits) plus the policy x K x seed grid;
+* :mod:`repro.campaign.store` — one atomically-written, schema-validated
+  ``repro.bench.result/v2`` file per ``(trace, policy, K, seed)`` cell,
+  keyed by content hash and normalized to be bit-reproducible, so a
+  killed worker never corrupts anything and a restart skips what's done;
+* :mod:`repro.campaign.executor` — shards pending cells across process
+  workers (or ``--shard i/n`` across hosts), streams each cell through
+  ``run_sweep(stream="auto")``, quarantines failing traces with their
+  traceback instead of dying, and tickers progress/ETA;
+* :mod:`repro.campaign.report` — hit-ratio CDFs, per-dataset winner
+  tables and miss/byte/penalty reduction vs a baseline, rendered from
+  the store without rerunning anything.
+
+``benchmarks/campaign.py`` is the CLI over all four.
+"""
+from .executor import (CampaignSummary, execute_cell, parse_shard,
+                       pending_cells, plan_cells, run_campaign, shard_cells)
+from .manifest import (MANIFEST_SCHEMA, Dataset, Grid, Manifest,
+                       load_manifest, scan_corpus)
+from .report import (REPORT_SCHEMA, campaign_records, complete_cells,
+                     dataset_winners, format_report, hit_ratio_cdf,
+                     mrr_vs_baseline, render_report)
+from .store import Cell, CampaignStore, cell_key, deterministic_payload
+
+__all__ = [
+    "MANIFEST_SCHEMA", "Manifest", "Dataset", "Grid", "load_manifest",
+    "scan_corpus",
+    "Cell", "CampaignStore", "cell_key", "deterministic_payload",
+    "plan_cells", "pending_cells", "shard_cells", "parse_shard",
+    "execute_cell", "run_campaign", "CampaignSummary",
+    "REPORT_SCHEMA", "campaign_records", "complete_cells",
+    "dataset_winners", "mrr_vs_baseline", "hit_ratio_cdf",
+    "render_report", "format_report",
+]

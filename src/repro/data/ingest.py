@@ -353,6 +353,11 @@ def iter_chunks(path, format: str = "auto", *, chunk: int = DEFAULT_CHUNK,
 
 
 def _cache_key(path):
+    """Cache identity of a trace file: realpath + mtime_ns + size.  Size
+    is part of the key so a same-second rewrite (mtime unchanged at
+    coarse resolution) still invalidates — ``tools/make_manifest.py``
+    freezes these stats into manifests and must never see stale ones.
+    The resolved format is a separate ``lru_cache`` argument."""
     st = os.stat(path)
     return os.path.realpath(path), st.st_mtime_ns, st.st_size
 
@@ -375,7 +380,8 @@ def _count_requests(cache_key, format: str) -> int:
 def count_requests(path, format: str = "auto") -> int:
     """Number of requests in a trace file — O(1) for uncompressed
     ``oracle`` files (size / 24, no decode), a parse-only pass (no remap,
-    no popularity stats) otherwise; cached by path + mtime.  This is the
+    no popularity stats) otherwise; cached by path + mtime + size +
+    format (see :func:`_cache_key`).  This is the
     cheap length check ``repro.bench.Scenario`` validates ``T`` against.
 
     >>> import os, tempfile
@@ -417,7 +423,8 @@ def _load_full(cache_key, format: str, limit: int = 0) -> Trace:
 def load_trace(path, format: str = "auto", *, limit: int = 0) -> Trace:
     """Load a trace into memory as a :class:`Trace` (the materialized
     counterpart of :func:`iter_chunks`; loads are cached by
-    path + mtime + limit).  ``limit > 0`` reads only the first ``limit``
+    path + mtime + size + format + limit, see :func:`_cache_key`).
+    ``limit > 0`` reads only the first ``limit``
     requests — a bounded prefix scan, never a full-file pass, and the
     dense remap of a truncated load matches the full load's prefix.
 
@@ -506,8 +513,9 @@ def _characterize(cache_key, format: str) -> TraceStats:
 
 
 def characterize(path, format: str = "auto") -> TraceStats:
-    """Compute (and cache, by path + mtime) a trace's
-    :class:`TraceStats` in one streaming pass.
+    """Compute (and cache, by path + mtime + size + format — see
+    :func:`_cache_key`) a trace's :class:`TraceStats` in one streaming
+    pass.
 
     >>> import os, tempfile
     >>> p = os.path.join(tempfile.mkdtemp(), "t.csv")

@@ -1,7 +1,8 @@
 """Doctest runner for the public API surface.
 
-Every symbol exported from ``repro.core``, ``repro.bench``, ``repro.data``
-and ``repro.tier`` carries a docstring with an executable example; this
+Every symbol exported from ``repro.core``, ``repro.bench``, ``repro.data``,
+``repro.tier`` and ``repro.campaign`` carries a docstring with an
+executable example; this
 suite runs them all (the scoped equivalent of ``pytest --doctest-modules``)
 so the examples in the docs can't rot.  ``tools/check_docs.py`` relies on
 the same modules importing cleanly for its anchor checks.
@@ -27,6 +28,10 @@ MODULES = [
     "repro.bench.runner",
     "repro.bench.results",
     "repro.bench.report",
+    "repro.campaign.manifest",
+    "repro.campaign.store",
+    "repro.campaign.executor",
+    "repro.campaign.report",
     "repro.specs",
     "repro.tier",
     "repro.tier.arbiter",
@@ -48,8 +53,9 @@ def test_doctests(module):
 
 
 def test_public_exports_have_docstrings():
-    """Every public export of the four packages is documented."""
-    for pkg_name in ("repro.core", "repro.bench", "repro.data", "repro.tier"):
+    """Every public export of the public packages is documented."""
+    for pkg_name in ("repro.core", "repro.bench", "repro.data", "repro.tier",
+                     "repro.campaign"):
         pkg = importlib.import_module(pkg_name)
         exports = getattr(pkg, "__all__", None) or [
             n for n in vars(pkg) if not n.startswith("_")]
