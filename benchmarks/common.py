@@ -18,12 +18,17 @@ RESULTS_DIR = results.RESULTS_DIR
 
 def save(name: str, payload: dict, *, config: dict | None = None,
          records: list | None = None,
+         schema: str = results.SCHEMA_V2,
+         wall_s: float | None = None,
          results_dir: str | None = None) -> dict:
     """Wrap a free-form payload as the ``extras`` of a canonical result
     envelope, validate it, and write ``<results_dir>/<name>.json``
     (default: the live ``repro.bench.results`` directory, which
-    ``benchmarks.run --out-dir`` redirects)."""
+    ``benchmarks.run --out-dir`` redirects).  New payloads default to
+    ``repro.bench.result/v2`` (a strict superset of v1); pass
+    ``schema=results.SCHEMA_VERSION`` to pin v1."""
     out = results.build_payload(name, config=config or {},
-                                records=records or [], extras=payload)
+                                records=records or [], extras=payload,
+                                schema=schema, wall_s=wall_s)
     results.save(out, results_dir=results_dir)
     return out

@@ -1,4 +1,5 @@
-"""Tables IV/V + Fig. 7: throughput scaling.
+"""Tables IV/V + Fig. 7: throughput scaling — plus the policy-step
+performance trajectory.
 
 The paper replays disjoint traces on 1..16 threads; the SPMD-native
 equivalent replays 1..16 *parallel cache lanes* (vmap) per step — same
@@ -12,8 +13,19 @@ wall-clock, so the replay runs here rather than through ``run_sweep``.
 Replays run in metrics-only mode (``collect_info=False``) — the honest
 throughput number excludes materializing a [lanes, T] StepInfo stack that
 production replay never needs.  Rank-based policies are additionally
-measured through the fused Pallas policy-step kernel (``use_pallas=True``,
-interpret-mode off-TPU) and reported side by side with the jnp lowering.
+measured through the fused Pallas policy-step kernel in every *executable*
+lowering — ``"interpret"`` anywhere, ``"compiled"`` (Mosaic/Triton) on
+tpu/gpu — and reported side by side with the jnp lowering.
+
+``--policy-step`` runs the second bench: the committed performance
+trajectory (``experiments/bench/BENCH_policy_step.json``) — jnp vs
+interpret vs compiled Mops for each rank policy × K in the parity grid,
+stamped with the memory-bound roofline targets from
+``repro.launch.roofline.policy_step_targets``.  On hosts that cannot
+execute compiled Pallas (CPU) the compiled cells are skipped and replaced
+with lowering evidence: the compiled configuration is cross-platform
+exported for TPU (Mosaic-legal or the bench fails), recorded under
+``extras["compiled"]``.
 """
 from __future__ import annotations
 
@@ -21,15 +33,31 @@ import argparse
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.bench import Scenario, materialize, report, results
 from repro.core import Engine, make_policy
+from repro.core.policy import lane_pad
+from repro.launch.roofline import policy_step_targets
+
+from benchmarks.common import save
 
 POLS = ["climb", "adaptiveclimb", "dynamicadaptiveclimb", "tinylfu",
         "clock", "sieve", "twoq", "arc", "lru", "blru"]
 # policies with a fused Pallas policy-step lowering (rank-array family)
 RANK_POLS = {"climb", "adaptiveclimb", "dynamicadaptiveclimb"}
+# the committed perf-trajectory grid (ISSUE: parity K grid)
+K_GRID = (128, 1024, 8192, 65536)
+
+
+def _compiled_executable() -> bool:
+    """Compiled Pallas runs only on tpu (Mosaic) / gpu (Triton)."""
+    return jax.default_backend() in ("tpu", "gpu")
+
+
+def _pallas_modes() -> list:
+    return ["interpret"] + (["compiled"] if _compiled_executable() else [])
 
 
 def scenario(T: int, K: int) -> Scenario:
@@ -59,12 +87,12 @@ def run(K: int = 256, T: int = 30_000, lanes_list=(1, 2, 4, 8, 16),
     records = []
     for p in POLS:
         pol = make_policy(p)
-        modes = ["jnp"] + (["pallas"] if p in RANK_POLS else [])
+        modes = ["jnp"] + (_pallas_modes() if p in RANK_POLS else [])
         for mode in modes:
             row = {}
             for lanes in lanes_list:
                 dt = _measure(engine, pol, lane_reqs[lanes], K,
-                              use_pallas=(mode == "pallas"))
+                              use_pallas=False if mode == "jnp" else mode)
                 row[lanes] = lanes * T / dt / 1e6       # Mops
                 records.append({
                     "policy": p, "scenario": sc.name, "trace": sc.trace,
@@ -80,16 +108,104 @@ def run(K: int = 256, T: int = 30_000, lanes_list=(1, 2, 4, 8, 16),
             print(report.fmt_row([p] + [f"{v:.2f}" for v in vals]
                                  + [f"{np.mean(vals):.2f}"],
                                  [30] + [10] * (len(lanes_list) + 1)))
-    payload = results.build_payload(
+    return save(
         "throughput",
+        {"table": {p: {str(k): v for k, v in r.items()}
+                   for p, r in table.items()}},
         config={"K": K, "T": T, "lanes": lanes_list,
                 "scenario": sc.to_config()},
         records=records,
-        extras={"table": {p: {str(k): v for k, v in r.items()}
-                          for p, r in table.items()}},
         wall_s=time.perf_counter() - t_start)
-    results.save(payload)
-    return payload
+
+
+# ---------------------------------------------------------------------------
+# policy-step performance trajectory (BENCH_policy_step.json)
+# ---------------------------------------------------------------------------
+
+def _padded_width(spec: str, K: int) -> int:
+    """The rank-row width policy ``spec`` allocates at capacity K (DAC
+    over-allocates its growth headroom)."""
+    pol = make_policy(spec)
+    return int(pol.init(K)["cache"].shape[0])
+
+
+def _export_compiled_lowering(spec: str, K: int) -> bool:
+    """Lowering evidence where compiled Pallas cannot execute: export the
+    scanned compiled-mode replay program for TPU (runs the full Mosaic
+    pass pipeline); any illegal kernel raises here."""
+    import jax.export
+    from repro.core.policy import pallas_mode
+
+    pol = make_policy(spec)
+
+    def f(keys):
+        with pallas_mode("compiled"):
+            def body(st, key):
+                from repro.core import Request
+                st, info = pol.step(st, Request.of(key))
+                return st, info.hit
+            return jax.lax.scan(body, pol.init(K), keys)[1]
+
+    jax.export.export(jax.jit(f), platforms=["tpu"])(
+        jax.ShapeDtypeStruct((16,), jnp.int32))
+    return True
+
+
+def run_policy_step(K_grid=K_GRID, T: int = 2000, quiet: bool = False):
+    """The committed perf trajectory: scanned single-lane replay Mops per
+    rank policy × K × lowering.  T is a cap — each K runs
+    ``min(T, 2^21 / K)`` requests (>= 128) so the largest rows stay
+    tractable on CPU while small-K cells get stable timings."""
+    engine = Engine()
+    t_start = time.perf_counter()
+    compiled_ok = _compiled_executable()
+    modes = ["jnp"] + _pallas_modes()
+    records = []
+    table = {}
+    targets = {}
+    for p in sorted(RANK_POLS, key=POLS.index):
+        for K in K_grid:
+            W = _padded_width(p, K)
+            target = policy_step_targets([W])[W]
+            targets[f"{p}/K{K}"] = target
+            T_eff = int(max(128, min(T, (1 << 21) // K)))
+            sc = Scenario("policy_step", T=T_eff, K=(K,),
+                          trace=f"zipf(N={max(4096, 2 * K)},alpha=1.1)")
+            reqs = materialize(sc, seeds=range(1))
+            for mode in modes:
+                dt = _measure(engine, p, reqs, K,
+                              use_pallas=False if mode == "jnp" else mode)
+                mops = T_eff / dt / 1e6
+                metrics = {"mops": mops, "wall_s": dt,
+                           "target_mops": target}
+                if mode == "compiled":
+                    # roofline validation: achieved fraction of the
+                    # memory-bound HBM roof for this row width
+                    metrics["roofline_frac"] = mops / target
+                records.append({
+                    "policy": p, "scenario": sc.name, "trace": sc.trace,
+                    "T": T_eff, "K": K, "K_label": str(K), "mode": mode,
+                    "W": W, "metrics": metrics})
+                table[f"{p}[{mode}]/K{K}"] = mops
+    compiled_extras = {"status": "executed" if compiled_ok else
+                       "skipped: this backend cannot execute compiled "
+                       "Pallas (see lowering_ok for Mosaic evidence)",
+                       "backend": jax.default_backend()}
+    if not compiled_ok:
+        compiled_extras["lowering_ok"] = {
+            p: _export_compiled_lowering(p, min(K_grid))
+            for p in sorted(RANK_POLS, key=POLS.index)}
+    if not quiet:
+        print(report.fmt_row(["policy[mode]/K", "Mops"], [40, 12]))
+        for k, v in table.items():
+            print(report.fmt_row([k, f"{v:.3f}"], [40, 12]))
+    return save(
+        "BENCH_policy_step",
+        {"table": table, "roofline_target_mops": targets,
+         "compiled": compiled_extras},
+        config={"K_grid": list(K_grid), "T_cap": T, "modes": modes},
+        records=records,
+        wall_s=time.perf_counter() - t_start)
 
 
 def main():
@@ -99,8 +215,19 @@ def main():
     ap.add_argument("--lanes", type=int, nargs="+", default=[1, 2, 4, 8, 16])
     ap.add_argument("--quiet", action="store_true",
                     help="no table; still writes the JSON result")
+    ap.add_argument("--policy-step", action="store_true",
+                    help="run the policy-step perf trajectory "
+                         "(BENCH_policy_step.json) instead of the "
+                         "lane-scaling table")
+    ap.add_argument("--K-grid", type=int, nargs="+", default=list(K_GRID),
+                    help="--policy-step: capacities to measure")
     args = ap.parse_args()
-    run(K=args.K, T=args.T, lanes_list=args.lanes, quiet=args.quiet)
+    if args.policy_step:
+        run_policy_step(K_grid=tuple(args.K_grid),
+                        T=min(args.T, 30_000) if args.T else 2000,
+                        quiet=args.quiet)
+    else:
+        run(K=args.K, T=args.T, lanes_list=args.lanes, quiet=args.quiet)
 
 
 if __name__ == "__main__":

@@ -6,8 +6,10 @@ request batch (S = the sweep's seed axis) and issues a *single*
 inside one jitted program (metrics-only: totals reduce in the scan carry,
 no ``[T]`` StepInfo ever materializes), instead of a Python loop over
 seeds.  Pass ``mesh=`` (or an Engine built with one) to shard the seed
-axis over devices, and ``use_pallas=True`` to route rank policies through
-the fused Pallas policy-step kernel — both knobs reach every cell.
+axis over devices, and ``use_pallas`` (``False`` / ``"interpret"`` /
+``"compiled"``, or ``True`` for the per-backend default) to route rank
+policies through the fused Pallas policy-step kernel — both knobs reach
+every cell.
 
 Two execution paths per cell, producing identical records (bit-for-bit
 whenever the float32 byte/cost running sums are exact — always for the
@@ -296,7 +298,7 @@ class TierSweepResult:
 
 
 def run_tier_sweep(sweep: TierSweep, *, engine: Engine | None = None,
-                   use_pallas: bool | None = None,
+                   use_pallas=None,
                    progress=None) -> TierSweepResult:
     """Execute every tier cell: one ``[S, T, N]`` batch per scenario
     (shared across entries and budgets), one seed-vmapped
@@ -337,7 +339,7 @@ def run_tier_sweep(sweep: TierSweep, *, engine: Engine | None = None,
 
 
 def run_sweep(sweep: Sweep, *, engine: Engine | None = None,
-              mesh=None, use_pallas: bool | None = None,
+              mesh=None, use_pallas=None,
               stream="auto", chunk: int = ingest.DEFAULT_CHUNK,
               progress=None) -> SweepResult:
     """Execute every cell of ``sweep`` through the Engine.

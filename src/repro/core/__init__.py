@@ -13,7 +13,8 @@ from .baselines import (ARC, BLRU, Clock, Climb, FIFO, Hyperbolic, LFU, LRU,
                         Sieve, TinyLFU, TwoQ)
 from .dynamicadaptiveclimb import DynamicAdaptiveClimb
 from .lirs_lhd import LHD, LIRS
-from .policy import EMPTY, Policy, Request, StepInfo, rank_step, step_info
+from .policy import (EMPTY, LANE, Policy, Request, StepInfo, lane_pad,
+                     padded_row, rank_step, step_info)
 from .simulator import Engine, Metrics, ReplayResult, miss_ratio, mrr
 
 POLICIES = {
@@ -70,7 +71,8 @@ def make_policy(spec) -> Policy:
 __all__ = [
     "AdaptiveClimb", "DynamicAdaptiveClimb", "ARC", "BLRU", "Clock", "Climb",
     "FIFO", "Hyperbolic", "LFU", "LHD", "LIRS", "LRU", "Sieve", "TinyLFU", "TwoQ",
-    "EMPTY", "Policy", "Request", "StepInfo", "step_info", "rank_step",
+    "EMPTY", "LANE", "Policy", "Request", "StepInfo", "step_info",
+    "rank_step", "lane_pad", "padded_row",
     "POLICIES", "ALIASES", "make_policy",
     "Engine", "Metrics", "ReplayResult", "miss_ratio", "mrr",
 ]

@@ -1,6 +1,7 @@
 """AdaptiveClimb — Algorithm 1 of the paper, vectorized.
 
-State: rank-ordered key array ``cache`` (index 0 = top) + scalar ``jump``.
+State: lane-padded rank-ordered key array ``cache`` (index 0 = top; width
+``lane_pad(K)``) + scalars ``jump`` and ``len`` (the logical capacity K).
 
 Paper semantics (translated to 0-indexed ranks):
   * init: jump = K
@@ -17,7 +18,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .policy import EMPTY, Policy, Request, rank_step, step_info
+from .policy import Policy, Request, padded_row, rank_step, step_info
 
 
 class AdaptiveClimb(Policy):
@@ -35,27 +36,28 @@ class AdaptiveClimb(Policy):
     name = "adaptiveclimb"
 
     def init(self, K: int) -> dict:
+        # lane-padded rank row; the logical capacity K rides as the "len"
+        # control scalar (the array width is the padded W)
         return {
-            "cache": jnp.full((K,), EMPTY, dtype=jnp.int32),
+            "cache": padded_row(K),
             "jump": jnp.int32(K),
+            "len": jnp.int32(K),
         }
 
     def step(self, state, req: Request):
-        K = state["cache"].shape[0]
-
         def plan(hit, i, scalars):
-            (jump,) = scalars
+            jump, n = scalars
             # --- hit path ---------------------------------------------
             jump_h = jnp.maximum(jump - 1, 1)
             t_h = jnp.maximum(i - jump_h, 0)
-            # --- miss path: evict rank K-1, insert at K - jump --------
-            jump_m = jnp.minimum(jump + 1, K)
-            t_m = (K - jump_m).astype(jnp.int32)
-            src = jnp.where(hit, i, jnp.int32(K - 1))
+            # --- miss path: evict rank n-1, insert at n - jump --------
+            jump_m = jnp.minimum(jump + 1, n)
+            t_m = n - jump_m
+            src = jnp.where(hit, i, n - 1)
             t = jnp.where(hit, t_h, t_m)
-            return src, t, jnp.int32(K), (jnp.where(hit, jump_h, jump_m),)
+            return src, t, n, (jnp.where(hit, jump_h, jump_m), n)
 
-        cache, (jump,), hit, evicted = rank_step(
-            state["cache"], req.key, (state["jump"],), plan)
-        return {"cache": cache, "jump": jump}, \
+        cache, (jump, n), hit, evicted = rank_step(
+            state["cache"], req.key, (state["jump"], state["len"]), plan)
+        return {"cache": cache, "jump": jump, "len": n}, \
             step_info(hit, req, evicted_key=evicted)

@@ -32,7 +32,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .policy import EMPTY, Policy, Request, find, rank_step, step_info
+from .policy import (EMPTY, Policy, Request, find, padded_row, rank_step,
+                     step_info)
 
 INF32 = jnp.int32(2**31 - 1)
 
@@ -161,20 +162,24 @@ class Climb(Policy):
     name = "climb"
 
     def init(self, K: int) -> dict:
-        return {"cache": jnp.full((K,), EMPTY, jnp.int32)}
+        # lane-padded rank row + the logical capacity as a control scalar
+        # (the array width is the padded W, so K can no longer be read off
+        # the shape — see repro.core.policy's padding invariants)
+        return {"cache": padded_row(K), "len": jnp.int32(K)}
 
     def step(self, state, req: Request):
-        K = state["cache"].shape[0]
-
         def plan(hit, i, scalars):
+            (n,) = scalars
             # hit: swap one rank up; miss: replace the bottom in place
-            # (src == t == K-1 inserts without shifting anything)
-            src = jnp.where(hit, i, jnp.int32(K - 1))
-            t = jnp.where(hit, jnp.maximum(i - 1, 0), jnp.int32(K - 1))
-            return src, t, jnp.int32(K), ()
+            # (src == t == n-1 inserts without shifting anything)
+            src = jnp.where(hit, i, n - 1)
+            t = jnp.where(hit, jnp.maximum(i - 1, 0), n - 1)
+            return src, t, n, (n,)
 
-        cache, _, hit, evicted = rank_step(state["cache"], req.key, (), plan)
-        return {"cache": cache}, step_info(hit, req, evicted_key=evicted)
+        cache, (n,), hit, evicted = rank_step(
+            state["cache"], req.key, (state["len"],), plan)
+        return {"cache": cache, "len": n}, \
+            step_info(hit, req, evicted_key=evicted)
 
 
 class LFU(Policy):

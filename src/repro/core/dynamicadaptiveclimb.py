@@ -1,13 +1,14 @@
 """DynamicAdaptiveClimb — Algorithm 2 of the paper, vectorized, with true
 dynamic cache resizing.
 
-XLA needs static shapes, so the cache array is allocated at
-``K_max = K * growth`` and the *active* size is a traced scalar ``k``; ranks
->= k are ``EMPTY`` and never hit.  Doubling activates already-empty ranks;
-halving wipes ranks >= k/2.  This masked-budget scheme preserves the paper's
-policy behaviour exactly while keeping the state a fixed-shape pytree (and
-therefore batchable: a vmapped fleet of caches may each sit at a different
-active size).
+XLA needs static shapes, so the cache array is allocated at the lane-padded
+width ``lane_pad(K * growth)`` and both the *active* size ``k`` and the
+logical allocation bound ``kmax = K * growth`` are traced scalars; ranks
+>= k are ``EMPTY`` and never hit.  Doubling activates already-empty ranks
+(up to ``kmax`` — never into the lane padding); halving wipes ranks >= k/2.
+This masked-budget scheme preserves the paper's policy behaviour exactly
+while keeping the state a fixed-shape pytree (and therefore batchable: a
+vmapped fleet of caches may each sit at a different active size).
 
 Pseudocode mapping (0-indexed ranks, dynamic k):
   hit at rank i:
@@ -39,7 +40,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .policy import EMPTY, Policy, Request, rank_step, step_info
+from .policy import Policy, Request, padded_row, rank_step, step_info
 
 
 class DynamicAdaptiveClimb(Policy):
@@ -67,19 +68,22 @@ class DynamicAdaptiveClimb(Policy):
         self.k_min = int(k_min)
 
     def init(self, K: int) -> dict:
-        """Fresh state at initial active size ``K`` (array width
-        ``K * growth``).
+        """Fresh state at initial active size ``K``: a lane-padded rank row
+        of width ``lane_pad(K * growth)``, with the logical allocation
+        bound ``kmax = K * growth`` riding as a control scalar (growth is
+        capped by ``kmax``, never by the padded array width).
 
         >>> st = DynamicAdaptiveClimb(growth=2).init(4)
-        >>> st["cache"].shape, int(st["k"]), int(st["jump"])
-        ((8,), 4, 4)
+        >>> st["cache"].shape, int(st["k"]), int(st["jump"]), int(st["kmax"])
+        ((128,), 4, 4, 8)
         """
         K_max = K * self.growth
         return {
-            "cache": jnp.full((K_max,), EMPTY, dtype=jnp.int32),
+            "cache": padded_row(K_max),
             "jump": jnp.int32(K),
             "jump2": jnp.int32(0),
             "k": jnp.int32(K),
+            "kmax": jnp.int32(K_max),
         }
 
     def observables(self, state):
@@ -87,11 +91,16 @@ class DynamicAdaptiveClimb(Policy):
         the active size ``k`` and the ``jump`` controller."""
         return {"k": state["k"], "jump": state["jump"]}
 
-    def _plan(self, K_max: int, budgeted: bool):
+    def _plan(self, budgeted: bool):
         """Build the Alg. 2 control law for :func:`rank_step`.
 
+        The allocation bound rides as the traced scalar ``kmax`` (the
+        padded array width over-allocates, so the bound can no longer be
+        read off the shape — and a tier tenant's bound is the shared
+        budget, not its own width).
+
         ``budgeted=False`` is the paper's law: grow iff ``jump`` saturates
-        at ``2k`` and ``2k <= K_max``.  ``budgeted=True`` threads one extra
+        at ``2k`` and ``2k <= kmax``.  ``budgeted=True`` threads one extra
         control scalar — a dynamic capacity cap ``cap`` (granted by an
         external arbiter, e.g. ``repro.tier``) — and the doubling becomes
         ``k -> min(2k, cap)``: denied when ``cap == k``, partially granted
@@ -109,9 +118,9 @@ class DynamicAdaptiveClimb(Policy):
 
         def plan(hit, i, scalars):
             if budgeted:
-                jump, jump2, k, cap = scalars
+                jump, jump2, k, kmax, cap = scalars
             else:
-                jump, jump2, k = scalars
+                jump, jump2, k, kmax = scalars
             half = k // 2
 
             # --- hit path ----------------------------------------------
@@ -147,17 +156,18 @@ class DynamicAdaptiveClimb(Policy):
             if budgeted:
                 # the arbiter's cap gates (and may partially grant) the
                 # doubling; cap == k denies, k < cap < 2k grants part
-                k_grow = jnp.minimum(2 * k, jnp.minimum(cap, K_max))
+                k_grow = jnp.minimum(2 * k, jnp.minimum(cap, kmax))
                 grow = (jump >= 2 * k) & (k_grow > k)
             else:
                 k_grow = 2 * k
-                grow = (jump >= 2 * k) & (2 * k <= K_max)
+                grow = (jump >= 2 * k) & (2 * k <= kmax)
             shrink = ((~grow) & (jump <= -half) & (jump2 <= shrink_thresh)
                       & (half >= k_min))
 
             k_new = jnp.where(grow, k_grow, jnp.where(shrink, half, k))
-            # deactivated ranks are wiped in the same fused pass
-            wipe_from = jnp.where(shrink, k_new, jnp.int32(K_max))
+            # deactivated ranks are wiped in the same fused pass (ranks
+            # >= k are EMPTY by invariant, so "no wipe" = wipe from kmax)
+            wipe_from = jnp.where(shrink, k_new, kmax)
             # Post-resize control state: after a grow, jump == 2k_old ==
             # k_new, which is exactly Alg. 2's init condition (jump = K) —
             # keep it.  After a shrink, jump is reset to 0 (neutral):
@@ -171,8 +181,8 @@ class DynamicAdaptiveClimb(Policy):
                              jnp.clip(jump, -(k_new // 2), 2 * k_new))
             jump2 = jnp.where(resized, 0, jump2)
             if budgeted:
-                return src, t, wipe_from, (jump, jump2, k_new, cap)
-            return src, t, wipe_from, (jump, jump2, k_new)
+                return src, t, wipe_from, (jump, jump2, k_new, kmax, cap)
+            return src, t, wipe_from, (jump, jump2, k_new, kmax)
 
         return plan
 
@@ -187,20 +197,20 @@ class DynamicAdaptiveClimb(Policy):
         >>> bool(info.hit), int(st["jump"])
         (False, 5)
         """
-        K_max = state["cache"].shape[0]
-        cache, (jump, jump2, k), hit, evicted = rank_step(
+        cache, (jump, jump2, k, kmax), hit, evicted = rank_step(
             state["cache"], req.key,
-            (state["jump"], state["jump2"], state["k"]),
-            self._plan(K_max, budgeted=False))
-        new_state = {"cache": cache, "jump": jump, "jump2": jump2, "k": k}
+            (state["jump"], state["jump2"], state["k"], state["kmax"]),
+            self._plan(budgeted=False))
+        new_state = {"cache": cache, "jump": jump, "jump2": jump2, "k": k,
+                     "kmax": kmax}
         return new_state, step_info(hit, req, evicted_key=evicted)
 
     def step_budgeted(self, state, req: Request):
         """Like :meth:`step`, but growth is gated by a dynamic capacity cap
-        ``state["cap"]`` instead of the static array width: the doubling
+        ``state["cap"]`` on top of the ``kmax`` bound: the doubling
         becomes ``k -> min(2k, cap)`` (denied / granted / partially granted
         by whoever sets the cap — the tier arbiter in ``repro.tier``).
-        ``cap`` rides through the fused step as a fourth control scalar
+        ``cap`` rides through the fused step as an extra control scalar
         and is returned unchanged.  A cap that never truncates a doubling
         (``>= 2k`` or ``<= k`` at every step — see :meth:`_plan`)
         reproduces :meth:`step` bit-identically; pinning it to
@@ -214,11 +224,11 @@ class DynamicAdaptiveClimb(Policy):
         >>> int(st["jump"]), int(st["k"])    # jump saturated at 2k, denied
         (8, 4)
         """
-        K_max = state["cache"].shape[0]
-        cache, (jump, jump2, k, cap), hit, evicted = rank_step(
+        cache, (jump, jump2, k, kmax, cap), hit, evicted = rank_step(
             state["cache"], req.key,
-            (state["jump"], state["jump2"], state["k"], state["cap"]),
-            self._plan(K_max, budgeted=True))
+            (state["jump"], state["jump2"], state["k"], state["kmax"],
+             state["cap"]),
+            self._plan(budgeted=True))
         new_state = {"cache": cache, "jump": jump, "jump2": jump2, "k": k,
-                     "cap": cap}
+                     "kmax": kmax, "cap": cap}
         return new_state, step_info(hit, req, evicted_key=evicted)

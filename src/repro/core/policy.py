@@ -1,12 +1,28 @@
 """Policy interface + shared vectorized primitives.
 
 The paper formulates its caches as ordered lists (rank 1 = top).  The
-TPU-native representation used throughout this repo is a dense ``int32[K]``
+TPU-native representation used throughout this repo is a dense ``int32[W]``
 array of keys ordered by rank (index 0 = top of the cache); ``EMPTY`` (-1)
 marks unused slots.  The paper's "shift elements between a and b down one
 position" becomes a masked select against a rolled copy of the array — an
-O(K) *vector* operation that lowers to a handful of VPU selects instead of a
+O(W) *vector* operation that lowers to a handful of VPU selects instead of a
 data-dependent pointer splice.
+
+Rank rows are **lane-padded**: the array width ``W = lane_pad(K)`` is the
+logical capacity ``K`` rounded up to a multiple of :data:`LANE` (128, the
+TPU vector-lane count), with the padding filled with ``EMPTY``.  The
+logical length rides alongside as a control *scalar* (``len`` for
+fixed-size policies, ``k``/``kmax`` for DynamicAdaptiveClimb), never as an
+array shape — so the same state pytree batches under ``vmap``, resizes
+under Alg. 2, and tiles cleanly through the compiled Pallas kernel.  The
+padding invariants every rank policy maintains:
+
+  * ranks ``>= k`` (the active length) are ``EMPTY`` after every step —
+    in particular the padding ``[K, W)`` never holds a key;
+  * ``find``/``promote``/``demote``/``rank_step`` are equivalent on the
+    padded row and the tight row: the roll wrap value is never selected
+    (``t <= src`` keeps rank 0 out of the shifted range) and a wipe only
+    ever clears already-``EMPTY`` padding ranks.
 
 Every policy is a pure-functional object::
 
@@ -34,6 +50,35 @@ import jax.numpy as jnp
 import numpy as np
 
 EMPTY = jnp.int32(-1)
+
+# TPU vector-lane count: rank rows are padded to a multiple of LANE so the
+# fused policy-step kernel can tile them through VMEM with Mosaic-legal
+# (…, 128k) blocks.  The jnp lowering runs on the same padded rows — state
+# shapes are identical across lowerings, so parity tests compare pytrees
+# directly and switching `use_pallas` never retraces a different program.
+LANE = 128
+
+
+def lane_pad(n: int) -> int:
+    """Padded rank-row width for logical capacity ``n``: the smallest
+    multiple of :data:`LANE` that holds ``n`` (at least one full lane).
+
+    >>> lane_pad(1), lane_pad(128), lane_pad(129), lane_pad(1000)
+    (128, 128, 256, 1024)
+    """
+    if n < 0:
+        raise ValueError(f"capacity must be non-negative, got {n}")
+    return max(LANE, -(-int(n) // LANE) * LANE)
+
+
+def padded_row(n: int) -> jax.Array:
+    """A fresh all-``EMPTY`` rank row of padded width ``lane_pad(n)``.
+
+    >>> row = padded_row(5)
+    >>> row.shape, int(row[0])
+    ((128,), -1)
+    """
+    return jnp.full((lane_pad(n),), EMPTY, dtype=jnp.int32)
 
 
 class Request(NamedTuple):
@@ -186,19 +231,51 @@ def demote(cache: jax.Array, i: jax.Array, t: jax.Array, key: jax.Array):
 
 _PALLAS_STEP = contextvars.ContextVar("repro_use_pallas_step", default=False)
 
+# the three-valued use_pallas knob threaded through every replay entrypoint:
+#   False       — pure-jnp lowering (find + promote as separate jnp ops)
+#   "interpret" — fused Pallas kernel under the Pallas interpreter (any
+#                 backend; the CPU CI path)
+#   "compiled"  — fused Pallas kernel compiled for real (Mosaic on TPU,
+#                 Triton on GPU); fails on CPU, which cannot execute
+#                 compiled Pallas
+#   True        — auto: the kernel with per-backend interpret resolution
+#                 (see repro.kernels.policy_step.resolve_interpret)
+PALLAS_MODES = (False, True, "interpret", "compiled")
+
+
+def normalize_pallas_mode(mode):
+    """Coerce a ``use_pallas`` value to one of :data:`PALLAS_MODES`.
+
+    >>> normalize_pallas_mode(1), normalize_pallas_mode("interpret")
+    (True, 'interpret')
+    >>> normalize_pallas_mode("fast")
+    Traceback (most recent call last):
+        ...
+    ValueError: use_pallas must be one of (False, True, 'interpret', \
+'compiled'), got 'fast'
+    """
+    if isinstance(mode, str):
+        if mode not in ("interpret", "compiled"):
+            raise ValueError(
+                f"use_pallas must be one of {PALLAS_MODES}, got {mode!r}")
+        return mode
+    return bool(mode)
+
 
 @contextlib.contextmanager
-def pallas_mode(on: bool):
+def pallas_mode(mode):
     """Trace-time switch: inside this context, :func:`rank_step` lowers to
     the fused Pallas kernel (``repro.kernels.policy_step``) instead of the
-    pure-jnp ``find``/``promote`` pair.
+    pure-jnp ``find``/``promote`` pair.  ``mode`` is any of
+    :data:`PALLAS_MODES` — ``False`` (jnp), ``"interpret"``, ``"compiled"``,
+    or ``True`` (kernel with per-backend interpret resolution).
 
-    Engine-internal: the Engine sets it around tracing and threads the flag
-    through its jit static args so both lowerings coexist in the cache.
+    Engine-internal: the Engine sets it around tracing and threads the mode
+    through its jit static args so all lowerings coexist in the cache.
     Wrapping an already-jitted function in this context does NOT retrace it
     — use ``Engine(use_pallas=...)`` / ``replay(..., use_pallas=...)``,
     which is the supported switch."""
-    tok = _PALLAS_STEP.set(bool(on))
+    tok = _PALLAS_STEP.set(normalize_pallas_mode(mode))
     try:
         yield
     finally:
@@ -221,8 +298,13 @@ def rank_step(cache: jax.Array, key: jax.Array, scalars: tuple, plan):
 
     This is the single entrypoint behind which ``find`` + ``promote`` fuse:
     under :func:`pallas_mode` the whole step — compare, iota-min reduce,
-    scalar plan, rolled masked-select shift, wipe — is one Pallas kernel
-    (one pass over the rank row in VMEM, interpret-mode on CPU).
+    scalar plan, rolled masked-select shift, wipe — is one tiled Pallas
+    kernel (``repro.kernels.policy_step``): the row streams HBM→VMEM in
+    :data:`LANE`-multiple tiles, so K no longer has to fit one VMEM row.
+    ``"interpret"`` runs the same kernel body under the Pallas interpreter
+    (the CPU fallback); ``"compiled"`` lowers it for real (Mosaic/Triton).
+    Rows of non-padded width are padded with ``EMPTY`` for the kernel and
+    sliced back — bit-identical to the jnp lowering either way.
 
     A CLIMB-shaped plan (miss replaces the bottom rank in place):
 
@@ -235,9 +317,12 @@ def rank_step(cache: jax.Array, key: jax.Array, scalars: tuple, plan):
     >>> new.tolist(), bool(hit), int(ev)
     ([5, 3, 7], False, 9)
     """
-    if _PALLAS_STEP.get():
+    mode = _PALLAS_STEP.get()
+    if mode:
         from ..kernels.policy_step import fused_policy_step
-        return fused_policy_step(cache, key, scalars, plan)
+        interpret = {True: None, "interpret": True, "compiled": False}[mode]
+        return fused_policy_step(cache, key, scalars, plan,
+                                 interpret=interpret)
     hit, i = find(cache, key)
     src, t, wipe_from, new_scalars = plan(hit, i, scalars)
     evicted = cache[src]

@@ -30,10 +30,14 @@ Two scale paths (the paper's Tables IV/V throughput regime):
   file-backed traces, see ``repro.data.ingest``) and reports time-mean
   policy observables under ``observe=True``.
 
-``use_pallas=True`` (an ``Engine`` or per-call switch) lowers the rank-
-policy hot path (find + promote) through the fused Pallas policy-step
-kernel (``repro.kernels.policy_step``) instead of plain jnp; off-TPU the
-kernel runs under the Pallas interpreter, bit-identical to the jnp path.
+``use_pallas`` (an ``Engine`` or per-call switch) lowers the rank-policy
+hot path (find + promote) through the fused Pallas policy-step kernel
+(``repro.kernels.policy_step``) instead of plain jnp.  It is three-valued:
+``False`` (plain jnp), ``"interpret"`` (the kernel under the Pallas
+interpreter — runs anywhere, bit-identical to jnp), and ``"compiled"``
+(the real Mosaic/Triton lowering — TPU/GPU).  ``True`` means "kernel with
+the per-backend default" (compiled on tpu/gpu, interpreted elsewhere; see
+``repro.kernels.policy_step.resolve_interpret``).
 """
 from __future__ import annotations
 
@@ -46,7 +50,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from .policy import Policy, Request, StepInfo, pallas_mode
+from .policy import (Policy, Request, StepInfo, normalize_pallas_mode,
+                     pallas_mode)
 
 
 def _count_dtype():
@@ -237,8 +242,9 @@ class Engine:
     paper's multi-threaded trace replay, Tables IV/V).
 
     ``use_pallas`` routes the rank-policy hot path through the fused Pallas
-    policy-step kernel (overridable per call); slot-based policies are
-    unaffected by the flag.
+    policy-step kernel (overridable per call): ``False`` / ``"interpret"``
+    / ``"compiled"``, or ``True`` for the per-backend default.  Slot-based
+    policies are unaffected by the flag.
 
     >>> import numpy as np
     >>> res = Engine().replay("dac", np.zeros((2, 5), np.int32), K=4)
@@ -247,21 +253,23 @@ class Engine:
     """
 
     def __init__(self, mesh=None, axis: str = "data",
-                 use_pallas: bool = False):
+                 use_pallas=False):
         self.mesh = mesh
         self.axis = axis
-        self.use_pallas = use_pallas
+        self.use_pallas = normalize_pallas_mode(use_pallas)
 
     def _resolve(self, policy, use_pallas):
         if isinstance(policy, str):
             from . import make_policy
             policy = make_policy(policy)
-        return policy, self.use_pallas if use_pallas is None else use_pallas
+        use_pallas = (self.use_pallas if use_pallas is None
+                      else normalize_pallas_mode(use_pallas))
+        return policy, use_pallas
 
     def replay(self, policy, requests, K: int, *, sizes=None, costs=None,
                mesh=None, axis=None, observe: bool = False,
                collect_info: bool = True,
-               use_pallas: bool | None = None) -> ReplayResult:
+               use_pallas=None) -> ReplayResult:
         """Replay ``requests`` through ``policy`` at capacity ``K``.
 
         ``policy`` may be a :class:`Policy` instance or a spec string for
@@ -289,7 +297,7 @@ class Engine:
                                use_pallas)
 
     def replay_tier(self, tier, requests, *, sizes=None, costs=None,
-                    observe: bool = False, use_pallas: bool | None = None):
+                    observe: bool = False, use_pallas=None):
         """Replay an interleaved multi-tenant stream through a
         :class:`repro.tier.CacheTier` (metrics-only, per-tenant
         :class:`Metrics` + time-mean occupancy in the scan carry).
@@ -303,15 +311,15 @@ class Engine:
         from ..tier import CacheTier, replay_tier as _replay_tier
         if not isinstance(tier, CacheTier):
             raise TypeError(f"expected a CacheTier, got {type(tier).__name__}")
-        if use_pallas is None:
-            use_pallas = self.use_pallas
+        use_pallas = (self.use_pallas if use_pallas is None
+                      else normalize_pallas_mode(use_pallas))
         return _replay_tier(tier, requests, sizes=sizes, costs=costs,
                             observe=observe, use_pallas=use_pallas)
 
     def replay_stream(self, policy, requests, K: int, *, sizes=None,
                       costs=None, chunk: int | None = None,
                       observe: bool = False,
-                      use_pallas: bool | None = None) -> ReplayResult:
+                      use_pallas=None) -> ReplayResult:
         """Metrics-only replay of an arbitrarily long trace in fixed-size
         chunks.
 

@@ -4,16 +4,19 @@
                        prefill compute hot spot)
   * decode_attention — flash-decode over the KV slot table with fused DAC
                        hit-signal (per-slot attention mass) extraction
-  * cache_update     — batched AdaptiveClimb policy step (the op the paper
-                       itemizes in its instructions/request analysis)
-  * policy_step      — fused rank-policy step (find + plan + promote in one
-                       pass over the rank row); serves every rank policy via
-                       a traced-in control-law callback and backs the
-                       engine's ``use_pallas`` replay path
+  * policy_step      — tiled fused rank-policy step (find + plan + promote
+                       + wipe in one segmented pass over the lane-padded
+                       rank row); serves every rank policy — Climb,
+                       AdaptiveClimb, DAC, the budgeted tier step — via a
+                       traced-in control-law callback and backs the
+                       engine's three-valued ``use_pallas`` replay path
+                       (``False`` / ``"interpret"`` / ``"compiled"``)
 
-Each has a pure-jnp oracle (ref.py, or core.policy.rank_step for
-policy_step); ops.py exposes jit'd wrappers that run under the Pallas
-interpreter on CPU and Mosaic on TPU.
+Each has a pure-jnp oracle (ref.py for the attention kernels;
+core.policy.rank_step *is* the oracle for policy_step); ops.py exposes
+jit'd wrappers whose ``interpret=None`` resolves per backend via
+``policy_step.resolve_interpret`` (env-overridable with
+``REPRO_PALLAS_INTERPRET``).
 """
 from . import ops, policy_step, ref
 

@@ -1,8 +1,16 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Jit'd public wrappers for the attention Pallas kernels.
 
-``interpret`` defaults to True when no TPU is present (this container), so
-the same call sites run the kernel body under the Pallas interpreter on CPU
-and compile to Mosaic on real TPUs.
+``interpret=None`` resolves through
+:func:`repro.kernels.policy_step.resolve_interpret` — the env knob
+``REPRO_PALLAS_INTERPRET`` force-overrides, then the memoized per-backend
+default kicks in (compiled Mosaic/Triton on tpu/gpu, the Pallas
+interpreter elsewhere) — so the same call sites run interpreted on this
+CPU container and compile on real accelerators, and CI can pin either
+path fleet-wide with one variable.
+
+The rank-policy step kernel does not live here: call
+``core.policy.rank_step`` under ``pallas_mode(...)`` (or
+``repro.kernels.policy_step.fused_policy_step`` directly).
 """
 from __future__ import annotations
 
@@ -10,20 +18,16 @@ from functools import partial
 
 import jax
 
-from .cache_update import adaptive_climb_pallas
 from .decode_attention import decode_attention_pallas
 from .flash_attention import flash_attention_pallas
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from .policy_step import resolve_interpret
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "softcap", "scale",
                                    "block_q", "block_k", "interpret"))
 def flash_attention(q, k, v, *, causal=True, window=None, softcap=0.0,
                     scale=None, block_q=512, block_k=512, interpret=None):
-    interpret = _default_interpret() if interpret is None else interpret
+    interpret = resolve_interpret(interpret)
     return flash_attention_pallas(
         q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
         block_q=block_q, block_k=block_k, interpret=interpret)
@@ -33,14 +37,7 @@ def flash_attention(q, k, v, *, causal=True, window=None, softcap=0.0,
                                    "interpret"))
 def decode_attention(q, k, v, valid, *, softcap=0.0, scale=None,
                      block_s=512, interpret=None):
-    interpret = _default_interpret() if interpret is None else interpret
+    interpret = resolve_interpret(interpret)
     return decode_attention_pallas(q, k, v, valid, softcap=softcap,
                                    scale=scale, block_s=block_s,
                                    interpret=interpret)
-
-
-@partial(jax.jit, static_argnames=("block_b", "interpret"))
-def adaptive_climb(cache, jump, key, *, block_b=8, interpret=None):
-    interpret = _default_interpret() if interpret is None else interpret
-    return adaptive_climb_pallas(cache, jump, key, block_b=block_b,
-                                 interpret=interpret)

@@ -1,22 +1,47 @@
-"""Pallas TPU kernel: fused rank-policy step (find + plan + promote).
+"""Tiled Pallas TPU kernel: fused rank-policy step (find + plan + promote).
 
 Every rank-based policy in this repo (CLIMB, AdaptiveClimb,
 DynamicAdaptiveClimb) has the same per-request shape:
 
-  1. ``find``     — locate the requested key in the rank row (``[K]`` int32,
-                    index 0 = top of the cache);
+  1. ``find``     — locate the requested key in the rank row (``[W]`` int32,
+                    index 0 = top of the cache, ``W`` a 128-lane multiple);
   2. ``plan``     — O(1) scalar control arithmetic (jump updates, resize
                     checks) deciding the shift source/target ranks;
   3. ``promote``  — masked-select shift of ranks ``(t, src]`` against a
-                    lane-rolled copy, inserting the key at rank ``t``.
+                    lane-rolled copy, inserting the key at rank ``t``;
+  4. ``wipe``     — ranks ``>= wipe_from`` cleared to EMPTY (the
+                    DynamicAdaptiveClimb shrink).
 
-The pure-jnp path materializes the rank row once per primitive; this kernel
-fuses all three into ONE pass over the row held in VMEM: the compare /
-iota-min reduction (find), the plan's scalar updates (SMEM), the rolled
-masked select and the deactivation wipe (DynamicAdaptiveClimb's shrink) all
-happen before the row is written back.  ``plan`` is an arbitrary traceable
-callback, so the same kernel serves every rank policy — the policy's control
-law is traced *into* the kernel body.
+The kernel runs a ``(lanes, 2, n_tiles)`` grid: the rank row streams
+HBM→VMEM in ``tile``-lane blocks (BlockSpec-pipelined), so W no longer has
+to fit one VMEM row.  Cross-tile state rides in an SMEM scratch:
+
+    phase 0 (find)     per tile: compare + iota-min; the running global
+                       argmin accumulates in SMEM (min-reduce across tiles).
+    phase 1, tile 0:   the plan callback runs ONCE on the find result
+                       (traced into the kernel; SMEM scalars in/out), and
+                       its (src, t, wipe_from) decisions park in SMEM.
+    phase 1, per tile: segmented promote — each tile shifts its lanes
+                       right by one against a boundary carry (the previous
+                       tile's last element, saved in SMEM at the end of
+                       the prior iteration), masked to ``(t, src]``; the
+                       requested key lands at rank ``t``; ranks >=
+                       ``wipe_from`` wipe to EMPTY; the evicted occupant
+                       of rank ``src`` is extracted by the tile owning it.
+
+Tile/carry diagram (W = 3 tiles, promote range (t, src])::
+
+      tile 0              tile 1              tile 2
+    [ a b c d ]         [ e f g h ]         [ i j k l ]
+          t ^..................... src ^
+    carry: -1 ->  d  (last of tile 0) ->  h  (last of tile 1)
+    shift:  [ a b key c ]  [ d e f g ]   [ h i j l ]     (h crosses tiles)
+
+Mosaic details: integer vector reductions are unsupported on TPU, so the
+iota-min runs in float32 (rank indices < 2^24 are exact) and the
+evicted/carry element extraction splits int32 into 16-bit halves, sums each
+in float32 (exactly one lane selected, so the sum is exact), and reassembles
+with shifts — bit-exact for every int32 including EMPTY.
 
 Contract (see :func:`repro.core.policy.rank_step` for the jnp oracle)::
 
@@ -27,79 +52,261 @@ Contract (see :func:`repro.core.policy.rank_step` for the jnp oracle)::
       scalars    tuple of int32 scalars (policy control state)
       src        shift source rank (eviction rank on a miss; t <= src)
       t          insertion rank for the requested key
-      wipe_from  ranks >= wipe_from are cleared to EMPTY (pass K for none)
+      wipe_from  ranks >= wipe_from are cleared to EMPTY (>= K for none)
 
 Returns ``(new_cache, new_scalars, hit, evicted)`` where ``evicted`` is the
 pre-update occupant of rank ``src`` (the key shifted off the row on a miss).
 
-``interpret=True`` (the default off-TPU) runs the body under the Pallas
-interpreter, so CPU CI exercises the exact kernel code path.  On real TPUs
-K should be padded to a lane multiple (128) for Mosaic-friendly layouts.
+Batching: a vmapped ``fused_policy_step`` does NOT fall back to the default
+pallas batching of the single-lane call — a ``jax.custom_batching.custom_vmap``
+rule swaps in the natively batched kernel, whose grid leads with the lane
+axis (``(B, 2, n_tiles)``) and whose scalar I/O lives in unblocked SMEM
+arrays indexed by ``program_id(0)``.  A second (outer) vmap — the tier's
+seeds × tenants nesting — then hits the standard pallas batching rule on
+the batched kernel, which prepends one more grid dimension; both layers
+are Mosaic-lowerable and bit-identical to the vmapped jnp oracle.
+
+``interpret``: ``True`` runs the kernel body under the Pallas interpreter
+(any backend — the CPU CI path); ``False`` compiles for real (Mosaic on
+TPU, Triton on GPU); ``None`` resolves per backend via
+:func:`resolve_interpret` (memoized, overridable with the
+``REPRO_PALLAS_INTERPRET`` env knob).
 """
 from __future__ import annotations
 
 import functools
+import math
+import os
 
 import jax
 import jax.numpy as jnp
+from jax.custom_batching import custom_vmap
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.policy import EMPTY, LANE, lane_pad
+
+__all__ = ["fused_policy_step", "resolve_interpret", "DEFAULT_TILE",
+           "INTERPRET_ENV"]
+
+# default VMEM tile, in lanes: 64 KiB of int32 per block — small enough to
+# double-buffer input + output blocks comfortably, large enough that rows
+# up to this width run as a single tile.  The effective tile is
+# gcd(W, tile), so it always divides the padded width exactly.
+DEFAULT_TILE = 16384
+
+# forced override for CI: "interpret" (or "1"/"true") forces the
+# interpreter, "compiled" (or "0"/"false") forces real lowering —
+# regardless of what the call site passed.  Empty/"auto" defers to the
+# call site, then to the per-backend default.
+INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
 
 
-def _kernel(cache_ref, key_ref, sc_ref, out_cache_ref, out_sc_ref, hit_ref,
-            ev_ref, *, plan, n_scalars: int, K: int):
-    cache = cache_ref[...]                       # [1, K] int32 in VMEM
-    key = key_ref[0]
-    scalars = tuple(sc_ref[j] for j in range(n_scalars))
-
-    # --- find: one compare + iota-min reduction -------------------------
-    r = jax.lax.broadcasted_iota(jnp.int32, (1, K), 1)
-    eq = cache == key
-    hit = jnp.any(eq)
-    i = jnp.min(jnp.where(eq, r, K)).astype(jnp.int32)
-    i = jnp.where(hit, i, 0)                     # match find()'s argmax=0
-
-    # --- plan: policy control law, traced into the kernel ---------------
-    src, t, wipe_from, new_scalars = plan(hit, i, scalars)
-
-    # --- promote + wipe: rolled masked select, still in registers -------
-    evicted = jnp.sum(jnp.where(r == src, cache, 0))  # exactly one lane
-    rolled = jnp.concatenate([cache[:, -1:], cache[:, :-1]], axis=1)
-    new_cache = jnp.where(
-        r == t, key, jnp.where((r > t) & (r <= src), rolled, cache))
-    # EMPTY (-1) is created inline: a closure-captured device constant
-    # would be rejected by the kernel tracer
-    new_cache = jnp.where(r >= wipe_from, jnp.int32(-1), new_cache)
-
-    out_cache_ref[...] = new_cache
-    for j, s in enumerate(new_scalars):
-        out_sc_ref[j] = s
-    hit_ref[0] = hit.astype(jnp.int32)
-    ev_ref[0] = evicted
+@functools.lru_cache(maxsize=None)
+def _backend_default(backend: str) -> bool:
+    # CPU has no compiled Pallas lowering — interpret.  TPU compiles via
+    # Mosaic and GPU via Triton: both run the kernel for real.  (The old
+    # `backend != "tpu"` test wrongly interpreted on GPU, silently
+    # discarding the Triton lowering.)
+    return backend not in ("tpu", "gpu")
 
 
-def fused_policy_step(cache, key, scalars, plan, *, interpret=None):
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """Resolve an ``interpret`` argument to a concrete bool.
+
+    Priority: the :data:`INTERPRET_ENV` env knob (a *forced* override, so
+    CI can pin one lowering across every call site) > an explicit
+    ``True``/``False`` argument > the memoized per-backend default
+    (cpu → interpret; tpu/gpu → compiled).
+
+    >>> resolve_interpret(True), resolve_interpret(False)
+    (True, False)
+    """
+    env = os.environ.get(INTERPRET_ENV, "").strip().lower()
+    if env in ("1", "true", "interpret"):
+        return True
+    if env in ("0", "false", "compiled"):
+        return False
+    if env not in ("", "auto"):
+        raise ValueError(
+            f"{INTERPRET_ENV} must be interpret/compiled/auto (or a bool "
+            f"spelling), got {env!r}")
+    if interpret is None:
+        return _backend_default(jax.default_backend())
+    return bool(interpret)
+
+
+def _resolve_tile(W: int, tile: int | None) -> int:
+    if tile is None:
+        tile = DEFAULT_TILE
+    tile = int(tile)
+    if tile < LANE or tile % LANE:
+        raise ValueError(
+            f"tile must be a positive multiple of {LANE}, got {tile}")
+    return math.gcd(W, tile)
+
+
+# SMEM scratch slot indices (cross-tile carries)
+_S_ARGMIN = 0   # running find argmin (W = "not found")
+_S_CARRY = 1    # boundary element carried into the next tile's shift
+_S_SRC = 2      # plan outputs, parked at (phase 1, tile 0)
+_S_T = 3
+_S_WIPE = 4
+_N_SCRATCH = 8
+
+
+def _split16_pick(row, mask):
+    """Extract the single int32 element of ``row`` selected by ``mask``
+    using float32 sums of 16-bit halves (Mosaic has no integer vector
+    reductions); exact because exactly one lane is selected."""
+    lo = jnp.sum(jnp.where(mask, row & 0xFFFF, 0).astype(jnp.float32))
+    hi = jnp.sum(jnp.where(mask, (row >> 16) & 0xFFFF, 0).astype(jnp.float32))
+    return (hi.astype(jnp.int32) << 16) | lo.astype(jnp.int32)
+
+
+def _tiled_kernel(sc_ref, cache_ref, out_ref, scal_out_ref, s_ref, *,
+                  plan, n_sc: int, W: int, tile: int):
+    """Grid (B, 2, n_tiles): lane b, phase (0 find / 1 plan+promote), tile j.
+
+    ``sc_ref``/``scal_out_ref`` are whole unblocked SMEM arrays ``[B, 1+n]``
+    / ``[B, n+2]`` (key + control scalars in; new scalars + hit + evicted
+    out), indexed by the lane id.  ``cache_ref``/``out_ref`` see one
+    ``(1, 1, tile)`` VMEM block of the ``[B, 1, W]`` row per grid step.
+    ``s_ref`` is the SMEM cross-tile scratch (per lane: grid iterations run
+    lane-major, so one lane's phases/tiles complete before the next lane's
+    begin and the scratch never interleaves)."""
+    b, ph, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    base = j * tile
+    r = jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1) + base
+    row = cache_ref[0]                       # (1, tile) int32
+    key = sc_ref[b, 0]
+
+    @pl.when((ph == 0) & (j == 0))
+    def _init_find():
+        s_ref[_S_ARGMIN] = jnp.int32(W)
+
+    @pl.when(ph == 0)
+    def _find():
+        eq = row == key
+        # min-reduce in float32: ranks < 2^24 are exact (W <= 2^24 by
+        # construction of any realistic row)
+        local = jnp.min(
+            jnp.where(eq, r, W).astype(jnp.float32)).astype(jnp.int32)
+        s_ref[_S_ARGMIN] = jnp.minimum(s_ref[_S_ARGMIN], local)
+        # keep every output block defined even if phase 1 aborts a write
+        out_ref[0] = row
+
+    @pl.when((ph == 1) & (j == 0))
+    def _plan():
+        m = s_ref[_S_ARGMIN]
+        hit = m < W
+        i = jnp.where(hit, m, 0)             # match find()'s argmax-on-miss
+        scalars = tuple(sc_ref[b, 1 + q] for q in range(n_sc))
+        src, t, wipe_from, new_sc = plan(hit, i, scalars)
+        # EMPTY (-1) is created inline: a closure-captured device constant
+        # would be rejected by the kernel tracer
+        s_ref[_S_CARRY] = jnp.int32(-1)      # roll wrap value (never used:
+        s_ref[_S_SRC] = src                  # t <= src keeps rank 0 out of
+        s_ref[_S_T] = t                      # the shifted range)
+        s_ref[_S_WIPE] = wipe_from
+        for q, v in enumerate(new_sc):
+            scal_out_ref[b, q] = v
+        scal_out_ref[b, n_sc] = hit.astype(jnp.int32)
+
+    @pl.when(ph == 1)
+    def _promote():
+        src, t, wipe = s_ref[_S_SRC], s_ref[_S_T], s_ref[_S_WIPE]
+        carry = s_ref[_S_CARRY]
+        # evicted occupant of rank src: exactly one tile owns it
+        @pl.when((src >= base) & (src < base + tile))
+        def _evicted():
+            scal_out_ref[b, n_sc + 1] = _split16_pick(row, r == src)
+        # segmented shift-right-by-one: boundary element comes from the
+        # previous tile via the SMEM carry
+        rolled = jnp.concatenate(
+            [jnp.full((1, 1), carry, jnp.int32), row[:, :-1]], axis=1)
+        new = jnp.where(r == t, key,
+                        jnp.where((r > t) & (r <= src), rolled, row))
+        new = jnp.where(r >= wipe, jnp.int32(-1), new)
+        out_ref[0] = new
+        # save this tile's last pre-shift element for the next tile
+        s_ref[_S_CARRY] = _split16_pick(row, r == base + tile - 1)
+
+
+def _batched_call(cache, keys, scalars, *, plan, n_sc: int, interpret: bool,
+                  tile: int | None):
+    """The natively batched kernel call: ``cache [B, W]``, ``keys [B]``,
+    each scalar ``[B]`` — one grid lane per batch element."""
+    B, W = cache.shape
+    t = _resolve_tile(W, tile)
+    kernel = functools.partial(_tiled_kernel, plan=plan, n_sc=n_sc, W=W,
+                               tile=t)
+    sc = jnp.stack([keys] + list(scalars), axis=-1)      # [B, 1+n] SMEM
+    out, scal = pl.pallas_call(
+        kernel,
+        grid=(B, 2, W // t),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, t), lambda b, ph, j: (b, 0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, t), lambda b, ph, j: (b, 0, j)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1, W), jnp.int32),
+            jax.ShapeDtypeStruct((B, n_sc + 2), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((_N_SCRATCH,), jnp.int32)],
+        interpret=interpret,
+    )(sc, cache[:, None, :])
+    return (out[:, 0], tuple(scal[:, q] for q in range(n_sc)),
+            scal[:, n_sc].astype(bool), scal[:, n_sc + 1])
+
+
+def fused_policy_step(cache, key, scalars, plan, *, interpret=None,
+                      tile=None):
     """One fused rank-policy step.
 
-    cache: [K] int32 rank row; key: scalar int32; scalars: tuple of int32
-    control scalars.  Batches transparently under ``vmap`` (the pallas_call
-    batching rule adds a grid dimension) and scans under ``lax.scan``.
+    ``cache``: ``[K]`` int32 rank row (any K — padded internally to a
+    :data:`~repro.core.policy.LANE` multiple and sliced back, so direct
+    calls with tight rows stay bit-identical to the jnp oracle);
+    ``key``: scalar int32; ``scalars``: tuple of int32 control scalars.
+    ``tile`` caps the VMEM block width (default :data:`DEFAULT_TILE`;
+    the effective tile is ``gcd(padded_W, tile)``).
+
+    Batches under ``vmap`` through a ``custom_vmap`` rule that swaps in
+    the natively batched lane-grid kernel (nested vmaps compose via the
+    standard pallas batching rule on top); scans under ``lax.scan``.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = resolve_interpret(interpret)
     K = cache.shape[0]
-    n = len(scalars)
-    sc = (jnp.stack([jnp.asarray(s, jnp.int32) for s in scalars])
-          if n else jnp.zeros((1,), jnp.int32))
-    kernel = functools.partial(_kernel, plan=plan, n_scalars=n, K=K)
-    new_cache, new_sc, hit, ev = pl.pallas_call(
-        kernel,
-        out_shape=[
-            jax.ShapeDtypeStruct((1, K), jnp.int32),
-            jax.ShapeDtypeStruct((max(n, 1),), jnp.int32),
-            jax.ShapeDtypeStruct((1,), jnp.int32),
-            jax.ShapeDtypeStruct((1,), jnp.int32),
-        ],
-        interpret=interpret,
-    )(cache[None, :], key[None], sc)
-    return (new_cache[0], tuple(new_sc[j] for j in range(n)),
-            hit[0].astype(bool), ev[0])
+    W = lane_pad(K)
+    n_sc = len(scalars)
+    call = functools.partial(_batched_call, plan=plan, n_sc=n_sc,
+                             interpret=interpret, tile=tile)
+
+    @custom_vmap
+    def step(cache, key, sc):
+        out, new_sc, hit, ev = call(cache[None], key[None],
+                                    tuple(s[None] for s in sc))
+        return out[0], tuple(s[0] for s in new_sc), hit[0], ev[0]
+
+    @step.def_vmap
+    def _step_vmap(axis_size, in_batched, cache, key, sc):
+        cache_b, key_b, sc_b = in_batched
+
+        def bc(x, batched):
+            return x if batched else jnp.broadcast_to(
+                x, (axis_size,) + jnp.shape(x))
+
+        out = call(bc(cache, cache_b), bc(key, key_b),
+                   tuple(bc(s, b) for s, b in zip(sc, sc_b)))
+        return out, jax.tree_util.tree_map(lambda _: True, out)
+
+    key = jnp.asarray(key, jnp.int32)
+    scalars = tuple(jnp.asarray(s, jnp.int32) for s in scalars)
+    padded = cache if W == K else jnp.concatenate(
+        [cache, jnp.full((W - K,), EMPTY, jnp.int32)])
+    new_cache, new_sc, hit, ev = step(padded, key, scalars)
+    return (new_cache if W == K else new_cache[:K]), new_sc, hit, ev

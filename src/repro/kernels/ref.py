@@ -1,8 +1,8 @@
-"""Pure-jnp oracles for every Pallas kernel (shape/dtype-sweep targets)."""
+"""Pure-jnp oracles for the attention Pallas kernels (shape/dtype-sweep
+targets).  The policy-step kernel's oracle is
+:func:`repro.core.policy.rank_step` itself (``use_pallas=False``), not a
+function here."""
 from __future__ import annotations
-
-import jax
-import jax.numpy as jnp
 
 from repro.models.layers import attention_dense
 from repro.models.layers import decode_attention as _decode_attention_jnp
@@ -21,13 +21,4 @@ def decode_attention_ref(q, k, v, valid, *, softcap=0.0, scale=None):
                                  scale=scale)
 
 
-def adaptive_climb_ref(cache, jump, key):
-    """Batched AdaptiveClimb step — vmap of the repro.core policy."""
-    from repro.core import AdaptiveClimb, Request
-    pol = AdaptiveClimb()
-
-    def one(c, j, k):
-        state, info = pol.step({"cache": c, "jump": j}, Request.of(k))
-        return state["cache"], state["jump"], info.hit.astype(jnp.int32)
-
-    return jax.vmap(one)(cache, jump, key)
+__all__ = ["flash_attention_ref", "decode_attention_ref"]

@@ -435,3 +435,46 @@ def analyze_hlo(text: str, default_group: int = 1) -> dict:
 def dominant_term(terms: dict) -> str:
     return max(("compute_s", "memory_s", "collective_s"),
                key=lambda k: terms[k])
+
+
+# ---------------------------------------------------------------------------
+# policy-step roofline
+# ---------------------------------------------------------------------------
+
+# int32 rank-row element
+_ROW_BYTES = 4
+
+
+def policy_step_traffic_bytes(W: int) -> int:
+    """Modeled HBM bytes per fused policy step at padded row width ``W``.
+
+    The tiled kernel makes two passes over the row (phase 0 find, phase 1
+    promote) and each pass both reads its input block and writes its
+    output block (phase 0 pre-writes the row so every output block is
+    defined), so the streamed traffic is ``4 * W * 4`` bytes; the SMEM
+    scalar I/O and cross-tile carries are O(1) and ignored.
+
+    >>> policy_step_traffic_bytes(128)
+    2048
+    """
+    return 4 * W * _ROW_BYTES
+
+
+def policy_step_targets(widths) -> dict:
+    """Memory-bound roofline target for the fused policy step, in Mops
+    (million requests/s) per padded width: the step does O(W) element ops
+    and O(W) bytes of HBM traffic (arithmetic intensity < 1 flop/byte on
+    int32 rows), so the HBM roof — not the compute roof — binds::
+
+        steps/s <= HBM_BW / policy_step_traffic_bytes(W)
+
+    ``benchmarks/throughput.py --policy-step`` stamps these targets into
+    ``BENCH_policy_step.json`` and reports the compiled kernel's achieved
+    fraction on real hardware.
+
+    >>> t = policy_step_targets([1024])
+    >>> round(t[1024], 1)                    # 819e9 / 16384 / 1e6
+    50.0
+    """
+    return {int(W): HBM_BW / policy_step_traffic_bytes(int(W)) / 1e6
+            for W in widths}

@@ -47,7 +47,8 @@ import numpy as np
 
 from ..core import make_policy
 from ..core.dynamicadaptiveclimb import DynamicAdaptiveClimb
-from ..core.policy import EMPTY, Request, pallas_mode
+from ..core.policy import (EMPTY, Request, lane_pad, normalize_pallas_mode,
+                           pallas_mode)
 from ..core.simulator import Metrics, _acc_step, _count_dtype, _ratio
 from .arbiter import make_arbiter
 
@@ -176,10 +177,15 @@ class CacheTier:
         k0 = jnp.full((n,), self.k0, jnp.int32)
         demanding = jnp.zeros((n,), bool)
         return {
-            "cache": jnp.full((n, self.budget), EMPTY, dtype=jnp.int32),
+            # lane-padded budget-wide rank rows; the allocation bound each
+            # tenant's control law sees is the *logical* budget (kmax),
+            # not the padded array width
+            "cache": jnp.full((n, lane_pad(self.budget)), EMPTY,
+                              dtype=jnp.int32),
             "jump": jnp.full((n,), self.k0, jnp.int32),
             "jump2": jnp.zeros((n,), jnp.int32),
             "k": k0,
+            "kmax": jnp.full((n,), self.budget, jnp.int32),
             "cap": self.arbiter(k0, demanding, self.budget, n),
         }
 
@@ -263,7 +269,7 @@ def _replay_tier_batched(tier, reqs, observe, use_pallas):
 
 def replay_tier(tier: CacheTier, requests, *, sizes=None, costs=None,
                 observe: bool = False,
-                use_pallas: bool = False) -> TierResult:
+                use_pallas=False) -> TierResult:
     """Replay an interleaved multi-tenant request stream through ``tier``.
 
     ``requests``: a :class:`~repro.core.Request` (or bare keys, with
@@ -274,9 +280,13 @@ def replay_tier(tier: CacheTier, requests, *, sizes=None, costs=None,
     active size comes back as ``avg_k``; ``observe=True`` additionally
     stacks the per-step occupancy ``obs["k"]`` (``[T, N]``).
 
-    ``use_pallas=True`` routes each tenant's fused rank step through the
-    Pallas policy-step kernel, exactly as in ``Engine.replay``.
+    ``use_pallas`` routes each tenant's fused rank step through the Pallas
+    policy-step kernel, exactly as in ``Engine.replay``: ``False`` /
+    ``"interpret"`` / ``"compiled"`` (or ``True`` for per-backend auto).
+    The tenant vmap hits the kernel's lane-grid batching rule; a seed axis
+    on top composes through the standard pallas batching rule.
     """
+    use_pallas = normalize_pallas_mode(use_pallas)
     reqs = Request.of(requests, sizes, costs)
     if reqs.key.ndim == 2:
         if reqs.key.shape[1] != tier.n_tenants:

@@ -22,6 +22,8 @@ MODULES = [
     "repro.core.dynamicadaptiveclimb",
     "repro.core.baselines",
     "repro.core.lirs_lhd",
+    "repro.kernels.policy_step",
+    "repro.launch.roofline",
     "repro.data.traces",
     "repro.data.ingest",
     "repro.bench.scenario",

@@ -81,17 +81,34 @@ def test_decode_attention_mass_is_hit_signal():
 
 @pytest.mark.parametrize("K", [16, 64, 129])
 @pytest.mark.parametrize("B", [4, 10])
-def test_adaptive_climb_kernel_matches_policy(K, B):
+def test_batched_policy_step_matches_policy(K, B):
+    """Successor of the retired cache_update kernel test: a batch of
+    AdaptiveClimb lanes stepped through the tiled policy-step kernel
+    (vmap -> native lane grid) stays bit-identical to the jnp oracle."""
+    from repro.core import AdaptiveClimb, Request
+    from repro.core.policy import pallas_mode
+
+    pol = AdaptiveClimb()
     rng = np.random.default_rng(0)
-    cache = jnp.full((B, K), -1, jnp.int32)
-    jump = jnp.full((B,), K, jnp.int32)
-    cache_r, jump_r = cache, jump
+    state = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (B,) + x.shape), pol.init(K))
+    state_r = state
+
+    @jax.jit
+    def step_pallas(st, keys):
+        with pallas_mode("interpret"):
+            return jax.vmap(lambda s, k: pol.step(s, Request.of(k)))(
+                st, keys)
+
+    @jax.jit
+    def step_jnp(st, keys):
+        return jax.vmap(lambda s, k: pol.step(s, Request.of(k)))(st, keys)
+
     for t in range(300):
         keys = jnp.asarray(rng.integers(0, 2 * K, B).astype(np.int32))
-        cache, jump, hit = ops.adaptive_climb(cache, jump, keys,
-                                              interpret=True)
-        cache_r, jump_r, hit_r = ref.adaptive_climb_ref(cache_r, jump_r,
-                                                        keys)
-        assert bool((hit == hit_r).all()), t
-    assert bool((cache == cache_r).all())
-    assert bool((jump == jump_r).all())
+        state, info = step_pallas(state, keys)
+        state_r, info_r = step_jnp(state_r, keys)
+        assert bool((info.hit == info_r.hit).all()), t
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(state_r)):
+        assert bool((a == b).all())

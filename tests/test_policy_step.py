@@ -63,6 +63,46 @@ def test_engine_level_use_pallas_default():
                                   np.asarray(ref.info.hit))
 
 
+@pytest.mark.parametrize("spec", ["climb", "dynamicadaptiveclimb"])
+def test_pallas_interpret_mode_string(spec):
+    """The explicit "interpret" mode matches the jnp lowering bit-for-bit
+    (True also resolves to interpret on this CPU container, but the string
+    pins it regardless of backend)."""
+    trace = zipf_trace(N=128, T=1200, alpha=1.0, seed=8)
+    ref = ENGINE.replay(spec, trace, 16, use_pallas=False)
+    got = ENGINE.replay(spec, trace, 16, use_pallas="interpret")
+    np.testing.assert_array_equal(np.asarray(got.info.hit),
+                                  np.asarray(ref.info.hit))
+    assert int(got.metrics.hits) == int(ref.metrics.hits)
+
+
+def test_pallas_mode_validation():
+    trace = zipf_trace(N=32, T=100, alpha=1.0, seed=0)
+    with pytest.raises(ValueError, match="use_pallas"):
+        Engine(use_pallas="fast")
+    with pytest.raises(ValueError, match="use_pallas"):
+        ENGINE.replay("dac", trace, 8, use_pallas="fast")
+    with pytest.raises(ValueError, match="use_pallas"):
+        ENGINE.replay_stream("dac", trace, 8, use_pallas="maybe")
+
+
+def test_resolve_interpret_env_override(monkeypatch):
+    from repro.kernels.policy_step import INTERPRET_ENV, resolve_interpret
+    monkeypatch.setenv(INTERPRET_ENV, "interpret")
+    assert resolve_interpret(False) is True       # forced, beats the arg
+    monkeypatch.setenv(INTERPRET_ENV, "compiled")
+    assert resolve_interpret(True) is False
+    monkeypatch.setenv(INTERPRET_ENV, "auto")
+    assert resolve_interpret(True) is True        # defers to the arg
+    assert resolve_interpret(False) is False
+    monkeypatch.setenv(INTERPRET_ENV, "fast")
+    with pytest.raises(ValueError, match=INTERPRET_ENV):
+        resolve_interpret()
+    monkeypatch.delenv(INTERPRET_ENV)
+    expect = jax.default_backend() not in ("tpu", "gpu")
+    assert resolve_interpret(None) is expect      # per-backend default
+
+
 def test_pallas_flag_is_noop_for_slot_policies():
     trace = zipf_trace(N=128, T=1200, alpha=1.0, seed=6)
     ref = ENGINE.replay("lru", trace, 16)

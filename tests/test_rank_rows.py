@@ -1,0 +1,227 @@
+"""Lane-padded rank rows + the tiled policy-step kernel.
+
+Proves the padding invariants the refactor rests on: ``find`` / ``promote``
+/ ``demote`` / ``rank_step`` are equivalent on padded and tight rows, and
+the tiled Pallas kernel (forced down to 128-lane tiles so multi-tile
+carries actually fire) is bit-identical to the jnp oracle at awkward K —
+non-multiples of 128, single-element rows, K larger than one tile —
+including ``wipe_from`` boundaries and fully-``EMPTY`` rows.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core.policy import (EMPTY, LANE, demote, find, lane_pad,
+                               padded_row, promote, rank_step)
+from repro.kernels.policy_step import fused_policy_step
+
+K_GRID = [1, 7, 127, 128, 129, 1000]
+
+
+def climb_plan(hit, i, scalars):
+    """CLIMB with a traced length scalar — the simplest full-contract plan
+    (promote-by-one on hit, replace bottom on miss, wipe = none)."""
+    (n,) = scalars
+    src = jnp.where(hit, i, n - 1)
+    t = jnp.where(hit, jnp.maximum(i - 1, 0), n - 1)
+    return src, t, n, (n,)
+
+
+def _tight_row(K, k, rng):
+    """A tight [K] row with k distinct resident keys, rest EMPTY."""
+    row = np.full(K, -1, np.int32)
+    row[:k] = rng.choice(5 * K + 8, size=k, replace=False).astype(np.int32)
+    return jnp.asarray(row)
+
+
+# --- padded vs tight primitive equivalence ----------------------------------
+
+@pytest.mark.parametrize("K", [1, 7, 127, 128, 129])
+def test_find_promote_demote_padded_equivalence(K):
+    rng = np.random.default_rng(K + 1)
+    k = int(rng.integers(1, K + 1))
+    tight = _tight_row(K, k, rng)
+    W = lane_pad(K)
+    padded = jnp.concatenate([tight, jnp.full((W - K,), EMPTY, jnp.int32)])
+
+    present = tight[int(rng.integers(0, k))]
+    absent = jnp.int32(5 * K + 9)
+    for key in (present, absent):
+        ht, it = find(tight, key)
+        hp, ip = find(padded, key)
+        assert bool(ht) == bool(hp)
+        if bool(ht):
+            assert int(it) == int(ip)
+
+    i = int(rng.integers(0, k))
+    t = int(rng.integers(0, i + 1))
+    np.testing.assert_array_equal(
+        np.asarray(promote(padded, i, t, jnp.int32(777))[:K]),
+        np.asarray(promote(tight, i, t, jnp.int32(777))))
+    d = int(rng.integers(i, k))
+    np.testing.assert_array_equal(
+        np.asarray(demote(padded, i, d, tight[i])[:K]),
+        np.asarray(demote(tight, i, d, tight[i])))
+    # padding untouched by either primitive
+    assert np.all(np.asarray(promote(padded, i, t, jnp.int32(777))[K:]) == -1)
+    assert np.all(np.asarray(demote(padded, i, d, tight[i])[K:]) == -1)
+
+
+# --- tiled kernel vs jnp oracle at edge K -----------------------------------
+
+@pytest.mark.parametrize("K", K_GRID)
+def test_fused_step_parity_edge_K(K):
+    """128-lane forced tiles: K=1000 runs 8 tiles, so the cross-tile argmin,
+    boundary carry, and evicted-extraction paths all fire."""
+    rng = np.random.default_rng(K)
+    n = jnp.int32(K)
+    cache_j = cache_p = padded_row(K)
+
+    @jax.jit
+    def jstep(c, key):
+        return rank_step(c, key, (n,), climb_plan)
+
+    @jax.jit
+    def pstep(c, key):
+        return fused_policy_step(c, key, (n,), climb_plan,
+                                 interpret=True, tile=LANE)
+
+    for step in range(100):
+        key = jnp.int32(rng.integers(0, max(2 * K, 4)))
+        cache_j, _, hit_j, ev_j = jstep(cache_j, key)
+        cache_p, _, hit_p, ev_p = pstep(cache_p, key)
+        assert bool(hit_j) == bool(hit_p), step
+        assert int(ev_j) == int(ev_p), step
+        np.testing.assert_array_equal(np.asarray(cache_j),
+                                      np.asarray(cache_p))
+    # padding invariant held throughout
+    assert np.all(np.asarray(cache_p)[K:] == -1)
+
+
+@pytest.mark.parametrize("K", [1, 7, 127, 129])
+def test_fused_step_pads_tight_rows_internally(K):
+    """Direct calls with tight (non-padded) rows — e.g. the rank_step
+    doctest — pad internally and slice back, bit-identical to the oracle."""
+    rng = np.random.default_rng(K + 7)
+    n = jnp.int32(K)
+    cache_j = cache_p = jnp.full((K,), EMPTY, jnp.int32)
+    for step in range(60):
+        key = jnp.int32(rng.integers(0, max(2 * K, 4)))
+        cache_j, _, hit_j, _ = rank_step(cache_j, key, (n,), climb_plan)
+        cache_p, _, hit_p, _ = fused_policy_step(
+            cache_p, key, (n,), climb_plan, interpret=True, tile=LANE)
+        assert cache_p.shape == (K,)
+        assert bool(hit_j) == bool(hit_p), step
+        np.testing.assert_array_equal(np.asarray(cache_j),
+                                      np.asarray(cache_p))
+
+
+# --- wipe_from boundaries and empty rows ------------------------------------
+
+@pytest.mark.parametrize("wipe", [0, 1, 64, 127, 128, 200, 255, 256])
+def test_wipe_from_boundaries(wipe):
+    """Wipes landing on/off tile edges of a 2-tile row (W=256, tile=128),
+    including wipe=0 (clears the freshly inserted key too) and wipe=W."""
+    W = 256
+    cache = jnp.arange(W, dtype=jnp.int32)
+
+    def plan(hit, i, scalars):
+        return jnp.int32(W - 1), jnp.int32(0), jnp.int32(wipe), ()
+
+    ref = rank_step(cache, jnp.int32(999), (), plan)
+    got = fused_policy_step(cache, jnp.int32(999), (), plan,
+                            interpret=True, tile=LANE)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(ref[0]))
+    assert bool(got[2]) == bool(ref[2]) and int(got[3]) == int(ref[3])
+    assert np.all(np.asarray(got[0])[wipe:] == -1)
+
+
+@pytest.mark.parametrize("K", [4, 128, 300])
+@pytest.mark.parametrize("key", [5, -1])
+def test_full_empty_row(K, key):
+    """A fully-EMPTY row: a miss inserts at the bottom rank; searching for
+    EMPTY itself (-1) 'hits' at rank 0 in both lowerings alike."""
+    cache = padded_row(K)
+    n = jnp.int32(K)
+    ref = rank_step(cache, jnp.int32(key), (n,), climb_plan)
+    got = fused_policy_step(cache, jnp.int32(key), (n,), climb_plan,
+                            interpret=True, tile=LANE)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(ref[0]))
+    assert bool(got[2]) == bool(ref[2]) and int(got[3]) == int(ref[3])
+
+
+# --- composition: scan + vmap over multi-tile rows --------------------------
+
+def test_scan_vmap_multitile_parity():
+    K = 300                                  # W = 384 -> 3 forced tiles
+    B, T = 3, 120
+    rng = np.random.default_rng(42)
+    keys = jnp.asarray(rng.integers(0, 2 * K, size=(B, T)).astype(np.int32))
+    n = jnp.int32(K)
+
+    def run(step_fn):
+        def one(lane_keys):
+            def body(c, key):
+                c, _, hit, _ = step_fn(c, key)
+                return c, hit
+            return jax.lax.scan(body, padded_row(K), lane_keys)
+        return jax.jit(jax.vmap(one))(keys)
+
+    cj, hj = run(lambda c, key: rank_step(c, key, (n,), climb_plan))
+    cp, hp = run(lambda c, key: fused_policy_step(
+        c, key, (n,), climb_plan, interpret=True, tile=LANE))
+    np.testing.assert_array_equal(np.asarray(hp), np.asarray(hj))
+    np.testing.assert_array_equal(np.asarray(cp), np.asarray(cj))
+
+
+def test_compiled_config_lowers_for_tpu():
+    """The interpret=False (Mosaic) configuration cannot execute on CPU,
+    but it must *lower*: cross-platform export for TPU proves the kernel
+    is Mosaic-legal, scan+vmap included (tools/check_lowering.py runs the
+    fuller sweep; this is the in-suite smoke)."""
+    jexport = pytest.importorskip("jax.export")
+    K = 300
+    n = jnp.int32(K)
+
+    def f(cache, keys):
+        def body(c, key):
+            c, _, hit, _ = fused_policy_step(c, key, (n,), climb_plan,
+                                             interpret=False, tile=LANE)
+            return c, hit
+        return jax.lax.scan(body, cache, keys)
+
+    exp = jexport.export(jax.jit(f), platforms=["tpu"])(
+        jax.ShapeDtypeStruct((lane_pad(K),), jnp.int32),
+        jax.ShapeDtypeStruct((16,), jnp.int32))
+    assert "tpu" in [p.lower() for p in exp.platforms]
+
+
+# --- property: random promote/wipe plans on padded rows ---------------------
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_random_plan_sequences_parity(data):
+    """Arbitrary valid plans (any t <= src < W, any wipe boundary, keys
+    including EMPTY) keep the tiled kernel bit-identical to the oracle —
+    stronger than policy-shaped sequences."""
+    K = data.draw(st.integers(min_value=1, max_value=200))
+    W = lane_pad(K)
+    cache_j = cache_p = padded_row(K)
+    for _ in range(data.draw(st.integers(min_value=1, max_value=6))):
+        key = jnp.int32(data.draw(st.integers(min_value=-1,
+                                              max_value=2 * K)))
+        src = data.draw(st.integers(min_value=0, max_value=K - 1))
+        t = data.draw(st.integers(min_value=0, max_value=src))
+        wipe = data.draw(st.integers(min_value=0, max_value=W))
+
+        def plan(hit, i, scalars, src=src, t=t, wipe=wipe):
+            return jnp.int32(src), jnp.int32(t), jnp.int32(wipe), ()
+
+        rj = rank_step(cache_j, key, (), plan)
+        rp = fused_policy_step(cache_p, key, (), plan,
+                               interpret=True, tile=LANE)
+        np.testing.assert_array_equal(np.asarray(rp[0]), np.asarray(rj[0]))
+        assert bool(rp[2]) == bool(rj[2]) and int(rp[3]) == int(rj[3])
+        cache_j, cache_p = rj[0], rp[0]

@@ -1,0 +1,113 @@
+#!/usr/bin/env python
+"""Compiled-configuration lowering smoke (runs anywhere, TPU not needed).
+
+CPU cannot *execute* compiled Pallas, but it can run the full Mosaic pass
+pipeline via cross-platform export: ``jax.export.export(jit(f),
+platforms=["tpu"])`` fails loudly on any kernel Mosaic would reject.  This
+script exports every program shape the engine actually runs with
+``use_pallas="compiled"``:
+
+  * single-lane scanned replay, per rank policy (Climb / AdaptiveClimb /
+    DynamicAdaptiveClimb);
+  * vmapped [B, T] batched replay (the custom_vmap lane-grid kernel);
+  * the multi-tenant tier step, [T, N] and seed-vmapped [S, T, N] (the
+    nested-vmap path through the standard pallas batching rule).
+
+CI runs this in the ``kernels-compiled`` job so a kernel edit that breaks
+the real lowering cannot land behind a green interpret-only suite.
+
+Usage: PYTHONPATH=src python tools/check_lowering.py
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.export
+import jax.numpy as jnp
+
+from repro.core import Engine, Request, make_policy
+from repro.core.policy import pallas_mode
+from repro.tier import CacheTier, replay_tier
+
+RANK_SPECS = ("climb", "adaptiveclimb", "dynamicadaptiveclimb")
+T, B, S, N = 16, 3, 2, 3
+
+
+def _export(label: str, fn, *avals) -> bool:
+    try:
+        exp = jax.export.export(jax.jit(fn), platforms=["tpu"])(*avals)
+        assert "tpu" in [p.lower() for p in exp.platforms]
+        print(f"  OK  {label}")
+        return True
+    except Exception as e:  # noqa: BLE001 - report every failure mode
+        print(f"FAIL  {label}: {type(e).__name__}: {e}")
+        return False
+
+
+def check_policy(spec: str) -> bool:
+    pol = make_policy(spec)
+    K = 300                                  # W = 384: multi-tile with a
+                                             # forced 128-lane tile
+
+    def scanned(keys):
+        with pallas_mode("compiled"):
+            def body(st, key):
+                st, info = pol.step(st, Request.of(key))
+                return st, info.hit
+            return jax.lax.scan(body, pol.init(K), keys)[1]
+
+    def batched(keys):
+        with pallas_mode("compiled"):
+            def one(lane):
+                def body(st, key):
+                    st, info = pol.step(st, Request.of(key))
+                    return st, info.hit
+                return jax.lax.scan(body, pol.init(K), lane)[1]
+            return jax.vmap(one)(keys)
+
+    ok = _export(f"{spec}: scan [T]", scanned,
+                 jax.ShapeDtypeStruct((T,), jnp.int32))
+    ok &= _export(f"{spec}: vmap+scan [B, T]", batched,
+                  jax.ShapeDtypeStruct((B, T), jnp.int32))
+    return ok
+
+
+def check_tier() -> bool:
+    tier = CacheTier(n_tenants=N, budget=96, k0=16)
+
+    def tier_flat(keys):
+        return replay_tier(tier, keys, use_pallas="compiled").metrics.hits
+
+    def tier_seeded(keys):
+        return replay_tier(tier, keys, use_pallas="compiled").metrics.hits
+
+    ok = _export("tier: [T, N]", tier_flat,
+                 jax.ShapeDtypeStruct((T, N), jnp.int32))
+    ok &= _export("tier: seed-vmapped [S, T, N]", tier_seeded,
+                  jax.ShapeDtypeStruct((S, T, N), jnp.int32))
+    return ok
+
+
+def check_engine() -> bool:
+    eng = Engine()
+
+    def replay(keys):
+        return eng.replay("dynamicadaptiveclimb", keys, 300,
+                          collect_info=False,
+                          use_pallas="compiled").metrics.hits
+
+    return _export("engine: replay [B, T] compiled", replay,
+                   jax.ShapeDtypeStruct((B, T), jnp.int32))
+
+
+def main() -> int:
+    print("Mosaic lowering smoke (cross-platform TPU export):")
+    ok = all([*(check_policy(s) for s in RANK_SPECS),
+              check_tier(), check_engine()])
+    print("all lowerings OK" if ok else "LOWERING FAILURES", flush=True)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
