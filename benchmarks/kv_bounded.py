@@ -2,9 +2,10 @@
 
 Measures next-token agreement with the exact (unbounded) cache and the KV
 memory held, as the DAC slot budget shrinks — the serving-quality analogue
-of the paper's miss-ratio tables.  Not a trace replay, so it bypasses the
-sweep runner, but the output is the same canonical schema-validated
-payload (one record per budget).
+of the paper's miss-ratio tables.  The cell grid is a declarative
+:class:`repro.bench.ServeScenario` (arch + decode shape + budget
+fractions), the seed axis produces canonical per-seed metric lists, and
+the output is the same schema-validated payload as every trace sweep.
 """
 from __future__ import annotations
 
@@ -14,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.bench import report, results
+from repro.bench import ServeScenario, report, results
 from repro.configs import SMOKE_ARCHS
 from repro.models import init_params
 from repro.serving import decode_step, prefill
@@ -40,35 +41,50 @@ def _decode(cfg, params, toks, gen, budget, force=None):
     return np.stack(out), kv
 
 
-def run(arch: str = "deepseek-7b", gen: int = 32, quiet: bool = False):
+def _cell(cfg, params, toks, sc, budget, ref, ref_kv):
+    out, kv = _decode(cfg, params, toks, sc.gen, budget=budget,
+                      force=ref[:-1])
+    return {"agreement": float((out == ref).mean()),
+            "kv_bytes": float(kv), "kv_frac": kv / ref_kv}
+
+
+def run(arch: str = "deepseek-7b", gen: int = 32, seeds=(0,),
+        quiet: bool = False):
     t_start = time.perf_counter()
-    cfg = SMOKE_ARCHS[arch]
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
-    B, S = 2, 96
-    toks = jnp.asarray(rng.integers(0, 64, (B, S)).astype(np.int32))
-    total = S + gen
-    ref, ref_kv = _decode(cfg, params, toks, gen, budget=0)
-    rows = {}
+    sc = ServeScenario("kv_bounded", arch=arch, batch=2, prompt=96,
+                       gen=gen)
+    cfg = SMOKE_ARCHS[sc.arch]
+    # one metric-list accumulator per budget cell, per-seed aligned
+    cells = {B: [] for B in sc.budgets()}
+    for seed in seeds:
+        params = init_params(cfg, jax.random.PRNGKey(seed))
+        rng = np.random.default_rng(seed)
+        toks = jnp.asarray(
+            rng.integers(0, 64, (sc.batch, sc.prompt)).astype(np.int32))
+        ref, ref_kv = _decode(cfg, params, toks, sc.gen, budget=0)
+        for B in sc.budgets():
+            cells[B].append(_cell(cfg, params, toks, sc, B, ref, ref_kv))
     records = []
-    for budget in (total, total * 3 // 4, total // 2, total // 4):
-        out, kv = _decode(cfg, params, toks, gen, budget=budget,
-                          force=ref[:-1])
-        rows[budget] = {"agreement": float((out == ref).mean()),
-                        "kv_bytes": kv, "kv_frac": kv / ref_kv}
-        records.append({"scenario": arch, "K": budget,
-                        "metrics": dict(rows[budget])})
+    for frac, B in zip(sc.budget_frac, sc.budgets()):
+        metrics = {name: [c[name] for c in cells[B]]
+                   for name in ("agreement", "kv_bytes", "kv_frac")}
+        records.append({"policy": "dac", "scenario": sc.name,
+                        "K": B, "K_label": sc.budget_label(frac),
+                        "T": sc.total, "seeds": list(seeds),
+                        "metrics": metrics})
     if not quiet:
         print(report.fmt_row(["budget", "agreement", "kv_frac"],
-                             [10, 12, 10]))
-        for b, r in rows.items():
-            print(report.fmt_row([b, f"{r['agreement']:.1%}",
-                                  f"{r['kv_frac']:.2f}"], [10, 12, 10]))
+                             [14, 12, 10]))
+        for rec in records:
+            m = rec["metrics"]
+            print(report.fmt_row(
+                [f"{rec['K']} ({rec['K_label']})",
+                 f"{np.mean(m['agreement']):.1%}",
+                 f"{np.mean(m['kv_frac']):.2f}"], [14, 12, 10]))
     payload = results.build_payload(
         "kv_bounded",
-        config={"arch": arch, "gen": gen, "prompt": S},
+        config={"scenario": sc.to_config(), "seeds": list(seeds)},
         records=records,
-        extras={"rows": {str(k): v for k, v in rows.items()}},
         wall_s=time.perf_counter() - t_start)
     results.save(payload)
     return payload

@@ -19,9 +19,9 @@ from repro.bench import results
 
 
 def _jobs():
-    from . import (ablation_eps, byte_miss, curve_cachesize, kv_bounded,
-                   mrr_table, ops_per_request, real_traces, skew_sweep,
-                   tenant_sweep, throughput)
+    from . import (ablation_eps, byte_miss, curve_cachesize, fleet_sweep,
+                   kv_bounded, mrr_table, ops_per_request, real_traces,
+                   skew_sweep, tenant_sweep, throughput)
 
     # name -> (description, fn(fast) -> validated payload)
     return {
@@ -54,6 +54,11 @@ def _jobs():
             "beyond-paper (multi-tenant tier, v2 schema)",
             lambda fast: tenant_sweep.run(
                 T=24_000 if fast else 60_000,
+                seeds=(0, 1) if fast else (0, 1, 2))),
+        "fleet_sweep": (
+            "beyond-paper (dynamic fleet + SLO telemetry, v2 schema)",
+            lambda fast: fleet_sweep.run(
+                T=16_000 if fast else 40_000,
                 seeds=(0, 1) if fast else (0, 1, 2))),
         "ablation_eps": (
             "beyond-paper",

@@ -21,19 +21,27 @@ Multi-tenant tier grids use the same shapes one level up:
 ``TierScenario`` (a ``tenants(...)`` stream + shared budget) x
 ``TierSweep`` ((policy, arbiter) entries), executed by
 :func:`run_tier_sweep` into ``repro.bench.result/v2`` payloads with
-per-tenant records — see ``docs/EXPERIMENTS.md``.
+per-tenant records — see ``docs/EXPERIMENTS.md``.  Dynamic-lifecycle
+fleets (``fleet(...)`` streams with tenant arrivals/departures) follow
+the same grammar via ``FleetScenario`` x ``FleetSweep`` and
+:func:`run_fleet_sweep`, whose v2 records additionally carry SLO
+telemetry: penalty p50/p99 and Jain occupancy fairness.
 """
 from . import report, results
-from .runner import (STREAM_THRESHOLD, SweepResult, TierSweepResult,
-                     materialize, run_sweep, run_tier_sweep, should_stream,
+from .runner import (STREAM_THRESHOLD, FleetSweepResult, SweepResult,
+                     TierSweepResult, materialize, run_fleet_sweep,
+                     run_sweep, run_tier_sweep, should_stream,
                      stream_chunks)
 from .scenario import (COST_MODELS, LARGE_FRAC, SIZE_MODELS, SMALL_FRAC,
-                       Scenario, Sweep, TierScenario, TierSweep, k_for)
+                       FleetScenario, FleetSweep, Scenario, ServeScenario,
+                       Sweep, TierScenario, TierSweep, k_for)
 
 __all__ = [
     "Scenario", "Sweep", "SweepResult", "run_sweep", "materialize",
     "should_stream", "stream_chunks", "STREAM_THRESHOLD",
     "TierScenario", "TierSweep", "TierSweepResult", "run_tier_sweep",
+    "FleetScenario", "FleetSweep", "FleetSweepResult", "run_fleet_sweep",
+    "ServeScenario",
     "results", "report", "k_for",
     "SIZE_MODELS", "COST_MODELS", "SMALL_FRAC", "LARGE_FRAC",
 ]

@@ -49,8 +49,10 @@ SCHEMA_VERSION = "repro.bench.result/v1"
 # v2 = v1 plus multi-tenant tier cells: records may carry "arbiter" /
 # "budget" / "n_tenants" and a "tenants" list of per-tenant sub-records
 # ({"tenant": int, "metrics": {...}}, metrics checked like record metrics,
-# per-seed lists aligned with the record's seed axis).  v1 payloads stay
-# valid and are still written by the single-cache sweeps.
+# per-seed lists aligned with the record's seed axis).  Dynamic-fleet
+# cells use the same shape with "n_lanes" and a "lanes" list
+# ({"lane": int, "metrics": {...}}).  v1 payloads stay valid and are
+# still written by the single-cache sweeps.
 SCHEMA_V2 = "repro.bench.result/v2"
 SCHEMA_VERSIONS = (SCHEMA_VERSION, SCHEMA_V2)
 
@@ -88,7 +90,7 @@ _RECORD_OPTIONAL = {
 _RECORD_OPTIONAL_V2 = dict(
     _RECORD_OPTIONAL,
     arbiter=str, budget=numbers.Integral, budget_label=str,
-    n_tenants=numbers.Integral,
+    n_tenants=numbers.Integral, n_lanes=numbers.Integral,
 )
 _PROVENANCE_KEYS = {"git_sha": str, "jax": str, "x64": bool,
                     "backend": str, "device_count": numbers.Integral}
@@ -174,18 +176,19 @@ def _check_metrics_dict(path: str, metrics, seeds=None):
                   f"length {len(v)} != len(seeds) {len(seeds)}")
 
 
-def _check_tenants(path: str, tenants, seeds):
-    """v2: per-tenant sub-records inside one tier cell."""
+def _check_tenants(path: str, tenants, seeds, key: str = "tenant"):
+    """v2: per-tenant (or, with ``key="lane"``, per-lane fleet)
+    sub-records inside one cell."""
     if not isinstance(tenants, list) or not tenants:
-        _fail(path, "must be a non-empty list of per-tenant records")
+        _fail(path, f"must be a non-empty list of per-{key} records")
     for j, ten in enumerate(tenants):
         tp = f"{path}[{j}]"
         if not isinstance(ten, dict):
-            _fail(tp, f"tenant record must be a dict, got {type(ten).__name__}")
-        if not isinstance(ten.get("tenant"), numbers.Integral):
-            _fail(f"{tp}.tenant", "missing or non-int tenant index")
+            _fail(tp, f"{key} record must be a dict, got {type(ten).__name__}")
+        if not isinstance(ten.get(key), numbers.Integral):
+            _fail(f"{tp}.{key}", f"missing or non-int {key} index")
         if "metrics" not in ten:
-            _fail(tp, "tenant record missing 'metrics'")
+            _fail(tp, f"{key} record missing 'metrics'")
         _check_metrics_dict(f"{tp}.metrics", ten["metrics"], seeds)
 
 
@@ -206,6 +209,11 @@ def _check_record(path: str, rec, v2: bool = False):
             _fail(f"{path}.tenants",
                   f"per-tenant records require schema {SCHEMA_V2!r}")
         _check_tenants(f"{path}.tenants", rec["tenants"], seeds)
+    if "lanes" in rec:
+        if not v2:
+            _fail(f"{path}.lanes",
+                  f"per-lane fleet records require schema {SCHEMA_V2!r}")
+        _check_tenants(f"{path}.lanes", rec["lanes"], seeds, key="lane")
     optional = _RECORD_OPTIONAL_V2 if v2 else _RECORD_OPTIONAL
     for key, typ in optional.items():
         if key in rec and not isinstance(rec[key], typ):

@@ -44,10 +44,12 @@ from ..core import Engine
 from ..core.policy import Request
 from ..data import ingest
 from . import report, results
-from .scenario import Scenario, Sweep, TierScenario, TierSweep
+from .scenario import (FleetScenario, FleetSweep, Scenario, Sweep,
+                       TierScenario, TierSweep)
 
 __all__ = ["materialize", "run_sweep", "SweepResult",
            "run_tier_sweep", "TierSweepResult",
+           "run_fleet_sweep", "FleetSweepResult",
            "should_stream", "stream_chunks", "STREAM_THRESHOLD"]
 
 # per-lane trace length above which run_sweep(stream="auto") switches a
@@ -70,9 +72,11 @@ def materialize(scenario, seeds) -> Request:
     """Build the ``[S, T]`` request batch for one scenario: traces from
     the registry (one lane per seed) with the scenario's size/cost tables
     gathered per request.  A :class:`TierScenario` materializes the same
-    way, one ``[T, N]`` interleaved stream per seed (``[S, T, N]``).
-    File-backed scenarios replicate the real trace across the seed lanes,
-    sizes/costs sourced from the file.
+    way, one ``[T, N]`` interleaved stream per seed (``[S, T, N]``); so
+    does a :class:`FleetScenario` (its ``-1`` idle-lane keys gather the
+    size/cost table's last entry — harmless: the fleet replay masks every
+    idle-lane contribution).  File-backed scenarios replicate the real
+    trace across the seed lanes, sizes/costs sourced from the file.
 
     >>> sc = Scenario("z", trace="zipf(N=64,alpha=1.0)", T=50, K=(8,))
     >>> materialize(sc, seeds=(0, 1)).key.shape
@@ -336,6 +340,117 @@ def run_tier_sweep(sweep: TierSweep, *, engine: Engine | None = None,
                      f"{pol}+{arb}: byte_miss={mr:.3f} [{wall:.2f}s]")
     return TierSweepResult(sweep=sweep, records=records,
                            wall_s=time.perf_counter() - t_start)
+
+
+def _fleet_cell_record(pol, arb, sc, B, label, seeds, res, wall_s) -> dict:
+    """One v2 record: aggregate fleet metrics + SLO telemetry (penalty
+    p50/p99, Jain occupancy fairness) plus a per-lane sub-record list."""
+    n = sc.n_lanes
+    hist = np.asarray(res.hist, np.float64)
+    agg = {
+        "miss_ratio": _per_seed(res.agg_miss_ratio),
+        "byte_miss_ratio": _per_seed(res.agg_byte_miss_ratio),
+        "penalty_ratio": _per_seed(res.agg_penalty_ratio),
+        "avg_k_total": _per_seed(
+            np.asarray(res.avg_k, dtype=np.float64).sum(axis=-1)),
+        "penalty_p50": _per_seed(res.agg_penalty_quantile(0.5)),
+        "penalty_p99": _per_seed(res.agg_penalty_quantile(0.99)),
+        "jain": _per_seed(res.jain),
+    }
+    per_lane = {
+        "miss_ratio": np.atleast_2d(np.asarray(res.miss_ratio)),
+        "byte_miss_ratio": np.atleast_2d(np.asarray(res.byte_miss_ratio)),
+        "avg_k": np.atleast_2d(np.asarray(res.avg_k, dtype=np.float64)),
+        "alive_frac": np.atleast_2d(
+            np.asarray(res.alive_frac, dtype=np.float64)),
+        "penalty_p99": np.atleast_2d(res.penalty_quantile(0.99)),
+        "requests": np.atleast_2d(
+            np.asarray(res.metrics.requests, dtype=np.float64)),
+    }
+    lanes = [
+        {"lane": t,
+         "metrics": {name: [float(v) for v in vals[:, t]]
+                     for name, vals in per_lane.items()}}
+        for t in range(n)]
+    return {
+        "policy": pol, "arbiter": arb, "scenario": sc.name,
+        "trace": sc.trace, "T": int(sc.T), "budget": int(B),
+        "budget_label": label, "n_lanes": n,
+        "seeds": [int(s) for s in seeds],
+        "metrics": agg, "lanes": lanes, "wall_s": float(wall_s),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSweepResult:
+    """Executed fleet sweep: config + one v2 record per grid cell."""
+
+    sweep: FleetSweep
+    records: list
+    wall_s: float
+
+    def select(self, **eq) -> list:
+        return report.select(self.records, **eq)
+
+    def metric(self, name: str, **eq) -> np.ndarray:
+        return report.seed_values(self.records, name, **eq)
+
+    def payload(self, extras: dict | None = None) -> dict:
+        return results.build_payload(
+            self.sweep.name, config=self.sweep.to_config(),
+            records=self.records, extras=extras, wall_s=self.wall_s,
+            schema=results.SCHEMA_V2)
+
+    def save(self, extras: dict | None = None, *,
+             results_dir: str | None = None) -> dict:
+        payload = self.payload(extras)
+        results.save(payload, results_dir=results_dir)
+        return payload
+
+
+def run_fleet_sweep(sweep: FleetSweep, *, engine: Engine | None = None,
+                    use_pallas=None,
+                    progress=None) -> FleetSweepResult:
+    """Execute every fleet cell: one ``[S, T, N]`` batch per scenario
+    (shared across entries and budgets), one seed-vmapped
+    ``Engine.replay_fleet`` call per (policy, arbiter, budget) cell,
+    emitting :data:`repro.bench.results.SCHEMA_V2` records with per-lane
+    SLO telemetry (penalty p50/p99 from the in-carry histograms, Jain
+    occupancy fairness).
+
+    >>> sw = FleetSweep("doc", entries=(("dac(k_min=4)", "auction"),),
+    ...                 seeds=(0,), scenarios=(FleetScenario(
+    ...                     "pool", trace="fleet(N=64,n_lanes=2,rate=0.05,"
+    ...                     "mean_session=100,lo=8)", T=300, budget=(32,)),))
+    >>> rec = run_fleet_sweep(sw).records[0]
+    >>> rec["n_lanes"], len(rec["lanes"]), rec["budget"]
+    (2, 2, 32)
+    >>> sorted(rec["metrics"])[:3]
+    ['avg_k_total', 'byte_miss_ratio', 'jain']
+    """
+    from ..fleet import FleetTier
+    engine = engine or Engine()
+    t_start = time.perf_counter()
+    records = []
+    reqs_cache = {}
+    for pol, arb, sc, B, label in sweep.cells():
+        if sc.name not in reqs_cache:
+            reqs_cache[sc.name] = materialize(sc, sweep.seeds)
+        reqs = reqs_cache[sc.name]
+        tier = FleetTier(pol, n_lanes=sc.n_lanes, budget=B, arbiter=arb,
+                         k0=sc.k0, util_decay=sc.util_decay)
+        t0 = time.perf_counter()
+        res = engine.replay_fleet(tier, reqs, use_pallas=use_pallas)
+        jax.block_until_ready(res.metrics.hits)
+        wall = time.perf_counter() - t0
+        records.append(_fleet_cell_record(pol, arb, sc, B, label,
+                                          sweep.seeds, res, wall))
+        if progress is not None:
+            mr = np.mean(records[-1]["metrics"]["byte_miss_ratio"])
+            progress(f"[{sweep.name}] {sc.name} B={B}({label}) "
+                     f"{pol}+{arb}: byte_miss={mr:.3f} [{wall:.2f}s]")
+    return FleetSweepResult(sweep=sweep, records=records,
+                            wall_s=time.perf_counter() - t_start)
 
 
 def run_sweep(sweep: Sweep, *, engine: Engine | None = None,

@@ -30,6 +30,7 @@ from ..specs import build_kwargs, parse_spec
 
 __all__ = [
     "Scenario", "Sweep", "TierScenario", "TierSweep",
+    "FleetScenario", "FleetSweep", "ServeScenario",
     "SIZE_MODELS", "COST_MODELS", "SMALL_FRAC", "LARGE_FRAC", "k_for",
 ]
 
@@ -91,6 +92,11 @@ class Scenario:
             raise ValueError(
                 f"scenario {self.name!r}: {spec.family!r} is a multi-tenant "
                 "trace family — use TierScenario (repro.tier workloads)")
+        if spec.is_fleet:
+            raise ValueError(
+                f"scenario {self.name!r}: {spec.family!r} is a dynamic-"
+                "fleet trace family — use FleetScenario (repro.fleet "
+                "workloads)")
         if spec.is_file:
             # real traces carry their own sizes/costs; validate the file
             # (and its length vs T) eagerly, like every other spec error
@@ -327,6 +333,250 @@ class TierSweep:
                    scenarios=tuple(TierScenario.from_config(s)
                                    for s in cfg["scenarios"]),
                    seeds=tuple(cfg["seeds"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetScenario:
+    """One dynamic-fleet workload: a ``fleet(...)`` trace spec (tenant
+    arrivals/departures encoded as ``-1`` lane entries) plus the global
+    budget(s) and optional size/cost models.
+
+    ``budget`` entries are explicit ints or the regime letters ``"S"`` /
+    ``"L"``, resolved against the total id footprint (``n_lanes x
+    n_keys``) and floored at four slots per lane, exactly like
+    :class:`TierScenario`.  ``k0`` overrides the admission target;
+    ``util_decay`` sets the byte-miss-cost EWMA the auction arbiter
+    prices by (see :class:`repro.fleet.FleetTier`).
+
+    >>> sc = FleetScenario("pool", trace="fleet(N=256,n_lanes=4)",
+    ...                    T=1000, budget=(64, "S"))
+    >>> sc.budgets()
+    (64, 16)
+    >>> sc.n_lanes
+    4
+    >>> FleetScenario.from_config(sc.to_config()) == sc
+    True
+    """
+
+    name: str
+    trace: str                  # fleet trace spec (repro.data.make_trace)
+    T: int
+    budget: tuple = (256,)      # ints and/or regime letters "S"/"L"
+    k0: int | None = None
+    util_decay: float = 0.98
+    size_model: str | None = None
+    cost_model: str | None = None
+
+    def __post_init__(self):
+        spec = make_trace(self.trace)
+        if not spec.is_fleet:
+            raise ValueError(
+                f"fleet scenario {self.name!r} needs a dynamic-fleet trace "
+                f"family, got {spec.family!r} — use TierScenario/Scenario "
+                "for fixed-population workloads")
+        object.__setattr__(self, "trace", str(spec))
+        b = self.budget if isinstance(self.budget, (tuple, list)) \
+            else (self.budget,)
+        object.__setattr__(self, "budget", tuple(b))
+        if self.cost_model is not None and self.size_model is None:
+            raise ValueError(
+                f"fleet scenario {self.name!r}: cost_model requires a "
+                "size_model")
+        if self.size_model is not None:
+            _model_fn(SIZE_MODELS, "size", self.size_model,
+                      skip=("n_objects",))
+        if self.cost_model is not None:
+            _model_fn(COST_MODELS, "cost", self.cost_model,
+                      skip=("sizes_bytes",))
+
+    def trace_spec(self) -> TraceSpec:
+        return make_trace(self.trace)
+
+    @property
+    def n_lanes(self) -> int:
+        return self.trace_spec().n_tenants
+
+    def budgets(self) -> tuple:
+        """Budget entries with regime letters resolved against the total
+        footprint (``n_lanes * n_keys``), floored at four slots per lane
+        (admission needs every lane to fit at the floor)."""
+        spec = self.trace_spec()
+        total = spec.n_tenants * spec.n_keys
+        return tuple(max(4 * self.n_lanes, k_for(total, b))
+                     if isinstance(b, str) else int(b)
+                     for b in self.budget)
+
+    def budget_label(self, b) -> str:
+        return b if isinstance(b, str) else str(int(b))
+
+    def size_table(self) -> np.ndarray | None:
+        """Per-object-id size table ``[n_keys]`` (bytes), shared by every
+        session (sessions address the same id space through private
+        hot-set permutations)."""
+        if self.size_model is None:
+            return None
+        fn, kw = _model_fn(SIZE_MODELS, "size", self.size_model,
+                           skip=("n_objects",))
+        return fn(n_objects=self.trace_spec().n_keys, **kw)
+
+    def cost_table(self, sizes: np.ndarray) -> np.ndarray | None:
+        if self.cost_model is None:
+            return None
+        fn, kw = _model_fn(COST_MODELS, "cost", self.cost_model,
+                           skip=("sizes_bytes",))
+        return fn(sizes, **kw)
+
+    def to_config(self) -> dict:
+        return {"name": self.name, "trace": self.trace, "T": self.T,
+                "budget": list(self.budget), "k0": self.k0,
+                "util_decay": self.util_decay,
+                "size_model": self.size_model,
+                "cost_model": self.cost_model}
+
+    @classmethod
+    def from_config(cls, cfg: dict) -> "FleetScenario":
+        return cls(name=cfg["name"], trace=cfg["trace"], T=cfg["T"],
+                   budget=tuple(cfg["budget"]), k0=cfg.get("k0"),
+                   util_decay=cfg.get("util_decay", 0.98),
+                   size_model=cfg.get("size_model"),
+                   cost_model=cfg.get("cost_model"))
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSweep:
+    """The fleet evaluation grid: (policy, arbiter) entries x fleet
+    scenarios x budgets x seeds — the dynamic-lifecycle analogue of
+    :class:`TierSweep` (e.g. ``("dac", "auction")`` for the priced pool,
+    ``("lru", "static")`` for a fixed-partition baseline).
+
+    >>> sw = FleetSweep("demo", entries=(("dac", "auction"),),
+    ...                 scenarios=(FleetScenario(
+    ...                     "pool", trace="fleet(N=256,n_lanes=4)",
+    ...                     T=500),))
+    >>> FleetSweep.from_config(sw.to_config()) == sw
+    True
+    """
+
+    name: str
+    entries: tuple              # of (policy_spec, arbiter_spec) pairs
+    scenarios: tuple            # of FleetScenario
+    seeds: tuple = (0,)
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "entries",
+            tuple((str(p), str(a)) for p, a in self.entries))
+        object.__setattr__(self, "scenarios", tuple(self.scenarios))
+        object.__setattr__(self, "seeds",
+                           tuple(int(s) for s in self.seeds))
+        if not self.entries:
+            raise ValueError("fleet sweep needs at least one (policy, "
+                             "arbiter) entry")
+        if not self.scenarios:
+            raise ValueError("fleet sweep needs at least one scenario")
+        if not self.seeds:
+            raise ValueError("fleet sweep needs at least one seed")
+        names = [sc.name for sc in self.scenarios]
+        if len(set(names)) != len(names):
+            raise ValueError(f"scenario names must be unique, got {names}")
+
+    def cells(self):
+        """Iterate the grid: (policy, arbiter, scenario, budget, label)."""
+        for sc in self.scenarios:
+            for b_spec, B in zip(sc.budget, sc.budgets()):
+                for pol, arb in self.entries:
+                    yield pol, arb, sc, B, sc.budget_label(b_spec)
+
+    def to_config(self) -> dict:
+        return {"name": self.name,
+                "entries": [list(e) for e in self.entries],
+                "scenarios": [sc.to_config() for sc in self.scenarios],
+                "seeds": list(self.seeds)}
+
+    @classmethod
+    def from_config(cls, cfg: dict) -> "FleetSweep":
+        return cls(name=cfg["name"],
+                   entries=tuple(tuple(e) for e in cfg["entries"]),
+                   scenarios=tuple(FleetScenario.from_config(s)
+                                   for s in cfg["scenarios"]),
+                   seeds=tuple(cfg["seeds"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeScenario:
+    """One serving-path workload: a model architecture greedily decoded
+    with the paper's policy as the bounded KV-cache manager
+    (``repro.serving``), swept over KV slot budgets.
+
+    There is no trace spec — the "requests" are the attention reads of a
+    seeded random prompt plus ``gen`` decoded tokens — but the cell grid
+    is declarative like every other scenario: ``budget_frac`` entries
+    scale the exact-cache footprint (``prompt + gen`` positions, the
+    serving analogue of the id footprint) and ``budgets()`` resolves them
+    to slot counts, floored at four slots like :func:`k_for`.
+
+    >>> sc = ServeScenario("kv", arch="deepseek-7b", prompt=96, gen=32)
+    >>> sc.budgets()
+    (128, 96, 64, 32)
+    >>> sc.budget_label(0.75)
+    '75%'
+    >>> ServeScenario.from_config(sc.to_config()) == sc
+    True
+    """
+
+    name: str
+    arch: str = "deepseek-7b"
+    batch: int = 2
+    prompt: int = 96
+    gen: int = 32
+    budget_frac: tuple = (1.0, 0.75, 0.5, 0.25)
+
+    def __post_init__(self):
+        # lazy import: the serving path is optional for trace-only users
+        from ..configs import SMOKE_ARCHS
+        if self.arch not in SMOKE_ARCHS:
+            raise ValueError(
+                f"serve scenario {self.name!r}: unknown arch "
+                f"{self.arch!r}; known: {sorted(SMOKE_ARCHS)}")
+        if min(self.batch, self.prompt, self.gen) < 1:
+            raise ValueError(
+                f"serve scenario {self.name!r}: batch/prompt/gen must be "
+                "positive")
+        f = self.budget_frac if isinstance(self.budget_frac, (tuple, list)) \
+            else (self.budget_frac,)
+        fracs = tuple(float(x) for x in f)
+        for x in fracs:
+            if not 0.0 < x <= 1.0:
+                raise ValueError(
+                    f"serve scenario {self.name!r}: budget fractions must "
+                    f"lie in (0, 1], got {x}")
+        object.__setattr__(self, "budget_frac", fracs)
+
+    @property
+    def total(self) -> int:
+        """Exact-cache footprint: every prompt + decoded position held."""
+        return self.prompt + self.gen
+
+    def budgets(self) -> tuple:
+        """Budget fractions resolved to slot counts against the exact
+        footprint, floored at four slots."""
+        return tuple(max(4, int(self.total * f)) for f in self.budget_frac)
+
+    def budget_label(self, f) -> str:
+        """Display label for one fraction (percent of the exact cache)."""
+        return f"{f:.0%}"
+
+    def to_config(self) -> dict:
+        return {"name": self.name, "arch": self.arch, "batch": self.batch,
+                "prompt": self.prompt, "gen": self.gen,
+                "budget_frac": list(self.budget_frac)}
+
+    @classmethod
+    def from_config(cls, cfg: dict) -> "ServeScenario":
+        return cls(name=cfg["name"], arch=cfg["arch"],
+                   batch=cfg.get("batch", 2), prompt=cfg["prompt"],
+                   gen=cfg["gen"],
+                   budget_frac=tuple(cfg["budget_frac"]))
 
 
 @dataclasses.dataclass(frozen=True)

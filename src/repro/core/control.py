@@ -1,0 +1,117 @@
+"""Algorithm 2's scalar control law — the single source of truth.
+
+Two subsystems run the paper's jump/jump' arithmetic on very different
+substrates: :mod:`repro.core.dynamicadaptiveclimb` drives a rank *row*
+(key array indexed by rank) through the fused ``rank_step``, while
+:mod:`repro.serving.kv_cache` drives a ``rank2slot`` indirection table
+over physical KV slots.  The *control scalars* — ``jump``, ``jump'``,
+the active size ``k`` and the promotion/insertion distance ``actual``
+— obey identical update rules in both (the paper's lines 2.4-2.38), and
+any drift between the two copies silently breaks the serving path's
+claim to be "Alg. 2 mapped onto KV management".
+
+This module holds those updates once.  Callers keep their own data-plane
+plumbing (where the promoted entry lands, which slot is freed); the
+thresholds and saturation arithmetic live here.  A bit-parity regression
+test (``tests/test_control_parity.py``) drives both subsystems through
+matched event streams and asserts the scalar trajectories are identical.
+
+All functions are shape-polymorphic jnp expressions: they accept traced
+scalars (inside ``rank_step`` plans), batched arrays (vmapped KV pools),
+or concrete ints (doctests below).
+
+>>> import jax.numpy as jnp
+>>> j, j2, actual = miss_update(jnp.int32(4), jnp.int32(0), jnp.int32(4))
+>>> int(j), int(j2), int(actual)
+(5, 0, 3)
+>>> j, j2, actual = hit_update(jnp.int32(5), jnp.int32(0), i=jnp.int32(1),
+...                            k=jnp.int32(4))
+>>> int(j), int(actual)            # jump decays, promote by min(jump, i)
+(4, 1)
+>>> out = resize_update(jnp.int32(8), jnp.int32(0), jnp.int32(4),
+...                     eps=0.5, k_min=2, kmax=jnp.int32(16))
+>>> int(out[0]), bool(out[3])      # jump saturated at 2k -> doubled
+(8, True)
+>>> out = resize_update(jnp.int32(8), jnp.int32(0), jnp.int32(4),
+...                     eps=0.5, k_min=2, kmax=jnp.int32(16),
+...                     cap=jnp.int32(6))
+>>> int(out[0])                    # arbiter cap 6: partial grant
+6
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["hit_update", "miss_update", "resize_update"]
+
+
+def hit_update(jump, jump2, i, k):
+    """Alg. 2 hit path (lines 2.4-2.20) at rank ``i``: decay ``jump``
+    toward ``-k/2``, steer ``jump'`` by whether the hit landed in the top
+    half, and return the promotion distance ``actual``.
+
+    Returns ``(jump, jump2, actual)``; the caller moves the hit entry
+    from rank ``i`` to rank ``i - actual`` (no-op at ``i == 0``).
+    """
+    half = k // 2
+    jump_h = jnp.where(jump > -half, jump - 1, jump)
+    top_half = i < half
+    jump2_h = jnp.where(
+        top_half,
+        jnp.where(jump2 > -half, jump2 - 1, jump2),
+        jnp.where(jump2 < 0, jump2 + 1, jump2),
+    )
+    actual = jnp.maximum(1, jnp.minimum(jump_h, i))
+    return jump_h, jump2_h, actual
+
+
+def miss_update(jump, jump2, k):
+    """Alg. 2 miss path (lines 2.22-2.27): ``jump`` climbs (saturating at
+    ``2k`` — the grow demand signal), ``jump'`` relaxes toward 0, and the
+    new entry inserts ``actual`` ranks above the bottom.
+
+    Returns ``(jump, jump2, actual)``; the caller evicts rank ``k - 1``
+    (when full) and inserts at rank ``k - actual``.
+    """
+    jump_m = jnp.minimum(jump + 1, 2 * k)
+    jump2_m = jnp.where(jump2 < 0, jump2 + 1, jump2)
+    actual = jnp.maximum(1, jnp.minimum(k - 1, jump_m))
+    return jump_m, jump2_m, actual
+
+
+def resize_update(jump, jump2, k, *, eps, k_min, kmax, cap=None):
+    """Alg. 2 resize checks (lines 2.30-2.38), evaluated after every
+    request, plus the documented post-resize state choices (see
+    ``repro.core.dynamicadaptiveclimb``'s module docstring).
+
+    ``cap=None`` is the paper's un-arbitrated law: grow iff ``jump``
+    saturates at ``2k`` and ``2k <= kmax``.  With a ``cap`` (a dynamic
+    capacity grant from an external arbiter — ``repro.tier`` /
+    ``repro.fleet``), the doubling becomes ``k -> min(2k, cap, kmax)``:
+    denied when ``cap <= k``, partial when ``k < cap < 2k``.
+
+    Returns ``(k_new, jump, jump2, grow, shrink)``; the caller wipes the
+    data-plane entries at ranks ``>= k_new`` on shrink.
+    """
+    half = k // 2
+    jump2 = jnp.where(jump == 0, 0, jump2)
+    shrink_thresh = -jnp.ceil(
+        eps * jnp.asarray(half).astype(jnp.float32)).astype(jnp.int32)
+    if cap is None:
+        k_grow = 2 * k
+        grow = (jump >= 2 * k) & (2 * k <= kmax)
+    else:
+        k_grow = jnp.minimum(2 * k, jnp.minimum(cap, kmax))
+        grow = (jump >= 2 * k) & (k_grow > k)
+    shrink = ((~grow) & (jump <= -half) & (jump2 <= shrink_thresh)
+              & (half >= k_min))
+
+    k_new = jnp.where(grow, k_grow, jnp.where(shrink, half, k))
+    # Post-resize state: after a grow, jump == 2k_old == k_new is exactly
+    # Alg. 2's init condition — keep it.  After a shrink, jump resets to 0
+    # (leaving it pinned at the new -k/2 would instantly re-arm the halving
+    # trigger); jump' restarts its observation window on any resize.
+    resized = grow | shrink
+    jump = jnp.where(shrink, 0, jnp.clip(jump, -(k_new // 2), 2 * k_new))
+    jump2 = jnp.where(resized, 0, jump2)
+    return k_new, jump, jump2, grow, shrink

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from .control import hit_update, miss_update, resize_update
 from .policy import Policy, Request, padded_row, rank_step, step_info
 
 
@@ -113,6 +114,11 @@ class DynamicAdaptiveClimb(Policy):
         bit-identical to independent vanilla caches for *any* share; a
         cap merely pinned at a constant can instead yield one partial
         grow where vanilla denies (e.g. a non-power-of-two ``growth``).
+
+        The scalar arithmetic itself lives in :mod:`repro.core.control`
+        (shared with the serving KV pool — see
+        ``tests/test_control_parity.py``); this plan owns only the rank
+        plumbing (victim rank, insertion target, shrink wipe).
         """
         eps, k_min = self.eps, self.k_min
 
@@ -121,24 +127,14 @@ class DynamicAdaptiveClimb(Policy):
                 jump, jump2, k, kmax, cap = scalars
             else:
                 jump, jump2, k, kmax = scalars
-            half = k // 2
 
             # --- hit path ----------------------------------------------
-            jump_h = jnp.where(jump > -half, jump - 1, jump)
-            top_half = i < half
-            jump2_h = jnp.where(
-                top_half,
-                jnp.where(jump2 > -half, jump2 - 1, jump2),
-                jnp.where(jump2 < 0, jump2 + 1, jump2),
-            )
-            actual_h = jnp.maximum(1, jnp.minimum(jump_h, i))
+            jump_h, jump2_h, actual_h = hit_update(jump, jump2, i, k)
             # i == 0: no promotion (src = t = 0 is the identity shift)
             t_h = jnp.where(i > 0, i - actual_h, 0)
 
             # --- miss path: evict rank k-1, insert at k - actual -------
-            jump_m = jnp.minimum(jump + 1, 2 * k)
-            jump2_m = jnp.where(jump2 < 0, jump2 + 1, jump2)
-            actual_m = jnp.maximum(1, jnp.minimum(k - 1, jump_m))
+            jump_m, jump2_m, actual_m = miss_update(jump, jump2, k)
             t_m = k - actual_m
 
             # replacement victim rank (EMPTY while filling); entries wiped
@@ -150,36 +146,14 @@ class DynamicAdaptiveClimb(Policy):
             jump2 = jnp.where(hit, jump2_h, jump2_m)
 
             # --- resize checks (after every request) -------------------
-            jump2 = jnp.where(jump == 0, 0, jump2)
-            shrink_thresh = -jnp.ceil(
-                eps * half.astype(jnp.float32)).astype(jnp.int32)
-            if budgeted:
-                # the arbiter's cap gates (and may partially grant) the
-                # doubling; cap == k denies, k < cap < 2k grants part
-                k_grow = jnp.minimum(2 * k, jnp.minimum(cap, kmax))
-                grow = (jump >= 2 * k) & (k_grow > k)
-            else:
-                k_grow = 2 * k
-                grow = (jump >= 2 * k) & (2 * k <= kmax)
-            shrink = ((~grow) & (jump <= -half) & (jump2 <= shrink_thresh)
-                      & (half >= k_min))
-
-            k_new = jnp.where(grow, k_grow, jnp.where(shrink, half, k))
+            # the arbiter's cap gates (and may partially grant) the
+            # doubling; cap == k denies, k < cap < 2k grants part
+            k_new, jump, jump2, grow, shrink = resize_update(
+                jump, jump2, k, eps=eps, k_min=k_min, kmax=kmax,
+                cap=cap if budgeted else None)
             # deactivated ranks are wiped in the same fused pass (ranks
             # >= k are EMPTY by invariant, so "no wipe" = wipe from kmax)
             wipe_from = jnp.where(shrink, k_new, kmax)
-            # Post-resize control state: after a grow, jump == 2k_old ==
-            # k_new, which is exactly Alg. 2's init condition (jump = K) —
-            # keep it.  After a shrink, jump is reset to 0 (neutral):
-            # leaving it pinned at the new -k/2 would instantly re-arm the
-            # halving trigger and cascade the cache to k_min.  jump'
-            # restarts its observation window on any resize.  (The paper
-            # does not specify post-resize state; these are the choices
-            # that keep the control law well-posed.)
-            resized = grow | shrink
-            jump = jnp.where(shrink, 0,
-                             jnp.clip(jump, -(k_new // 2), 2 * k_new))
-            jump2 = jnp.where(resized, 0, jump2)
             if budgeted:
                 return src, t, wipe_from, (jump, jump2, k_new, kmax, cap)
             return src, t, wipe_from, (jump, jump2, k_new, kmax)

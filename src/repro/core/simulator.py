@@ -316,6 +316,29 @@ class Engine:
         return _replay_tier(tier, requests, sizes=sizes, costs=costs,
                             observe=observe, use_pallas=use_pallas)
 
+    def replay_fleet(self, tier, requests, *, sizes=None, costs=None,
+                     observe: bool = False, mesh=None, axis=None,
+                     rebalance: int = 256, use_pallas=None):
+        """Replay a dynamic-fleet stream (``-1`` keys = idle lane) through
+        a :class:`repro.fleet.FleetTier`: tenant arrivals/departures inside
+        the scan, arbiter-priced capacity, per-lane SLO telemetry.
+
+        ``requests`` is ``[T, N]`` (or ``[S, T, N]`` for a vmapped seed
+        axis; unsharded only); with ``mesh=`` the lane axis is sharded via
+        ``shard_map`` with a ``psum`` budget re-deal every ``rebalance``
+        steps.  Returns a :class:`repro.fleet.FleetResult`.
+        """
+        from ..fleet import FleetTier, replay_fleet as _replay_fleet
+        if not isinstance(tier, FleetTier):
+            raise TypeError(
+                f"expected a FleetTier, got {type(tier).__name__}")
+        use_pallas = (self.use_pallas if use_pallas is None
+                      else normalize_pallas_mode(use_pallas))
+        return _replay_fleet(tier, requests, sizes=sizes, costs=costs,
+                             observe=observe, mesh=mesh,
+                             axis=axis or self.axis, rebalance=rebalance,
+                             use_pallas=use_pallas)
+
     def replay_stream(self, policy, requests, K: int, *, sizes=None,
                       costs=None, chunk: int | None = None,
                       observe: bool = False,

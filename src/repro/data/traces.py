@@ -28,9 +28,10 @@ from . import ingest
 
 __all__ = [
     "zipf_trace", "shifting_zipf_trace", "scan_mix_trace", "churn_trace",
-    "tenants_trace", "file_trace", "dataset_family", "DATASET_FAMILIES",
-    "object_sizes", "fetch_costs", "TraceSpec", "make_trace", "TRACES",
-    "TRACE_ALIASES", "TIER_FAMILIES",
+    "tenants_trace", "fleet_trace", "file_trace", "dataset_family",
+    "DATASET_FAMILIES", "object_sizes", "fetch_costs", "TraceSpec",
+    "make_trace", "TRACES", "TRACE_ALIASES", "TIER_FAMILIES",
+    "FLEET_FAMILIES",
 ]
 
 
@@ -224,6 +225,71 @@ def tenants_trace(N: int, T: int, n_tenants: int, alpha: float = 0.9,
     return out
 
 
+def fleet_trace(N: int, T: int, n_lanes: int, rate: float = 0.005,
+                mean_session: int = 2000, alpha: float = 0.9,
+                period: int = 2048, duty: float = 0.25, lo: int = 64,
+                alpha_lo: float = 1.6, seed: int = 0) -> np.ndarray:
+    """``[T, n_lanes]`` dynamic-fleet request streams: tenants *arrive*
+    (Poisson, ``rate`` arrivals per global step), serve one ``tenants``-
+    style session (exponential length, mean ``mean_session`` steps), and
+    *depart* — the entry is ``-1`` wherever a lane has no active tenant.
+
+    This extends :func:`tenants_trace` with the lifecycle the fleet layer
+    (:mod:`repro.fleet`) schedules inside its scanned program: a lane's
+    key turning ``>= 0`` is an admission event (a fresh tenant takes over
+    the lane's cache), turning ``-1`` a departure (the lane's slots fall
+    back to the arbiter's free pool).  Each session gets a private hot-set
+    permutation and a random phase offset into the same wide/narrow
+    working-set fluctuation as ``tenants(...)`` — so concurrent sessions
+    demand capacity at different times, the regime where arbitration
+    matters.  An arrival is dropped (not queued) when every lane is busy;
+    consecutive sessions on one lane are separated by at least one ``-1``
+    step, so alive-mask transitions detect *every* arrival and departure.
+    Deterministic in ``seed``.
+
+    >>> keys = fleet_trace(N=64, T=400, n_lanes=4, rate=0.05,
+    ...                    mean_session=100, seed=0)
+    >>> keys.shape, keys.dtype.name
+    ((400, 4), 'int32')
+    >>> bool((keys == -1).any()), bool(keys.max() < 64)
+    (True, True)
+    >>> same = fleet_trace(N=64, T=400, n_lanes=4, rate=0.05,
+    ...                    mean_session=100, seed=0)
+    >>> bool((keys == same).all())
+    True
+    """
+    if n_lanes < 1:
+        raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
+    if rate <= 0:
+        raise ValueError(f"rate must be > 0, got {rate}")
+    rng = np.random.default_rng(seed)
+    out = np.full((T, n_lanes), -1, np.int32)
+    pmf_wide = _zipf_pmf(N, alpha)
+    pmf_lo = _zipf_pmf(lo, alpha_lo)
+    wide_len = max(1, int(period * duty))
+    free_at = np.zeros(n_lanes, np.int64)      # step at which a lane frees
+    t = float(rng.exponential(1.0 / rate))     # first arrival time
+    while t < T:
+        at = int(t)
+        lanes = np.flatnonzero(free_at <= at)
+        if lanes.size:                         # else: dropped (all busy)
+            lane = int(lanes[0])
+            length = 1 + int(rng.exponential(mean_session))
+            stop = min(at + length, T)
+            n = stop - at
+            perm = rng.permutation(N).astype(np.int32)
+            wide = rng.choice(N, size=n, p=pmf_wide)
+            narrow = rng.choice(lo, size=n, p=pmf_lo)
+            phase = (np.arange(n) + int(rng.integers(0, period))) % period
+            out[at:stop, lane] = perm[np.where(phase < wide_len, wide,
+                                               narrow)]
+            # ">= stop + 1": at least one dead step between sessions so
+            # the alive mask transitions on every arrival/departure
+            free_at[lane] = stop + 1
+        t += float(rng.exponential(1.0 / rate))
+    return out
+
+
 def file_trace(path: str, format: str = "auto", T: int = 0,
                seed: int = 0) -> np.ndarray:
     """Keys of a *real* trace file (``repro.data.ingest`` formats:
@@ -282,12 +348,18 @@ TRACES = {
     "scan_mix": scan_mix_trace,
     "churn": churn_trace,
     "tenants": tenants_trace,
+    "fleet": fleet_trace,
     "file": file_trace,
 }
 
 # families whose generators emit [T, n_tenants] interleaved tier streams
 # (repro.tier.replay_tier input) rather than a single [T] key trace
 TIER_FAMILIES = frozenset({"tenants"})
+
+# families whose [T, n_lanes] streams additionally carry -1 "no active
+# tenant" entries — repro.fleet.replay_fleet input ONLY (a -1 key fed to
+# replay_tier would spuriously hit the EMPTY rank sentinel)
+FLEET_FAMILIES = frozenset({"fleet"})
 
 _RUNTIME_PARAMS = ("T", "seed")
 
@@ -378,12 +450,24 @@ class TraceSpec:
     def is_tier(self) -> bool:
         """True for multi-tenant families: ``generate`` returns a
         ``[T, n_tenants]`` interleaved stream (``repro.tier`` input), not
-        a single ``[T]`` trace."""
+        a single ``[T]`` trace.  Fleet families are *not* tier input —
+        their ``-1`` inactive-lane entries only make sense to
+        ``repro.fleet.replay_fleet`` (see :data:`FLEET_FAMILIES`)."""
         return self.family in TIER_FAMILIES
 
     @property
+    def is_fleet(self) -> bool:
+        """True for dynamic-lifecycle families (``fleet(...)``): a
+        ``[T, n_lanes]`` stream with ``-1`` marking lanes with no active
+        tenant — ``repro.fleet.replay_fleet`` input."""
+        return self.family in FLEET_FAMILIES
+
+    @property
     def n_tenants(self) -> int:
-        """Tenant-axis width for tier families; 1 for single-cache ones."""
+        """Tenant/lane-axis width for tier and fleet families; 1 for
+        single-cache ones."""
+        if self.is_fleet:
+            return self.kwargs["n_lanes"]
         return self.kwargs["n_tenants"] if self.is_tier else 1
 
     def __str__(self) -> str:

@@ -1,0 +1,34 @@
+"""Fleet serving: dynamic multi-tenant DAC with auction arbitration,
+mesh sharding, and per-tenant SLO telemetry.
+
+Where :mod:`repro.tier` holds a fixed tenant set, the fleet layer serves
+a *population*: tenants arrive (Poisson), hold a cache lane for one
+session (exponential), and leave — all inside one scanned, jittable
+program over fixed-shape ``[n_lanes]`` pools with an alive mask.  The
+``auction`` arbiter prices capacity by each tenant's byte-miss-cost EWMA,
+``replay_fleet(..., mesh=...)`` shards the lane axis over a device mesh
+with periodic ``psum`` budget rebalancing, and every replay streams SLO
+telemetry: per-tenant penalty quantiles (p50/p99 from in-carry
+histograms) and Jain's occupancy-fairness index.
+
+>>> from repro.data.traces import fleet_trace
+>>> from repro.fleet import FleetTier, replay_fleet
+>>> keys = fleet_trace(N=64, T=400, n_lanes=4, rate=0.05,
+...                    mean_session=120, seed=1)
+>>> fl = FleetTier("dac(k_min=4)", n_lanes=4, budget=64, arbiter="auction")
+>>> res = replay_fleet(fl, keys)
+>>> 0.0 <= float(res.jain) <= 1.0
+True
+
+See ``docs/ARCHITECTURE.md`` (fleet section) and the ``fleet_sweep``
+benchmark for auction-vs-static-partition comparisons.
+"""
+from .fleet import FleetResult, FleetTier, replay_fleet
+from .telemetry import (BINS, jain_index, penalty_bucket, penalty_quantile,
+                        window_records)
+
+__all__ = [
+    "FleetTier", "FleetResult", "replay_fleet",
+    "BINS", "penalty_bucket", "penalty_quantile", "jain_index",
+    "window_records",
+]

@@ -41,6 +41,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..core.control import hit_update, miss_update, resize_update
 from ..core.policy import EMPTY
 
 
@@ -70,10 +71,7 @@ def _promote(rank2slot, i, t, slot):
 
 def _insert_one(rank2slot, free, length, k, jump, jump2, pos, slot_pos):
     """Alg. 2 miss path for one cache; returns new state + chosen slot."""
-    Bmax = rank2slot.shape[0]
-    jump_m = jnp.minimum(jump + 1, 2 * k)
-    jump2_m = jnp.where(jump2 < 0, jump2 + 1, jump2)
-    actual = jnp.maximum(1, jnp.minimum(k - 1, jump_m))
+    jump_m, jump2_m, actual = miss_update(jump, jump2, k)
 
     full = length >= k
     # victim: bottom-ranked slot (only used when full)
@@ -98,15 +96,7 @@ def _hit_one(rank2slot, length, k, jump, jump2, slot):
     eq = rank2slot == slot
     i = jnp.argmax(eq).astype(jnp.int32)
     found = jnp.any(eq) & valid
-    half = k // 2
-    jump_h = jnp.where(jump > -half, jump - 1, jump)
-    top_half = i < half
-    jump2_h = jnp.where(
-        top_half,
-        jnp.where(jump2 > -half, jump2 - 1, jump2),
-        jnp.where(jump2 < 0, jump2 + 1, jump2),
-    )
-    actual = jnp.maximum(1, jnp.minimum(jump_h, i))
+    jump_h, jump2_h, actual = hit_update(jump, jump2, i, k)
     t = i - actual
     r2s_h = jnp.where(i > 0, _promote(rank2slot, i, t, slot), rank2slot)
     return (jnp.where(found, r2s_h, rank2slot),
@@ -114,15 +104,14 @@ def _hit_one(rank2slot, length, k, jump, jump2, slot):
             jnp.where(found, jump2_h, jump2))
 
 
-def _resize_one(rank2slot, free, length, k, jump, jump2, eps, k_min, Bmax):
-    """Alg. 2 lines 2.30-2.38: grow / shrink the active budget."""
-    half = k // 2
-    jump2 = jnp.where(jump == 0, 0, jump2)
-    shrink_thresh = -jnp.ceil(eps * half.astype(jnp.float32)).astype(jnp.int32)
-    grow = (jump >= 2 * k) & (2 * k <= Bmax)
-    shrink = (~grow) & (jump <= -half) & (jump2 <= shrink_thresh) \
-        & (half >= k_min)
-    k_new = jnp.where(grow, 2 * k, jnp.where(shrink, half, k))
+def _resize_one(rank2slot, free, length, k, jump, jump2, eps, k_min, Bmax,
+                cap=None):
+    """Alg. 2 lines 2.30-2.38: grow / shrink the active budget.  ``cap``
+    (optional, per-sequence) is an external capacity grant — an arbiter
+    sharing one global slot pool across the batch — gating the doubling
+    at ``min(2k, cap)`` exactly like the tier's budgeted law."""
+    k_new, jump, jump2, grow, shrink = resize_update(
+        jump, jump2, k, eps=eps, k_min=k_min, kmax=Bmax, cap=cap)
 
     # shrink: free the physical slots of ranks >= k_new
     r = jnp.arange(rank2slot.shape[0], dtype=jnp.int32)
@@ -132,10 +121,6 @@ def _resize_one(rank2slot, free, length, k, jump, jump2, eps, k_min, Bmax):
     free = free | freed
     rank2slot = jnp.where(evict_mask, EMPTY, rank2slot)
     length = jnp.where(shrink, jnp.minimum(length, k_new), length)
-
-    resized = grow | shrink
-    jump = jnp.where(shrink, 0, jnp.clip(jump, -(k_new // 2), 2 * k_new))
-    jump2 = jnp.where(resized, 0, jump2)
     return rank2slot, free, length, k_new, jump, jump2
 
 
@@ -160,14 +145,24 @@ def hit(ctrl, slot):
     return dict(ctrl, rank2slot=r2s, jump=jump, jump2=jump2)
 
 
-def resize(ctrl, eps: float = 0.5, k_min: int = 16):
-    """Batched DAC resize check (after every request)."""
+def resize(ctrl, eps: float = 0.5, k_min: int = 16, cap=None):
+    """Batched DAC resize check (after every request).  ``cap`` ([B] int32,
+    optional) threads per-sequence capacity grants from an external
+    arbiter — the fleet-serving path where the batch shares one global
+    slot budget smaller than ``B * Bmax`` (see ``examples/fleet_decode``);
+    ``None`` keeps the paper's un-arbitrated law."""
     Bmax = ctrl["rank2slot"].shape[1]
-    r2s, free, length, k, jump, jump2 = jax.vmap(
-        lambda a, b, c, d, e, f: _resize_one(a, b, c, d, e, f, eps, k_min,
-                                             Bmax))(
+    if cap is None:
+        fn = lambda a, b, c, d, e, f: _resize_one(  # noqa: E731
+            a, b, c, d, e, f, eps, k_min, Bmax)
+        args = ()
+    else:
+        fn = lambda a, b, c, d, e, f, g: _resize_one(  # noqa: E731
+            a, b, c, d, e, f, eps, k_min, Bmax, cap=g)
+        args = (jnp.asarray(cap, jnp.int32),)
+    r2s, free, length, k, jump, jump2 = jax.vmap(fn)(
         ctrl["rank2slot"], ctrl["free"], ctrl["length"], ctrl["k_active"],
-        ctrl["jump"], ctrl["jump2"])
+        ctrl["jump"], ctrl["jump2"], *args)
     return dict(ctrl, rank2slot=r2s, free=free, length=length, k_active=k,
                 jump=jump, jump2=jump2)
 

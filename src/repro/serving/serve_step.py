@@ -35,7 +35,7 @@ from . import kv_cache as kvc
 # ---------------------------------------------------------------------------
 
 def _layer_state(cfg: ArchConfig, spec: LayerSpec, B, max_len, budget,
-                 dtype):
+                 dtype, k0=None):
     hd = cfg.head_dim
     Hkv = cfg.n_kv_heads
     L = budget if budget else max_len
@@ -45,14 +45,17 @@ def _layer_state(cfg: ArchConfig, spec: LayerSpec, B, max_len, budget,
         if budget:
             # serving starts at the full pool: DAC *shrinks* when hits
             # concentrate (returning HBM) rather than evicting from a
-            # quarter-size start
-            st["ctrl"] = kvc.control_init(B, budget, k0=budget)
+            # quarter-size start — unless a fleet admission share k0 says
+            # this sequence only owns part of a global budget
+            st["ctrl"] = kvc.control_init(B, budget,
+                                          k0=budget if k0 is None else k0)
         return st
     if spec.kind == "mla":
         st = {"latent": jnp.zeros((B, L, cfg.kv_lora_rank), dtype),
               "krope": jnp.zeros((B, L, cfg.qk_rope_head_dim), dtype)}
         if budget:
-            st["ctrl"] = kvc.control_init(B, budget, k0=budget)
+            st["ctrl"] = kvc.control_init(B, budget,
+                                          k0=budget if k0 is None else k0)
         return st
     if spec.kind == "mamba":
         return ssm.mamba_state_init(cfg, B, dtype)
@@ -63,11 +66,14 @@ def _layer_state(cfg: ArchConfig, spec: LayerSpec, B, max_len, budget,
     raise ValueError(spec.kind)
 
 
-def init_serve_state(cfg: ArchConfig, B: int, max_len: int, budget: int = 0):
-    """Fresh serve state (period-stacked).  budget>0 => bounded DAC pool."""
+def init_serve_state(cfg: ArchConfig, B: int, max_len: int, budget: int = 0,
+                     k0: int | None = None):
+    """Fresh serve state (period-stacked).  budget>0 => bounded DAC pool;
+    ``k0`` starts each sequence's active budget below the full pool (a
+    fleet admission share — see ``examples/fleet_decode.py``)."""
     dtype = cfg.dtype
     period_state = {
-        f"l{i}": _layer_state(cfg, spec, B, max_len, budget, dtype)
+        f"l{i}": _layer_state(cfg, spec, B, max_len, budget, dtype, k0)
         for i, spec in enumerate(cfg.period)}
     P = cfg.n_periods
     layers = jax.tree.map(
@@ -154,7 +160,7 @@ def _sharded_cache(st, sctx):
     return out
 
 
-def _decode_attn(x, p, st, cfg, spec, pos, sctx, eps, k_min):
+def _decode_attn(x, p, st, cfg, spec, pos, sctx, eps, k_min, kv_caps):
     """Attention layer decode (bounded or unbounded).  x: [B, 1, d]."""
     B = x.shape[0]
     h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
@@ -174,7 +180,7 @@ def _decode_attn(x, p, st, cfg, spec, pos, sctx, eps, k_min):
         top = jnp.argmax(masked, axis=-1).astype(jnp.int32)
         top = jnp.where(jnp.any(valid, axis=-1), top, -1)
         ctrl = kvc.hit(ctrl, top)                          # hit event
-        ctrl = kvc.resize(ctrl, eps=eps, k_min=k_min)
+        ctrl = kvc.resize(ctrl, eps=eps, k_min=k_min, cap=kv_caps)
         new_st.update(k=k_cache, v=v_cache, ctrl=ctrl)
     else:                                                  # unbounded
         k_cache = st["k"].at[bidx, pos].set(k[:, 0])
@@ -190,7 +196,7 @@ def _decode_attn(x, p, st, cfg, spec, pos, sctx, eps, k_min):
     return x + att[:, None], _sharded_cache(new_st, sctx)
 
 
-def _decode_mla(x, p, st, cfg, spec, pos, sctx, eps, k_min):
+def _decode_mla(x, p, st, cfg, spec, pos, sctx, eps, k_min, kv_caps):
     B = x.shape[0]
     h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
     latent, krope = mla_mod.mla_latent(h, p["attn"], cfg, pos[:, None])
@@ -207,7 +213,7 @@ def _decode_mla(x, p, st, cfg, spec, pos, sctx, eps, k_min):
         top = jnp.argmax(masked, axis=-1).astype(jnp.int32)
         top = jnp.where(jnp.any(valid, axis=-1), top, -1)
         ctrl = kvc.hit(ctrl, top)
-        ctrl = kvc.resize(ctrl, eps=eps, k_min=k_min)
+        ctrl = kvc.resize(ctrl, eps=eps, k_min=k_min, cap=kv_caps)
         new_st.update(latent=lat_cache, krope=kr_cache, ctrl=ctrl)
     else:
         lat_cache = st["latent"].at[bidx, pos].set(latent[:, 0])
@@ -219,11 +225,13 @@ def _decode_mla(x, p, st, cfg, spec, pos, sctx, eps, k_min):
     return x + o[:, None], _sharded_cache(new_st, sctx)
 
 
-def _decode_layer(x, p, st, cfg, spec, pos, sctx, eps, k_min):
+def _decode_layer(x, p, st, cfg, spec, pos, sctx, eps, k_min, kv_caps):
     if spec.kind == "attn":
-        x, new_st = _decode_attn(x, p, st, cfg, spec, pos, sctx, eps, k_min)
+        x, new_st = _decode_attn(x, p, st, cfg, spec, pos, sctx, eps,
+                                 k_min, kv_caps)
     elif spec.kind == "mla":
-        x, new_st = _decode_mla(x, p, st, cfg, spec, pos, sctx, eps, k_min)
+        x, new_st = _decode_mla(x, p, st, cfg, spec, pos, sctx, eps,
+                                k_min, kv_caps)
     else:
         h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)[:, 0]
         if spec.kind == "mamba":
@@ -245,9 +253,17 @@ def _decode_layer(x, p, st, cfg, spec, pos, sctx, eps, k_min):
 
 
 def decode_step(params, cfg: ArchConfig, state, token=None, embed=None,
-                sctx=None, eps: float = 0.5, k_min: int = 16):
+                sctx=None, eps: float = 0.5, k_min: int = 16,
+                kv_caps=None):
     """One decode step.  token: [B] int32 (or embed: [B, d] for stub-frontend
-    archs).  Returns (new_state, logits [B, V] f32)."""
+    archs).  Returns (new_state, logits [B, V] f32).
+
+    ``kv_caps`` ([B] int32, optional) caps each sequence's bounded-pool
+    *growth* for this step — a doubling only lands if the grown size stays
+    within the cap (see ``kv_cache.resize``).  This is the hook a fleet
+    arbiter uses to price one shared HBM budget across the batch
+    (``examples/fleet_decode.py``); every attention/MLA layer sees the
+    same caps.  ``None`` = uncapped (each layer's own Bmax)."""
     pos = state["pos"]
     if cfg.embeds_input:
         x = embed.astype(cfg.dtype)[:, None]
@@ -259,7 +275,7 @@ def decode_step(params, cfg: ArchConfig, state, token=None, embed=None,
         new_ss = {}
         for i, spec in enumerate(cfg.period):
             x, ns = _decode_layer(x, pp[f"l{i}"], ss[f"l{i}"], cfg, spec,
-                                  pos, sctx, eps, k_min)
+                                  pos, sctx, eps, k_min, kv_caps)
             new_ss[f"l{i}"] = ns
         return x, new_ss
 
@@ -298,17 +314,18 @@ def _bounded_fill(ctrl, kbuf, vbuf, ks, vs):
 
 def prefill(params, cfg: ArchConfig, tokens=None, embeds=None,
             max_len: int = 0, budget: int = 0, sctx=None, impl="jnp",
-            remat="full"):
+            remat="full", k0: int | None = None):
     """Run the prompt through the stack and build the serve state.
 
-    Returns (serve_state, last_logits [B, V]).
+    Returns (serve_state, last_logits [B, V]).  ``k0`` (bounded regime
+    only) admits each sequence at an active budget below the full pool.
     """
     B, S = (tokens.shape if tokens is not None else embeds.shape[:2])
     max_len = max_len or 2 * S
     logits, caches = forward(params, cfg, tokens=tokens, embeds=embeds,
                              sctx=sctx, impl=impl, remat=remat,
                              want_cache=True, last_only=True)
-    state = init_serve_state(cfg, B, max_len, budget)
+    state = init_serve_state(cfg, B, max_len, budget, k0)
     layers = dict(state["layers"])
     for i, spec in enumerate(cfg.period):
         li = f"l{i}"

@@ -5,7 +5,9 @@ it doesn't need and claims capacity when it thrashes — only matters when
 the capacity has somewhere to go.  This package gives it a marketplace:
 N tenant caches share one global slot budget, shrinks feed a free pool,
 and saturated ``jump`` controllers draw their doublings from it through a
-pluggable arbiter (``static`` / ``greedy`` / ``proportional``).
+pluggable arbiter (``static`` / ``greedy`` / ``proportional`` /
+``auction`` — the last prices grants by byte-miss cost and pairs with
+the dynamic-lifecycle fleet layer, :mod:`repro.fleet`).
 
 >>> import numpy as np
 >>> from repro.data.traces import tenants_trace
@@ -20,12 +22,12 @@ True
 See ``docs/ARCHITECTURE.md`` (tier section) and the ``tenant_sweep``
 benchmark for the DAC-arbitrated vs statically-partitioned comparison.
 """
-from .arbiter import (ARBITERS, Arbiter, GreedyArbiter, ProportionalArbiter,
-                      StaticArbiter, make_arbiter)
+from .arbiter import (ARBITERS, Arbiter, AuctionArbiter, GreedyArbiter,
+                      ProportionalArbiter, StaticArbiter, make_arbiter)
 from .tier import CacheTier, TierResult, replay_tier
 
 __all__ = [
     "CacheTier", "TierResult", "replay_tier",
     "Arbiter", "StaticArbiter", "GreedyArbiter", "ProportionalArbiter",
-    "ARBITERS", "make_arbiter",
+    "AuctionArbiter", "ARBITERS", "make_arbiter",
 ]

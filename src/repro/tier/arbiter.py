@@ -32,16 +32,30 @@ import jax.numpy as jnp
 from ..specs import build_kwargs, parse_spec
 
 __all__ = ["Arbiter", "StaticArbiter", "GreedyArbiter",
-           "ProportionalArbiter", "ARBITERS", "make_arbiter"]
+           "ProportionalArbiter", "AuctionArbiter", "ARBITERS",
+           "make_arbiter"]
 
 
 class Arbiter:
     """Base class: hashable/static (jit-safe as a static argument), one
-    ``__call__(k, demanding, budget, n_tenants) -> caps`` method."""
+    ``__call__(k, demanding, budget, n_tenants, utility=None) -> caps``
+    method.  ``utility`` (float32[N], optional) is a per-tenant value
+    signal — the fleet layer's byte-miss-cost EWMA — that utility-aware
+    arbiters price grants by; slot-counting arbiters ignore it.
+
+    ``pooled`` marks arbiters that allocate out of the *shared* free pool
+    (grants depend on every tenant's ``k``); the static partitioner is
+    the one non-pooled arbiter — each tenant's cap is a pure function of
+    its own state.  ``needs_utility`` marks arbiters meaningless without
+    the utility signal (the fleet replay carries it; the plain tier does
+    not)."""
 
     name: str = "base"
+    pooled: bool = True
+    needs_utility: bool = False
 
-    def __call__(self, k, demanding, budget: int, n_tenants: int):
+    def __call__(self, k, demanding, budget: int, n_tenants: int,
+                 utility=None):
         raise NotImplementedError
 
     # hashability for jit static args (same scheme as core.policy.Policy)
@@ -87,11 +101,13 @@ class StaticArbiter(Arbiter):
     """
 
     name = "static"
+    pooled = False
 
     def __init__(self, share: int = 0):
         self.share = int(share)   # 0 -> budget // n_tenants
 
-    def __call__(self, k, demanding, budget: int, n_tenants: int):
+    def __call__(self, k, demanding, budget: int, n_tenants: int,
+                 utility=None):
         share = self.share or budget // n_tenants
         return jnp.where(2 * k <= share, 2 * k, k).astype(jnp.int32)
 
@@ -113,7 +129,8 @@ class GreedyArbiter(Arbiter):
 
     name = "greedy"
 
-    def __call__(self, k, demanding, budget: int, n_tenants: int):
+    def __call__(self, k, demanding, budget: int, n_tenants: int,
+                 utility=None):
         free = _free_pool(k, budget)
         demand = _demand(k, demanding, budget)
         before = jnp.cumsum(demand) - demand   # pool already spoken for
@@ -138,7 +155,8 @@ class ProportionalArbiter(Arbiter):
 
     name = "proportional"
 
-    def __call__(self, k, demanding, budget: int, n_tenants: int):
+    def __call__(self, k, demanding, budget: int, n_tenants: int,
+                 utility=None):
         free = _free_pool(k, budget)
         demand = _demand(k, demanding, budget)
         total = jnp.sum(demand)
@@ -147,10 +165,74 @@ class ProportionalArbiter(Arbiter):
         return (k + grant).astype(jnp.int32)
 
 
+class AuctionArbiter(Arbiter):
+    """Price capacity by *value*, not slot counts: each demander bids its
+    recent marginal byte-miss cost (``utility`` — the fleet replay's EWMA
+    of per-request miss penalty, i.e. byte-miss x fetch cost; see
+    :class:`repro.fleet.FleetTier`), and the free pool is split in
+    proportion to **utility-weighted demand** — a first-price share
+    auction, the cost-aware framing of Einziger et al.'s size-aware
+    cache management.  A tenant thrashing on cheap, tiny objects is
+    outbid by one missing on expensive fetches even when both demand the
+    same slot count.
+
+    Weights are normalized by the max utility among demanders and the
+    grant is floored, so the conservation law (granted headroom <= free
+    pool) holds exactly.  Two exact degeneracies, locked by tests:
+
+    * **uniform utilities** (all demanders equal, including the all-zero
+      cold start and ``utility=None``): weights collapse to raw demand
+      and the grants equal :class:`ProportionalArbiter`'s bit-for-bit
+      (the float32 floor-division is exact while ``free * demand``
+      stays under 2^24 — pools orders of magnitude beyond any budget
+      this repo replays);
+    * **single demander**: gets ``min(demand, free)`` like every other
+      pooled arbiter.
+
+    >>> import jax.numpy as jnp
+    >>> arb = AuctionArbiter()
+    >>> k = jnp.array([4, 4, 4], jnp.int32)
+    >>> demanding = jnp.array([True, True, False])
+    >>> u = jnp.array([3.0, 1.0, 0.0])
+    >>> # free pool = 16 - 12 = 4; bids 3:1 -> +3 / +1
+    >>> [int(c) for c in arb(k, demanding, 16, 3, utility=u)]
+    [7, 5, 4]
+    >>> [int(c) for c in arb(k, demanding, 16, 3)]    # no signal: prop.
+    [6, 6, 4]
+    """
+
+    name = "auction"
+    needs_utility = True
+
+    def __call__(self, k, demanding, budget: int, n_tenants: int,
+                 utility=None):
+        free = _free_pool(k, budget)
+        demand = _demand(k, demanding, budget)
+        if utility is None:
+            u = jnp.ones(jnp.shape(demand), jnp.float32)
+        else:
+            u = jnp.asarray(utility, jnp.float32)
+        # normalize by the max bid among demanders; an all-zero market
+        # (cold start) degrades to uniform weights == proportional
+        umax = jnp.max(jnp.where(demand > 0, u, 0.0))
+        u = jnp.where(umax > 0, u / jnp.maximum(umax, 1e-30),
+                      jnp.ones_like(u))
+        w = demand.astype(jnp.float32) * u
+        total = jnp.sum(w)
+        share = jnp.where(
+            total > 0,
+            jnp.floor(free.astype(jnp.float32) * w
+                      / jnp.maximum(total, 1e-30)),
+            0.0)
+        grant = jnp.minimum(demand, share.astype(jnp.int32))
+        return (k + grant).astype(jnp.int32)
+
+
 ARBITERS = {
     "static": StaticArbiter,
     "greedy": GreedyArbiter,
     "proportional": ProportionalArbiter,
+    "auction": AuctionArbiter,
 }
 
 
@@ -165,7 +247,7 @@ def make_arbiter(spec) -> Arbiter:
     >>> make_arbiter("nope")
     Traceback (most recent call last):
         ...
-    ValueError: unknown arbiter 'nope'; known: ['greedy', 'proportional', 'static']
+    ValueError: unknown arbiter 'nope'; known: ['auction', 'greedy', 'proportional', 'static']
     """
     if isinstance(spec, Arbiter):
         return spec

@@ -141,6 +141,11 @@ class CacheTier:
             raise ValueError(
                 f"policy {self.policy.name!r} emits no resize signals; only "
                 "arbiter('static') is meaningful for it")
+        if self.arbiter.needs_utility:
+            raise ValueError(
+                f"arbiter {self.arbiter.name!r} prices capacity by the "
+                "byte-miss-cost utility signal, which only the fleet "
+                "replay carries — use repro.fleet.FleetTier")
         # an explicit static share above the fair partition would let the
         # tenants jointly exceed the budget — the conservation law every
         # arbiter must respect (sum(k) <= budget at every step)

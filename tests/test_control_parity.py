@@ -1,0 +1,99 @@
+"""Bit-parity lock for the deduplicated Alg. 2 control law.
+
+``repro.core.control`` is the single source of truth for the jump/jump'
+/resize scalar arithmetic; both ``repro.core.dynamicadaptiveclimb`` (rank
+rows) and ``repro.serving.kv_cache`` (KV slot pools) are thin data-plane
+wrappers around it.  These tests drive each wrapper and a straight
+control-function mirror through *matched event streams* and require the
+scalar trajectories to be bit-identical — any future fork of the
+constants (thresholds, saturation bounds, post-resize resets) between
+the replay path and the serving path fails here, not in a benchmark.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Engine
+from repro.core.control import hit_update, miss_update, resize_update
+from repro.serving import kv_cache as kvc
+
+
+def _kv_scalars(ctrl):
+    return (int(ctrl["jump"][0]), int(ctrl["jump2"][0]),
+            int(ctrl["k_active"][0]))
+
+
+@pytest.mark.parametrize("use_caps", [False, True])
+def test_kv_pool_matches_control_mirror(use_caps):
+    """Drive a 1-sequence KV slot pool through a randomized
+    insert/hit/resize event stream; mirror the scalars through the shared
+    control functions; require bit-identical (jump, jump', k) at every
+    event boundary."""
+    rng = np.random.default_rng(0)
+    Bmax, k0, eps, k_min = 64, 8, 0.5, 2
+    ctrl = kvc.control_init(1, Bmax, k0=k0)
+    jump = jnp.int32(k0)
+    jump2 = jnp.int32(0)
+    k = jnp.int32(k0)
+
+    for t in range(400):
+        # --- miss event (every decoded token inserts) ------------------
+        ctrl, _ = kvc.insert(ctrl, jnp.full((1,), t, jnp.int32))
+        jump, jump2, _ = miss_update(jump, jump2, k)
+        assert _kv_scalars(ctrl) == (int(jump), int(jump2), int(k)), t
+
+        # --- optional hit event at a known rank ------------------------
+        length = int(ctrl["length"][0])
+        if rng.random() < 0.7 and length > 0:
+            r = int(rng.integers(0, length))
+            slot = ctrl["rank2slot"][0, r]
+            ctrl = kvc.hit(ctrl, slot[None])
+            jump, jump2, _ = hit_update(jump, jump2, jnp.int32(r), k)
+            assert _kv_scalars(ctrl) == (int(jump), int(jump2), int(k)), t
+
+        # --- resize check (after every request) ------------------------
+        if use_caps:
+            cap = jnp.int32(int(rng.integers(k_min, Bmax + 1)))
+            ctrl = kvc.resize(ctrl, eps=eps, k_min=k_min, cap=cap[None])
+            k, jump, jump2, _, _ = resize_update(
+                jump, jump2, k, eps=eps, k_min=k_min, kmax=Bmax, cap=cap)
+        else:
+            ctrl = kvc.resize(ctrl, eps=eps, k_min=k_min)
+            k, jump, jump2, _, _ = resize_update(
+                jump, jump2, k, eps=eps, k_min=k_min, kmax=Bmax)
+        assert _kv_scalars(ctrl) == (int(jump), int(jump2), int(k)), t
+
+
+def test_dac_replay_matches_control_mirror_on_misses():
+    """An all-distinct-keys trace never hits, so the core DAC replay's
+    (jump, k) trajectory is fully determined by miss_update +
+    resize_update — mirror it step by step."""
+    T, K, growth = 200, 4, 4
+    keys = np.arange(T, dtype=np.int32)        # all cold: pure miss path
+    res = Engine().replay("dac(eps=0.5,growth=4)", keys, K=K, observe=True)
+    jump = jnp.int32(K)
+    jump2 = jnp.int32(0)
+    k = jnp.int32(K)
+    kmax = K * growth
+    for t in range(T):
+        jump, jump2, _ = miss_update(jump, jump2, k)
+        k, jump, jump2, _, _ = resize_update(
+            jump, jump2, k, eps=0.5, k_min=2, kmax=kmax)
+        assert int(res.obs["k"][t]) == int(k), t
+        assert int(res.obs["jump"][t]) == int(jump), t
+
+
+def test_resize_update_cap_semantics():
+    """cap <= k denies, k < cap < 2k partially grants, cap >= 2k matches
+    the un-arbitrated law bit-for-bit."""
+    j, j2, k = jnp.int32(16), jnp.int32(0), jnp.int32(8)   # jump == 2k
+    deny = resize_update(j, j2, k, eps=0.5, k_min=2, kmax=64,
+                         cap=jnp.int32(8))
+    assert int(deny[0]) == 8 and not bool(deny[3])
+    part = resize_update(j, j2, k, eps=0.5, k_min=2, kmax=64,
+                         cap=jnp.int32(11))
+    assert int(part[0]) == 11 and bool(part[3])
+    full = resize_update(j, j2, k, eps=0.5, k_min=2, kmax=64,
+                         cap=jnp.int32(16))
+    vanilla = resize_update(j, j2, k, eps=0.5, k_min=2, kmax=64)
+    assert [int(x) for x in full[:3]] == [int(x) for x in vanilla[:3]]

@@ -1,8 +1,8 @@
 """Doctest runner for the public API surface.
 
 Every symbol exported from ``repro.core``, ``repro.bench``, ``repro.data``,
-``repro.tier`` and ``repro.campaign`` carries a docstring with an
-executable example; this
+``repro.tier``, ``repro.fleet`` and ``repro.campaign`` carries a docstring
+with an executable example; this
 suite runs them all (the scoped equivalent of ``pytest --doctest-modules``)
 so the examples in the docs can't rot.  ``tools/check_docs.py`` relies on
 the same modules importing cleanly for its anchor checks.
@@ -38,6 +38,10 @@ MODULES = [
     "repro.tier",
     "repro.tier.arbiter",
     "repro.tier.tier",
+    "repro.core.control",
+    "repro.fleet",
+    "repro.fleet.fleet",
+    "repro.fleet.telemetry",
 ]
 
 
@@ -57,7 +61,7 @@ def test_doctests(module):
 def test_public_exports_have_docstrings():
     """Every public export of the public packages is documented."""
     for pkg_name in ("repro.core", "repro.bench", "repro.data", "repro.tier",
-                     "repro.campaign"):
+                     "repro.fleet", "repro.campaign"):
         pkg = importlib.import_module(pkg_name)
         exports = getattr(pkg, "__all__", None) or [
             n for n in vars(pkg) if not n.startswith("_")]

@@ -1,0 +1,289 @@
+"""Fleet subsystem invariants: conservation under churn, lifecycle slot
+return, auction determinism and its proportional degeneration, sharded
+replay, and the serve-path cap wiring."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench import FleetScenario, FleetSweep, Scenario, TierScenario
+from repro.core import Engine
+from repro.data.traces import fleet_trace, make_trace
+from repro.fleet import (FleetTier, jain_index, penalty_quantile,
+                         replay_fleet)
+from repro.tier import AuctionArbiter, ProportionalArbiter
+
+from test_distributed import run_py
+
+
+def _trace(T=3000, n_lanes=8, seed=0, **kw):
+    kw.setdefault("rate", 0.02)
+    kw.setdefault("mean_session", 500)
+    kw.setdefault("lo", 8)
+    return fleet_trace(N=128, T=T, n_lanes=n_lanes, seed=seed, **kw)
+
+
+# ---------------------------------------------------------------------------
+# conservation + lifecycle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arbiter", ["auction", "greedy", "proportional"])
+def test_conservation_under_churn(arbiter):
+    """sum(k) never exceeds the budget at any step, through arrivals,
+    departures, growth and shrink."""
+    keys = _trace()
+    fl = FleetTier("dac(k_min=4)", n_lanes=8, budget=96, arbiter=arbiter)
+    res = replay_fleet(fl, keys, observe=True)
+    ks = np.asarray(res.obs["k"])
+    assert ks.sum(axis=1).max() <= 96
+    # every alive lane floors at k_min
+    alive = np.asarray(res.obs["alive"])
+    assert ks[alive].min() >= 4
+
+
+def test_departed_lane_returns_slots():
+    """A departed tenant's lane drops to k = 0 (its capacity is back in
+    the pool), and the lane serves nothing while idle."""
+    keys = _trace()
+    fl = FleetTier("dac(k_min=4)", n_lanes=8, budget=96)
+    res = replay_fleet(fl, keys, observe=True)
+    ks = np.asarray(res.obs["k"])
+    alive = np.asarray(res.obs["alive"])
+    assert (ks[~alive] == 0).all()
+    # the trace actually exercises churn (sessions ended mid-stream)
+    departs = (~alive[1:] & alive[:-1]).sum()
+    assert departs > 0
+    # requests count only served steps
+    assert np.asarray(res.metrics.requests).sum() == alive.sum()
+
+
+def test_freed_capacity_is_regranted():
+    """After a mass departure the survivors can grow into the freed
+    capacity: one lane alone with the whole pool exceeds its even
+    share."""
+    n, budget, T = 4, 64, 4000
+    keys = np.full((T, n), -1, np.int32)
+    rng = np.random.default_rng(0)
+    wide = rng.integers(0, 128, size=T).astype(np.int32)
+    # all four lanes busy for the first quarter, then only lane 0
+    keys[: T // 4] = wide[: T // 4, None]
+    keys[T // 4:, 0] = wide[T // 4:]
+    fl = FleetTier("dac(k_min=4)", n_lanes=n, budget=budget,
+                   arbiter="auction")
+    res = replay_fleet(fl, keys, observe=True)
+    ks = np.asarray(res.obs["k"])
+    assert ks.sum(axis=1).max() <= budget
+    assert ks[-1, 0] > budget // n          # grew past the even split
+    assert (ks[-1, 1:] == 0).all()
+
+
+def test_fleet_deterministic():
+    """Two replays of the same stream are bit-identical (auction included:
+    pricing is pure arithmetic on the carry)."""
+    keys = _trace(T=2000)
+    fl = FleetTier("dac(k_min=4)", n_lanes=8, budget=96, arbiter="auction")
+    a = replay_fleet(fl, keys, observe=True)
+    b = replay_fleet(fl, keys, observe=True)
+    assert np.array_equal(np.asarray(a.obs["k"]), np.asarray(b.obs["k"]))
+    for x, y in zip(a.metrics, b.metrics):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    assert np.array_equal(np.asarray(a.hist), np.asarray(b.hist))
+
+
+def test_auction_uniform_utility_matches_proportional():
+    """With no utility signal the auction degenerates to the proportional
+    split, bit-exactly (uniform weights, same floor arithmetic)."""
+    auction, prop = AuctionArbiter(), ProportionalArbiter()
+    rng = np.random.default_rng(1)
+    for _ in range(50):
+        n = int(rng.integers(2, 9))
+        k = jnp.asarray(rng.integers(0, 32, n), jnp.int32)
+        demanding = jnp.asarray(rng.integers(0, 2, n).astype(bool))
+        budget = int(rng.integers(int(k.sum()), int(k.sum()) + 64))
+        got = auction(k, demanding, budget, n)
+        want = prop(k, demanding, budget, n)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_auction_prices_by_utility():
+    """Higher-utility demanders get the larger grant; total grants stay
+    within the free pool."""
+    k = jnp.asarray([4, 4, 4, 4], jnp.int32)
+    demanding = jnp.asarray([True, True, True, False])
+    caps = np.asarray(AuctionArbiter()(
+        k, demanding, 28, 4, utility=jnp.asarray([9.0, 3.0, 0.0, 5.0])))
+    assert caps[0] - 4 >= caps[1] - 4 >= caps[2] - 4
+    assert caps[3] == 4                     # not demanding: no grant
+    assert (caps - 4).sum() <= 28 - 12      # grants <= free pool
+
+
+# ---------------------------------------------------------------------------
+# replay surfaces
+# ---------------------------------------------------------------------------
+
+def test_batched_seed_axis_matches_single():
+    keys = np.stack([_trace(T=1000, seed=s) for s in (0, 1)])
+    fl = FleetTier("dac(k_min=4)", n_lanes=8, budget=96)
+    batched = replay_fleet(fl, keys)
+    for s in range(2):
+        single = replay_fleet(fl, keys[s])
+        for bx, sx in zip(batched.metrics, single.metrics):
+            assert np.array_equal(np.asarray(bx)[s], np.asarray(sx))
+        assert np.array_equal(np.asarray(batched.hist)[s],
+                              np.asarray(single.hist))
+
+
+def test_non_resizable_requires_static_and_holds_share():
+    with pytest.raises(ValueError, match="static"):
+        FleetTier("lru", n_lanes=4, budget=64, arbiter="greedy")
+    keys = _trace(n_lanes=4)
+    fl = FleetTier("lru", n_lanes=4, budget=64, arbiter="static")
+    res = replay_fleet(fl, keys, observe=True)
+    ks = np.asarray(res.obs["k"])
+    alive = np.asarray(res.obs["alive"])
+    assert (ks[alive] == 16).all() and (ks[~alive] == 0).all()
+
+
+def test_fleet_tier_validation():
+    with pytest.raises(ValueError, match="k_min"):
+        FleetTier("dac(k_min=16)", n_lanes=8, budget=64)   # share < k_min
+    with pytest.raises(ValueError, match="n_lanes"):
+        FleetTier("dac", n_lanes=0, budget=64)
+    with pytest.raises(TypeError, match="FleetTier"):
+        Engine().replay_fleet("dac", _trace())
+    with pytest.raises(ValueError, match="n_lanes"):
+        replay_fleet(FleetTier("dac(k_min=4)", n_lanes=4, budget=64),
+                     _trace(n_lanes=8))
+
+
+def test_scenario_family_routing():
+    """Fleet traces are rejected by the single-cache and tier scenario
+    types and accepted by FleetScenario; and vice versa."""
+    with pytest.raises(ValueError, match="FleetScenario"):
+        Scenario("x", trace="fleet(N=64,n_lanes=2)", T=100)
+    with pytest.raises(ValueError, match="multi-tenant"):
+        TierScenario("x", trace="fleet(N=64,n_lanes=2)", T=100)
+    with pytest.raises(ValueError, match="dynamic-fleet"):
+        FleetScenario("x", trace="zipf(N=64,alpha=1.0)", T=100)
+    sc = FleetScenario("x", trace="fleet(N=64,n_lanes=2)", T=100)
+    assert sc.n_lanes == 2
+    assert FleetScenario.from_config(sc.to_config()) == sc
+    sw = FleetSweep("w", entries=(("dac", "auction"),), scenarios=(sc,))
+    assert FleetSweep.from_config(sw.to_config()) == sw
+
+
+def test_fleet_trace_has_dead_gap_between_sessions():
+    """The generator guarantees >= 1 idle step between a lane's sessions,
+    so alive-mask edges always mark real arrivals/departures."""
+    keys = _trace(T=5000, rate=0.05, mean_session=200)
+    for lane in range(keys.shape[1]):
+        col = keys[:, lane]
+        # a departure step is idle; the next session starts strictly later
+        starts = np.flatnonzero((col[1:] >= 0) & (col[:-1] < 0)) + 1
+        ends = np.flatnonzero((col[1:] < 0) & (col[:-1] >= 0)) + 1
+        for e in ends:
+            nxt = starts[starts >= e]
+            if nxt.size:
+                assert nxt[0] > e
+
+
+def test_telemetry_quantiles_and_jain():
+    hist = np.zeros((32,))
+    hist[0] = 98
+    hist[10] = 2
+    assert penalty_quantile(hist, 0.5) == 0.0
+    assert penalty_quantile(hist, 0.99) == pytest.approx(2.0 ** 6)
+    assert jain_index(np.array([3.0, 3.0, 3.0])) == pytest.approx(1.0)
+    assert jain_index(np.array([6.0, 0.0, 0.0])) == pytest.approx(1 / 3)
+    # mask: lanes that never hosted a tenant don't dilute the index
+    assert jain_index(np.array([5.0, 5.0, 0.0]),
+                      mask=np.array([True, True, False])) == pytest.approx(1.0)
+
+
+def test_fleet_histogram_counts_served_steps():
+    keys = _trace(T=1500)
+    fl = FleetTier("dac(k_min=4)", n_lanes=8, budget=96)
+    res = replay_fleet(fl, keys, observe=True)
+    alive = np.asarray(res.obs["alive"])
+    assert np.asarray(res.hist).sum() == alive.sum()
+
+
+# ---------------------------------------------------------------------------
+# serve-path cap wiring
+# ---------------------------------------------------------------------------
+
+def test_kv_cache_resize_respects_caps():
+    """serve-side: a [B] cap vector gates each sequence's doubling."""
+    from repro.serving import kv_cache as kvc
+    B, Bmax = 3, 64
+    ctrl = kvc.control_init(B, Bmax, k0=8)
+    # drive pure misses until every lane's jump saturates at 2k
+    for pos in range(16):
+        ctrl, _ = kvc.insert(ctrl, jnp.full((B,), pos, jnp.int32))
+        ctrl = kvc.resize(ctrl, k_min=4,
+                          cap=jnp.asarray([8, 12, 64], jnp.int32))
+    k = np.asarray(ctrl["k_active"])
+    assert k[0] == 8                  # cap == k: the doubling is denied
+    assert k[1] == 12                 # partial grant: grows to the cap
+    assert k[2] == 16                 # full headroom: the doubling lands
+
+
+# ---------------------------------------------------------------------------
+# sharded replay (subprocess: forced multi-device CPU)
+# ---------------------------------------------------------------------------
+
+def test_sharded_fleet_conserves_and_rebalances():
+    """4-shard mesh over 8 lanes: conservation holds under the psum
+    budget re-deal, outputs gather to full-fleet shapes, and the sharded
+    aggregate tracks the unsharded replay."""
+    out = run_py("""
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.data.traces import fleet_trace
+        from repro.fleet import FleetTier, replay_fleet
+
+        keys = fleet_trace(N=128, T=2500, n_lanes=8, rate=0.02,
+                           mean_session=500, lo=8, seed=0)
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+        fl = FleetTier("dac(k_min=4)", n_lanes=8, budget=96,
+                       arbiter="auction")
+        res = replay_fleet(fl, keys, observe=True, mesh=mesh,
+                           rebalance=200)
+        ks = np.asarray(res.obs["k"])
+        assert ks.shape == (2500, 8) and np.asarray(res.hist).shape == (8, 32)
+        assert ks.sum(axis=1).max() <= 96, ks.sum(axis=1).max()
+        ref = replay_fleet(fl, keys)
+        agg = lambda r: (np.asarray(r.metrics.bytes_missed).sum()
+                         / np.asarray(r.metrics.bytes_total).sum())
+        d = abs(agg(res) - agg(ref))
+        assert d < 0.05, (agg(res), agg(ref))
+        # per-shard budget guard
+        try:
+            replay_fleet(FleetTier("dac(k_min=16)", n_lanes=8, budget=128),
+                         keys, mesh=mesh)
+        except ValueError as e:
+            assert "per-shard" in str(e)
+        print("SHARDED_OK", ks.sum(axis=1).max())
+    """, n_devices=4)
+    assert "SHARDED_OK" in out
+
+
+def test_fleet_matches_tier_on_always_alive_stream():
+    """A fleet stream with every lane alive at every step is exactly the
+    tier's regime: both replays see the same per-lane miss counts when
+    arbitration never binds (budget ample, static arbiter)."""
+    from repro.data.traces import tenants_trace
+    from repro.tier import CacheTier, replay_tier
+    keys = tenants_trace(N=64, T=1500, n_tenants=4, lo=8, seed=2)
+    budget = 128
+    ft = FleetTier("dac(k_min=4)", n_lanes=4, budget=budget,
+                   arbiter="static", k0=budget // 4)
+    tt = CacheTier("dac(k_min=4)", n_tenants=4, budget=budget,
+                   arbiter="static", k0=budget // 4)
+    fres = replay_fleet(ft, keys)
+    tres = replay_tier(tt, keys)
+    assert np.array_equal(np.asarray(fres.metrics.hits),
+                          np.asarray(tres.metrics.hits))
+    assert np.array_equal(np.asarray(fres.metrics.requests),
+                          np.asarray(tres.metrics.requests))

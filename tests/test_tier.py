@@ -75,6 +75,14 @@ def test_sum_k_never_exceeds_budget(arbiter):
     streams = _mixed_streams(T=3000)
     # a tight budget so grants actually contend
     budget = N_TENANTS * K0 * 2
+    if make_arbiter(arbiter).needs_utility:
+        # utility-priced arbiters are fleet-only (the fixed-population
+        # tier carries no byte-miss-cost signal); their conservation law
+        # is enforced in tests/test_fleet.py
+        with pytest.raises(ValueError, match="utility"):
+            CacheTier("dac", n_tenants=N_TENANTS, budget=budget,
+                      arbiter=arbiter, k0=K0)
+        return
     tier = CacheTier("dac", n_tenants=N_TENANTS, budget=budget,
                      arbiter=arbiter, k0=K0)
     res = replay_tier(tier, streams, observe=True)

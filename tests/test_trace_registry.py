@@ -18,6 +18,7 @@ EXAMPLE_SPECS = {
     "scan_mix": "scan_mix(N=128,alpha=1.0,scan_frac=0.2,scan_len=32)",
     "churn": "churn(N=128,alpha=1.0,mean_phase=500,drift=0.1)",
     "tenants": "tenants(N=128,n_tenants=4,period=512,lo=16)",
+    "fleet": "fleet(N=128,n_lanes=4,rate=0.05,mean_session=200,lo=16)",
     "file": f"file(path={_CORPUS / 'kv.csv.gz'})",
 }
 
@@ -55,10 +56,13 @@ def test_same_seed_determinism(family):
     a = spec.generate(T=4000, seed=3)
     b = spec.generate(T=4000, seed=3)
     np.testing.assert_array_equal(a, b)
-    # tier families emit [T, n_tenants] interleaved streams
-    want = (4000, spec.n_tenants) if spec.is_tier else (4000,)
+    # tier/fleet families emit [T, n_tenants] interleaved streams
+    want = ((4000, spec.n_tenants) if spec.is_tier or spec.is_fleet
+            else (4000,))
     assert a.shape == want and a.dtype == np.int32
-    assert a.min() >= 0 and a.max() < spec.n_keys
+    # fleet streams mark idle lanes with -1; every live key stays in range
+    floor = -1 if spec.is_fleet else 0
+    assert a.min() >= floor and a.max() < spec.n_keys
     if spec.is_file:
         # real data has no seed axis: every seed is the same trace
         np.testing.assert_array_equal(a, spec.generate(T=4000, seed=4))
