@@ -21,7 +21,9 @@ sub-records, landing in the v2 schema (``repro.bench.result/v2``).
 
 Run via ``python -m benchmarks.run --only fleet_sweep``; invoking this
 module directly (or ``run(commit=...)``) additionally refreshes the
-committed repo-root ``BENCH_fleet.json`` artifact that CI validates.
+committed ``experiments/bench/BENCH_fleet.json`` artifact that CI
+validates (every committed BENCH artifact lives under
+``experiments/bench/`` — ``tools/check_bench.py`` enforces it).
 """
 from __future__ import annotations
 
@@ -118,4 +120,4 @@ def run(T: int = 40_000, seeds=(0, 1, 2), quiet: bool = False,
 
 
 if __name__ == "__main__":
-    run(T=16_000, seeds=(0, 1), commit="BENCH_fleet.json")
+    run(T=16_000, seeds=(0, 1), commit="experiments/bench/BENCH_fleet.json")

@@ -1,0 +1,129 @@
+"""Adversarial robustness grid: every policy — with and without the
+size-aware admission layer — against the hostile trace families.
+
+The paper's headline claim is adaptivity under *fluctuating working set
+sizes*; the standard grid only exercises DAC where that fluctuation is
+friendly.  This sweep is the hostile counterpart (the regimes where
+lightweight ranked policies are known to break — Einziger et al.'s
+size-aware admission line, Yang et al.'s scan/churn failure modes):
+
+* ``flood``     one-hit-wonder bursts whose cold ids carry *large*
+                bimodal sizes — the byte-weighted worst case admission
+                exists for
+* ``scanstorm`` sequential scans erupting mid-churn, same correlated
+                oversized cold range
+* ``diurnal``   square-wave load swings between a wide and a narrow
+                working set — the resize controller's stress test
+* ``thrash``    a cyclic loop strictly wider than the cache, reuse
+                distance > K by construction: the LRU worst case
+
+Policies run bare and under ``admit(...)`` (ghost filter, size-norm on).
+The headline table is :func:`repro.bench.report.robustness_frontier`:
+per policy, the worst-case and mean byte-weighted MRR vs FIFO across the
+grid — robustness is the *min*, not the mean.  The payload asserts the
+tentpole claim as data: ``extras["flood_check"]`` records whether
+admission improved DAC's worst flood cell (CI gates on it).
+
+Run via ``python -m benchmarks.run --only robustness``; invoking the
+module directly (or ``run(commit=...)``) additionally refreshes the
+committed ``experiments/bench/BENCH_robustness.json`` artifact.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.bench import Scenario, Sweep, report, results, run_sweep
+from repro.bench.results import atomic_write_json
+
+ADMIT = "admit({})"        # ghost filter + size_norm defaults
+BASES = ("fifo", "lru", "arc", "sieve", "dac")
+POLS = BASES + tuple(ADMIT.format(p) for p in ("lru", "dac"))
+
+COMMIT_PATH = "experiments/bench/BENCH_robustness.json"
+
+_SIZED = dict(cost_model="fetch")
+
+
+def _scenarios(N: int, T: int) -> tuple:
+    """The hostile grid at footprint ``N``: flood/scanstorm address a 2N
+    id range (cold ids >= N), and the bimodal size model's ``split=N``
+    pins exactly those cold ids at the large mode — one-hit wonders are
+    *oversized*, so the byte metrics feel them.  ``thrash`` loops over
+    ``N // 4`` keys, strictly wider than the large-regime cache
+    (``K_L = N // 10``), so its reuse distance defeats recency by
+    construction at every grid capacity."""
+    bimodal = f"bimodal(split={N},small_kb=4,large_kb=64)"
+    return (
+        Scenario("flood",
+                 trace=f"flood(N={N},alpha=0.9,flood_frac=0.35,"
+                       "burst_len=128,phases=4)",
+                 T=T, K=("S", "L"), size_model=bimodal, **_SIZED),
+        Scenario("scanstorm",
+                 trace=f"scanstorm(N={N},alpha=0.9,mean_phase=2000,"
+                       "drift=0.1,storm_frac=0.25,scan_len=256)",
+                 T=T, K=("S", "L"), size_model=bimodal, **_SIZED),
+        Scenario("diurnal",
+                 trace=f"diurnal(N={N},period={N},lo=64)",
+                 T=T, K=("S", "L"),
+                 size_model="lognormal(median_kb=16,sigma=1.5)", **_SIZED),
+        Scenario("thrash",
+                 trace=f"thrash(N={N},loop={N // 4})",
+                 T=T, K=("S", "L"),
+                 size_model="lognormal(median_kb=16,sigma=1.5)", **_SIZED),
+    )
+
+
+def sweep(N: int = 4096, T: int = 40_000, seeds=(0, 1)) -> Sweep:
+    return Sweep("robustness", policies=POLS,
+                 scenarios=_scenarios(N, T), seeds=seeds)
+
+
+def _flood_check(frontier: dict) -> dict:
+    """The tentpole claim as data: admission must improve DAC's *worst*
+    flood cell (and not cost it the flood mean)."""
+    def flood_worst(pol):
+        cells = {c: v for c, v in frontier[pol]["per_cell"].items()
+                 if c.startswith("flood(")}
+        return (min(cells.values()) if cells else None,
+                float(np.mean(list(cells.values()))) if cells else None)
+
+    dac_worst, dac_mean = flood_worst("dac")
+    adm_worst, adm_mean = flood_worst(ADMIT.format("dac"))
+    ok = (None not in (dac_worst, adm_worst)
+          and adm_worst >= dac_worst)
+    return {"dac_worst": dac_worst, "dac_mean": dac_mean,
+            "admit_dac_worst": adm_worst, "admit_dac_mean": adm_mean,
+            "ok": bool(ok)}
+
+
+def run(N: int = 4096, T: int = 40_000, seeds=(0, 1), quiet: bool = False,
+        commit: str | None = None):
+    sw = sweep(N=N, T=T, seeds=seeds)
+    res = run_sweep(sw, progress=None if quiet else print)
+    frontier = report.robustness_frontier(res.records, POLS)
+    check = _flood_check(frontier)
+    if not quiet:
+        print("\nbyte-weighted MRR vs fifo — worst cell / grid mean")
+        for pol in POLS:
+            f = frontier[pol]
+            print(report.fmt_row(
+                [pol, f"{f['worst']:+.3f}", f['worst_cell'],
+                 f"{f['mean']:+.3f}"], [14, 8, 16, 8]))
+        print(f"\nflood check (admission vs bare dac, worst cell): "
+              f"{'OK' if check['ok'] else 'FAILED'} "
+              f"(admit {check['admit_dac_worst']:+.3f} vs "
+              f"dac {check['dac_worst']:+.3f})")
+    if not check["ok"]:
+        print("WARNING: size-aware admission did not improve DAC's worst "
+              "flood cell — the robustness claim does not hold on this run")
+    payload = res.save(extras={"frontier": frontier, "flood_check": check},
+                       schema=results.SCHEMA_V2)
+    if commit is not None:
+        atomic_write_json(commit, payload)
+        if not quiet:
+            print(f"committed artifact refreshed: {commit}")
+    return payload
+
+
+if __name__ == "__main__":
+    run(commit=COMMIT_PATH)

@@ -21,7 +21,7 @@ from repro.bench import results
 def _jobs():
     from . import (ablation_eps, byte_miss, curve_cachesize, fleet_sweep,
                    kv_bounded, mrr_table, ops_per_request, real_traces,
-                   skew_sweep, tenant_sweep, throughput)
+                   robustness, skew_sweep, tenant_sweep, throughput)
 
     # name -> (description, fn(fast) -> validated payload)
     return {
@@ -63,6 +63,13 @@ def _jobs():
         "ablation_eps": (
             "beyond-paper",
             lambda fast: ablation_eps.run(T=20_000 if fast else 60_000)),
+        "robustness": (
+            "beyond-paper (size-aware admission vs hostile grid, "
+            "v2 schema)",
+            lambda fast: robustness.run(
+                N=1024 if fast else 4096,
+                T=6000 if fast else 40_000,
+                seeds=(0,) if fast else (0, 1))),
     }
 
 

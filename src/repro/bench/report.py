@@ -12,7 +12,8 @@ import numpy as np
 from ..core import mrr
 
 __all__ = ["select", "seed_values", "cell_label", "pivot",
-           "mrr_matrix", "winners", "metric_cdf", "fmt_row", "print_table",
+           "mrr_matrix", "winners", "metric_cdf", "robustness_frontier",
+           "fmt_row", "print_table",
            "tier_mrr_matrix", "tier_winners", "tenant_occupancy"]
 
 
@@ -194,6 +195,61 @@ def metric_cdf(records, policies, metric: str = "hit_ratio") -> dict:
         n = len(vals)
         out[pol] = {"values": vals,
                     "cdf": [(i + 1) / n for i in range(n)]}
+    return out
+
+
+def robustness_frontier(records, policies, baseline: str = "fifo",
+                        metric: str = "byte_miss_ratio") -> dict:
+    """Worst-case vs mean MRR frontier: per policy, the seed-mean MRR vs
+    ``baseline`` in every (scenario, K) cell, reduced to its minimum
+    (the adversarial worst case — the number the robustness claim rides
+    on) and its mean.  A policy's worst cell is named so the table says
+    *where* it breaks; exact worst-case ties resolve to the
+    lexicographically smallest cell label, stable across runs.
+
+    Partial grids are first-class: a cell missing either the policy's or
+    the baseline's record is skipped and *counted* in ``dropped`` — a
+    shrunken table always says how much of the grid it actually covers.
+    A policy with no covered cell reports ``worst``/``mean``/
+    ``worst_cell`` of ``None`` rather than vanishing silently.
+
+    >>> recs = [{"policy": p, "scenario": s, "K_label": "8",
+    ...          "metrics": {"byte_miss_ratio": [m]}}
+    ...         for p, s, m in [("fifo", "flood", 0.8), ("fifo", "scan", 0.5),
+    ...                         ("dac", "flood", 0.4), ("dac", "scan", 0.5),
+    ...                         ("lru", "flood", 0.6)]]
+    >>> f = robustness_frontier(recs, ["dac", "lru"])
+    >>> f["dac"]["worst"], f["dac"]["worst_cell"], f["dac"]["dropped"]
+    (0.0, 'scan(8)', 0)
+    >>> f["lru"]["cells"], f["lru"]["dropped"]     # scan cell has no record
+    (1, 1)
+    """
+    cells = _cells(records)
+    out = {}
+    for pol in policies:
+        per_cell, dropped = {}, 0
+        for scenario, kl in cells:
+            try:
+                base = seed_values(records, metric, policy=baseline,
+                                   scenario=scenario, K_label=kl)
+                vals = seed_values(records, metric, policy=pol,
+                                   scenario=scenario, K_label=kl)
+            except KeyError:
+                dropped += 1
+                continue
+            per_cell[f"{scenario}({kl})"] = float(np.mean(
+                [mrr(float(m), float(f)) for m, f in zip(vals, base)]))
+        worst_cell = (min(sorted(per_cell), key=per_cell.get)
+                      if per_cell else None)
+        out[pol] = {
+            "worst": per_cell[worst_cell] if per_cell else None,
+            "worst_cell": worst_cell,
+            "mean": float(np.mean(list(per_cell.values())))
+            if per_cell else None,
+            "cells": len(per_cell),
+            "dropped": dropped,
+            "per_cell": per_cell,
+        }
     return out
 
 

@@ -25,7 +25,8 @@ import dataclasses
 
 import numpy as np
 
-from ..data.traces import TraceSpec, fetch_costs, make_trace, object_sizes
+from ..data.traces import (TraceSpec, bimodal_sizes, fetch_costs,
+                           make_trace, object_sizes)
 from ..specs import build_kwargs, parse_spec
 
 __all__ = [
@@ -39,7 +40,7 @@ __all__ = [
 SMALL_FRAC = 0.001
 LARGE_FRAC = 0.10
 
-SIZE_MODELS = {"lognormal": object_sizes}
+SIZE_MODELS = {"lognormal": object_sizes, "bimodal": bimodal_sizes}
 COST_MODELS = {"fetch": fetch_costs}
 
 

@@ -7,7 +7,7 @@ The public surface is small::
     result = Engine().replay(policy, Request.of(keys, sizes), K)
     result.miss_ratio, result.byte_miss_ratio, result.penalty_ratio
 """
-from ..specs import build_kwargs, parse_spec
+from ..specs import build_kwargs, parse_spec, split_top
 from .adaptiveclimb import AdaptiveClimb
 from .baselines import (ARC, BLRU, Clock, Climb, FIFO, Hyperbolic, LFU, LRU,
                         Sieve, TinyLFU, TwoQ)
@@ -41,6 +41,24 @@ ALIASES = {
     "2q": "twoq",
 }
 
+
+def _make_admission(argstr):
+    """Build the ``admit(<base-spec>, k=v...)`` combinator: the first
+    top-level argument is a full policy spec (possibly parenthesized —
+    ``admit(dac(eps=0.5,growth=4),filter=tinylfu)``), the rest are
+    ``AdmissionPolicy`` knobs coerced like any constructor kwargs."""
+    from .admission import AdmissionPolicy
+    parts = split_top(argstr)
+    if not parts or "=" in parts[0].partition("(")[0]:
+        raise ValueError(
+            "admit(...) needs a base policy spec as its first argument, "
+            "e.g. admit(dac,filter=tinylfu)")
+    base = make_policy(parts[0])
+    kwargs = build_kwargs("policy", "admit", AdmissionPolicy.__init__,
+                          ",".join(parts[1:]), skip=("self", "base"))
+    return AdmissionPolicy(base, **kwargs)
+
+
 def make_policy(spec) -> Policy:
     """Build a policy from a spec string: ``"lru"``, ``"dac"``,
     ``"dac(eps=0.5,growth=4)"``, ... — registry name (or alias) plus
@@ -51,6 +69,8 @@ def make_policy(spec) -> Policy:
     DynamicAdaptiveClimb(eps=0.25, growth=2, k_min=2)
     >>> make_policy("2q").name           # aliases resolve
     'twoq'
+    >>> make_policy("admit(dac(eps=0.25),filter=tinylfu)").base.eps
+    0.25
     >>> make_policy("dac(nope=1)")
     Traceback (most recent call last):
         ...
@@ -60,16 +80,21 @@ def make_policy(spec) -> Policy:
         return spec
     name, argstr = parse_spec(spec)
     name = ALIASES.get(name, name)
+    if name == "admit":
+        return _make_admission(argstr)
     if name not in POLICIES:
         raise ValueError(
             f"unknown policy {name!r}; known: {sorted(POLICIES)} "
-            f"(aliases: {sorted(ALIASES)})")
+            f"(aliases: {sorted(ALIASES)}; combinator: admit(<policy>,...))")
     cls = POLICIES[name]
     return cls(**build_kwargs("policy", name, cls.__init__, argstr))
 
 
+from .admission import AdmissionPolicy  # noqa: E402  (needs make_policy)
+
 __all__ = [
-    "AdaptiveClimb", "DynamicAdaptiveClimb", "ARC", "BLRU", "Clock", "Climb",
+    "AdaptiveClimb", "AdmissionPolicy", "DynamicAdaptiveClimb",
+    "ARC", "BLRU", "Clock", "Climb",
     "FIFO", "Hyperbolic", "LFU", "LHD", "LIRS", "LRU", "Sieve", "TinyLFU", "TwoQ",
     "EMPTY", "LANE", "Policy", "Request", "StepInfo", "step_info",
     "rank_step", "lane_pad", "padded_row",

@@ -35,6 +35,11 @@ class AdaptiveClimb(Policy):
 
     name = "adaptiveclimb"
 
+    # jump is a pure adaptation scalar, decoupled from the rank row — an
+    # admission wrapper lets it keep observing rejected misses (see
+    # repro.core.admission and DynamicAdaptiveClimb.ADAPT_KEYS)
+    ADAPT_KEYS = ("jump",)
+
     def init(self, K: int) -> dict:
         # lane-padded rank row; the logical capacity K rides as the "len"
         # control scalar (the array width is the padded W)

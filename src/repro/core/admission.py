@@ -1,0 +1,312 @@
+"""Size-aware admission layer: a ghost/count-min utility estimator plus a
+wrapper that composes with *any* registry policy.
+
+The byte-weighted metrics (PR 5 onward) had no policy-side counterpart:
+every ranked policy admits every miss regardless of size, so a burst of
+huge one-hit-wonder objects evicts the hot set and the byte miss ratio
+pays for it twice.  Following *Lightweight Robust Size Aware Cache
+Management* (Einziger et al.), admission is a separate, O(1)-state layer
+in front of the insert path:
+
+* a **frequency sketch** — TinyLFU-style count-min (``rows x W`` int32,
+  multiply-shift hashing, periodic halving) counting every request;
+* a **bytes sketch** sharing the same hash lanes, accumulating request
+  sizes, so a *victim's* mean object size can be estimated without any
+  per-item resident statistics;
+* a **ghost ring** — a fixed-size FIFO of recently-evicted keys (the
+  shadow cache): a key that bounces back shortly after eviction gets a
+  frequency boost, recovering the hot set after an adversarial flush.
+
+On a miss the wrapper runs the base policy's step first (which routes
+through the fused ``rank_step`` and therefore through every ``use_pallas``
+lowering unchanged), reads the victim off ``StepInfo.evicted_key``, and
+compares size-normalized utilities::
+
+    u(key, size) = (freq(key) + boost * in_ghost(key)) / max(size, 1)
+
+A rejected candidate *reverts the base step*: the victim stays resident
+and the ``StepInfo`` still charges the miss (the object was fetched — it
+just wasn't cached) while reporting no eviction.  A base may opt its
+adaptation scalars out of the revert by declaring ``ADAPT_KEYS`` (DAC
+does: its ``jump``/``k`` resize controller must keep seeing filtered
+misses, or a flood of rejected one-hit wonders would silently freeze the
+paper's dynamic resizing — the same reason W-TinyLFU's adaptive window
+observes accesses its doorkeeper bounced).  Hits always commit, so
+admission can never change hit accounting.
+
+State shapes are fixed, every decision is pure arithmetic on the carry —
+the wrapper scans, vmaps, jits, and shards exactly like its base.
+
+>>> from repro.core import Engine, make_policy
+>>> pol = make_policy("admit(dac(eps=0.5),filter=tinylfu,size_norm=false)")
+>>> pol.base.eps, pol.filter, pol.size_norm
+(0.5, 'tinylfu', False)
+>>> res = Engine().replay(pol, [0, 1, 0, 2, 0, 1, 2, 0], K=2,
+...                       collect_info=False)
+>>> float(res.miss_ratio) <= 1.0
+True
+>>> off = make_policy("admit(lru,filter=off)")      # pass-through wrapper
+>>> a = Engine().replay(off, [3, 1, 3, 2], K=2).metrics
+>>> b = Engine().replay("lru", [3, 1, 3, 2], K=2).metrics
+>>> int(a.hits) == int(b.hits)
+True
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .policy import EMPTY, Policy, Request, StepInfo, step_info
+
+__all__ = ["AdmissionPolicy", "FILTERS"]
+
+# admission filter variants:
+#   off     — always admit; the wrapper is bit-identical to the bare base
+#   tinylfu — frequency + bytes sketches only (no ghost ring)
+#   ghost   — sketches + recently-evicted ghost ring boost (the default)
+FILTERS = ("off", "tinylfu", "ghost")
+
+# multiply-shift hash constants, one odd constant per sketch row (the same
+# mix the TinyLFU baseline uses — the two estimators stay comparable)
+_HASH_MIX = (0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F)
+
+
+class AdmissionPolicy(Policy):
+    """``admit(<base>, ...)``: size-aware admission around any policy.
+
+    ``filter`` picks the estimator (:data:`FILTERS`); ``size_norm``
+    divides utilities by (estimated) object size, making the decision
+    byte-aware; ``rows``/``width_factor``/``window_factor`` shape the
+    count-min sketch exactly like the TinyLFU baseline;
+    ``ghost_factor`` sizes the ghost ring (``ghost_factor * K`` keys)
+    and ``ghost_boost`` is the frequency credit for a ghost hit.
+
+    >>> from repro.core import make_policy
+    >>> make_policy("admit(dac,filter=ghost)").name
+    'admit'
+    >>> make_policy("admit(lru)") == make_policy("admit(lru)")
+    True
+    >>> make_policy("admit(lru,filter=sometimes)")
+    Traceback (most recent call last):
+        ...
+    ValueError: admit filter must be one of ('off', 'tinylfu', 'ghost'), \
+got 'sometimes'
+    """
+
+    name = "admit"
+
+    def __init__(self, base, filter: str = "ghost", size_norm: bool = True,
+                 rows: int = 4, width_factor: int = 16,
+                 window_factor: int = 8, ghost_factor: int = 4,
+                 ghost_boost: int = 2):
+        from . import make_policy
+        self.base = make_policy(base)
+        if filter not in FILTERS:
+            raise ValueError(
+                f"admit filter must be one of {FILTERS}, got {filter!r}")
+        self.filter = str(filter)
+        self.size_norm = bool(size_norm)
+        self.rows = int(rows)
+        if not 1 <= self.rows <= len(_HASH_MIX):
+            raise ValueError(
+                f"rows must lie in [1, {len(_HASH_MIX)}], got {rows}")
+        self.width_factor = int(width_factor)
+        self.window_factor = int(window_factor)
+        self.ghost_factor = int(ghost_factor)
+        self.ghost_boost = int(ghost_boost)
+        if min(self.width_factor, self.window_factor,
+               self.ghost_factor) < 1 or self.ghost_boost < 0:
+            raise ValueError(
+                "width_factor/window_factor/ghost_factor must be >= 1 and "
+                "ghost_boost >= 0")
+
+    # --- estimator state -------------------------------------------------
+
+    def _width(self, K: int) -> int:
+        w = 1
+        while w < K * self.width_factor:
+            w *= 2
+        return w
+
+    def init(self, K: int) -> dict:
+        """Base state nested under ``"base"``; estimator state (when the
+        filter is on) under ``"adm"`` — all fixed shapes, derived from
+        ``K`` exactly like the base's own rows.
+
+        >>> pol = AdmissionPolicy("lru", filter="ghost")
+        >>> st = pol.init(4)
+        >>> sorted(st), sorted(st["adm"])
+        (['adm', 'base'], ['adds', 'bytes', 'ghost', 'head', 'sketch', \
+'window'])
+        >>> AdmissionPolicy("lru", filter="off").init(4).keys()
+        dict_keys(['base'])
+        """
+        state = {"base": self.base.init(K)}
+        if self.filter == "off":
+            return state
+        W = self._width(K)
+        adm = {
+            "sketch": jnp.zeros((self.rows, W), jnp.int32),
+            "bytes": jnp.zeros((self.rows, W), jnp.float32),
+            "adds": jnp.int32(0),
+            "window": jnp.int32(self.window_factor * K),
+        }
+        if self.filter == "ghost":
+            adm["ghost"] = jnp.full((self.ghost_factor * K,), EMPTY,
+                                    jnp.int32)
+            adm["head"] = jnp.int32(0)
+        state["adm"] = adm
+        return state
+
+    # --- estimator arithmetic (pure, fixed-shape) ------------------------
+
+    def _hash(self, key, W):
+        a = jnp.array(_HASH_MIX[: self.rows], dtype=jnp.uint32)
+        x = (key.astype(jnp.uint32) + 1) * a
+        x = x ^ (x >> 15)
+        return (x & jnp.uint32(W - 1)).astype(jnp.int32)
+
+    def _observe(self, adm: dict, req: Request) -> dict:
+        """Count the request in both sketches; halve when the window
+        expires (ages stale frequencies *and* stale byte totals together,
+        so the mean-size ratio survives the decay)."""
+        W = adm["sketch"].shape[1]
+        h = self._hash(req.key, W)
+        r = jnp.arange(self.rows)
+        sketch = adm["sketch"].at[r, h].add(1)
+        byts = adm["bytes"].at[r, h].add(req.size.astype(jnp.float32))
+        adds = adm["adds"] + 1
+        expire = adds >= adm["window"]
+        # floor the byte halving like the integer frequency halving, so
+        # the bytes/freq mean-size ratio stays exact on unit-size traces
+        # (size_norm then degenerates to the pure frequency comparison)
+        return dict(adm,
+                    sketch=jnp.where(expire, sketch // 2, sketch),
+                    bytes=jnp.where(expire, jnp.floor(byts * 0.5), byts),
+                    adds=jnp.where(expire, 0, adds))
+
+    def _freq_bytes(self, adm: dict, key):
+        """Count-min point estimates: (frequency, accumulated bytes)."""
+        W = adm["sketch"].shape[1]
+        h = self._hash(key, W)
+        r = jnp.arange(self.rows)
+        return (jnp.min(adm["sketch"][r, h]).astype(jnp.float32),
+                jnp.min(adm["bytes"][r, h]))
+
+    def _boosted(self, adm: dict, key, freq):
+        if self.filter != "ghost":
+            return freq
+        in_ghost = jnp.any(adm["ghost"] == key)
+        return freq + self.ghost_boost * in_ghost.astype(jnp.float32)
+
+    def _utility(self, adm: dict, key, size):
+        """Size-normalized estimated utility of caching ``key``."""
+        freq, _ = self._freq_bytes(adm, key)
+        freq = self._boosted(adm, key, freq)
+        if not self.size_norm:
+            return freq
+        return freq / jnp.maximum(size.astype(jnp.float32), 1.0)
+
+    def _victim_utility(self, adm: dict, victim):
+        """Like :meth:`_utility`, but the victim's size is *estimated*
+        from the bytes/frequency sketch ratio — no resident metadata."""
+        freq, byts = self._freq_bytes(adm, victim)
+        boosted = self._boosted(adm, victim, freq)
+        if not self.size_norm:
+            return boosted
+        mean_size = byts / jnp.maximum(freq, 1.0)
+        return boosted / jnp.maximum(mean_size, 1.0)
+
+    def _remember(self, adm: dict, victim, push) -> dict:
+        """Push an admitted step's victim into the ghost ring."""
+        ghost, head = adm["ghost"], adm["head"]
+        G = ghost.shape[0]
+        ghost = jnp.where(push, ghost.at[head].set(victim), ghost)
+        head = jnp.where(push, (head + 1) % G, head)
+        return dict(adm, ghost=ghost, head=head)
+
+    # --- the wrapped step ------------------------------------------------
+
+    def _merge(self, admit, new_base, old_base):
+        """Commit or revert the base transition.  A rejected miss reverts
+        the base state — except any ``ADAPT_KEYS`` the base declares:
+        decoupled adaptation scalars (e.g. DAC's ``jump``/``k``
+        controller) that must keep observing filtered misses, exactly as
+        W-TinyLFU's adaptive window sees accesses its doorkeeper bounced.
+        A base that declares none (the default) reverts wholesale."""
+        revert = lambda n, o: jax.tree_util.tree_map(
+            lambda a, b: jnp.where(admit, a, b), n, o)
+        adapt = frozenset(getattr(self.base, "ADAPT_KEYS", ()))
+        if not adapt or not isinstance(new_base, dict):
+            return revert(new_base, old_base)
+        return {k: new_base[k] if k in adapt
+                else revert(new_base[k], old_base[k]) for k in new_base}
+
+    def _gate(self, state: dict, req: Request, new_base, info: StepInfo):
+        """Shared post-step gating: admit or revert the base transition."""
+        adm = self._observe(state["adm"], req)
+        victim = info.evicted_key
+        # hits and victimless inserts (filling, or the base's own
+        # admission already bounced) always commit; contested inserts
+        # compare size-normalized utilities.  The classic tinylfu filter
+        # breaks ties for the resident (strict >): a one-hit wonder never
+        # displaces an established key, but equal-utility churn is locked
+        # out too, which starves adaptive bases (DAC's resize controller
+        # only observes committed steps).  The ghost filter admits ties
+        # (>=): equal-utility traffic flows through untouched and only
+        # strictly-worse candidates — the oversized one-hit flood — bounce.
+        u_cand = self._utility(adm, req.key, req.size)
+        u_vict = self._victim_utility(adm, victim)
+        beats = u_cand >= u_vict if self.filter == "ghost" else \
+            u_cand > u_vict
+        admit = info.hit | (victim == EMPTY) | beats
+        base_out = self._merge(admit, new_base, state["base"])
+        if self.filter == "ghost":
+            adm = self._remember(adm, victim,
+                                 push=admit & ~info.hit & (victim != EMPTY))
+        # a rejected miss still charges size/cost, but nothing left the
+        # cache — mask the eviction exactly like step_info does on hits
+        info = info._replace(evicted_key=jnp.where(admit, victim, EMPTY))
+        return {"base": base_out, "adm": adm}, info
+
+    def step(self, state: dict, req: Request):
+        """Base step first (fused ``rank_step`` path untouched), then the
+        admission gate.
+
+        >>> import jax.numpy as jnp
+        >>> pol = AdmissionPolicy("lru")
+        >>> st, info = pol.step(pol.init(2), Request.of(jnp.int32(7)))
+        >>> bool(info.hit), int(info.evicted_key), int(st["adm"]["adds"])
+        (False, -1, 1)
+        """
+        new_base, info = self.base.step(state["base"], req)
+        if self.filter == "off":
+            return {"base": new_base}, info
+        return self._gate(state, req, new_base, info)
+
+    def _step_budgeted(self, fn, state: dict, req: Request):
+        """Budgeted variant, delegated to the base's ``step_budgeted``
+        (``state["base"]["cap"]`` threads through unchanged) with the
+        same gate on top — the tier/fleet contract survives wrapping."""
+        new_base, info = fn(state["base"], req)
+        if self.filter == "off":
+            return {"base": new_base}, info
+        return self._gate(state, req, new_base, info)
+
+    # --- conditional delegation -----------------------------------------
+    # `observables` / `step_budgeted` must exist on the wrapper exactly
+    # when the base has them (the engine and the tier feature-detect with
+    # hasattr), so they resolve dynamically instead of living on the class.
+
+    def __getattr__(self, name):
+        if name in ("observables", "step_budgeted"):
+            base = self.__dict__.get("base")
+            fn = getattr(base, name, None)
+            if fn is not None:
+                if name == "observables":
+                    return lambda state: fn(state["base"])
+                return functools.partial(self._step_budgeted, fn)
+        raise AttributeError(
+            f"{type(self).__name__!r} object has no attribute {name!r}")

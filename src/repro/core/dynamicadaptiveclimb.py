@@ -63,6 +63,16 @@ class DynamicAdaptiveClimb(Policy):
 
     name = "dynamicadaptiveclimb"
 
+    # Adaptation scalars an admission wrapper (repro.core.admission) lets
+    # advance even when it rejects the insert: the resize controller must
+    # observe filtered misses or it starves.  Safe against a reverted
+    # cache row: a miss step can only *grow* k (halving needs
+    # jump <= -k/2, unreachable right after the miss's jump += 1 — the
+    # check runs every step, so the threshold cannot be crossed earlier
+    # and linger), and growth only activates ranks that are EMPTY in the
+    # old row, so "ranks >= k are EMPTY" survives the merge.
+    ADAPT_KEYS = ("jump", "jump2", "k", "kmax")
+
     def __init__(self, eps: float = 0.5, growth: int = 4, k_min: int = 2):
         self.eps = float(eps)
         self.growth = int(growth)  # K_max = K * growth

@@ -28,10 +28,11 @@ from . import ingest
 
 __all__ = [
     "zipf_trace", "shifting_zipf_trace", "scan_mix_trace", "churn_trace",
-    "tenants_trace", "fleet_trace", "file_trace", "dataset_family",
-    "DATASET_FAMILIES", "object_sizes", "fetch_costs", "TraceSpec",
-    "make_trace", "TRACES", "TRACE_ALIASES", "TIER_FAMILIES",
-    "FLEET_FAMILIES",
+    "tenants_trace", "fleet_trace", "file_trace", "flood_trace",
+    "scanstorm_trace", "diurnal_trace", "thrash_trace", "dataset_family",
+    "DATASET_FAMILIES", "object_sizes", "bimodal_sizes", "fetch_costs",
+    "TraceSpec", "make_trace", "TRACES", "TRACE_ALIASES", "TIER_FAMILIES",
+    "FLEET_FAMILIES", "COLD_RANGE_FAMILIES",
 ]
 
 
@@ -313,6 +314,147 @@ def file_trace(path: str, format: str = "auto", T: int = 0,
     return tr.keys
 
 
+# --- hostile (adversarial) families ----------------------------------------
+# The robustness grid: each family targets one known failure mode of
+# lightweight replacement/admission policies.  Cold/one-hit ids live in the
+# disjoint range [N, 2N) (like scan_mix), so a bimodal size model can give
+# them correlated (large) sizes by id.
+
+def flood_trace(N: int, T: int, alpha: float, flood_frac: float = 0.3,
+                burst_len: int = 64, phases: int = 4,
+                seed: int = 0) -> np.ndarray:
+    """One-hit-wonder floods: Zipf(``alpha``) base traffic over ``[0, N)``
+    interrupted by bursts of *fresh* cold keys from ``[N, 2N)`` that are
+    never requested again (until the cold range wraps after ``N`` flood
+    requests).
+
+    Each of the ``phases`` equal time phases carries exactly
+    ``int(phase_len * flood_frac)`` flood requests, grouped into runs of
+    ``burst_len`` consecutive positions on distinct block boundaries — so
+    the realized per-phase flood fraction *is* the parameter (the
+    property suite measures it).  Fresh ids advance a global counter
+    modulo ``N``; keep total flood traffic below ``N`` requests for
+    strictly one-hit wonders.  Pair with the ``bimodal(split=N)`` size
+    model to make the flood large-object (the admission layer's hardest
+    byte-weighted case).
+
+    >>> keys = flood_trace(N=64, T=400, alpha=1.0, flood_frac=0.25,
+    ...                    burst_len=10, phases=2)
+    >>> keys.shape, bool((keys < 128).all())
+    ((400,), True)
+    >>> int((keys >= 64).sum())          # 2 phases x int(200 * 0.25)
+    100
+    """
+    if not 0.0 <= flood_frac < 1.0:
+        raise ValueError(f"flood_frac must lie in [0, 1), got {flood_frac}")
+    if burst_len < 1 or phases < 1:
+        raise ValueError("burst_len and phases must be >= 1")
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 3]))
+    out = zipf_trace(N, T, alpha, seed=seed + 1).astype(np.int64)
+    bounds = np.linspace(0, T, phases + 1).astype(int)
+    counter = 0
+    for ph in range(phases):
+        lo, hi = bounds[ph], bounds[ph + 1]
+        L = hi - lo
+        n_flood = int(L * flood_frac)
+        if n_flood == 0:
+            continue
+        blocks = L // burst_len
+        if n_flood > blocks * burst_len:
+            raise ValueError(
+                f"flood_frac={flood_frac} with burst_len={burst_len} does "
+                f"not fit a phase of {L} requests; shrink burst_len or "
+                "flood_frac")
+        n_bursts = -(-n_flood // burst_len)
+        chosen = rng.choice(blocks, size=n_bursts, replace=False)
+        remaining = n_flood
+        for j in np.sort(chosen):
+            start = lo + int(j) * burst_len
+            take = min(burst_len, remaining)
+            out[start:start + take] = N + (counter + np.arange(take)) % N
+            counter += take
+            remaining -= take
+    return out.astype(np.int32)
+
+
+def scanstorm_trace(N: int, T: int, alpha: float, mean_phase: int = 2000,
+                    drift: float = 0.1, storm_frac: float = 0.25,
+                    scan_len: int = 256, seed: int = 0) -> np.ndarray:
+    """Sequential scans landing *mid-churn*: a :func:`churn_trace` base
+    (popularity drifting every phase) overwritten by scan runs over the
+    cold id range ``[N, 2N)`` — the cache must survive the flush while
+    the hot set underneath it is already moving.
+
+    >>> keys = scanstorm_trace(N=64, T=300, alpha=1.0, mean_phase=100,
+    ...                        drift=0.1, storm_frac=0.25, scan_len=16)
+    >>> keys.shape, bool((keys < 128).all()), bool((keys >= 64).any())
+    ((300,), True, True)
+    """
+    if not 0.0 <= storm_frac < 1.0:
+        raise ValueError(f"storm_frac must lie in [0, 1), got {storm_frac}")
+    if scan_len < 1:
+        raise ValueError(f"scan_len must be >= 1, got {scan_len}")
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 4]))
+    out = churn_trace(N, T, alpha, mean_phase, drift,
+                      seed=seed).astype(np.int64)
+    n_scans = max(1, int(T * storm_frac / scan_len))
+    for _ in range(n_scans):
+        start = rng.integers(0, max(1, T - scan_len))
+        base = rng.integers(0, N)
+        length = min(scan_len, T - start)
+        out[start:start + length] = N + (base + np.arange(length)) % N
+    return out.astype(np.int32)
+
+
+def diurnal_trace(N: int, T: int, alpha: float = 0.9, period: int = 4096,
+                  duty: float = 0.5, lo: int = 64, alpha_lo: float = 1.6,
+                  seed: int = 0) -> np.ndarray:
+    """Diurnal load swings on a single cache: the working set alternates
+    between *wide* (Zipf(``alpha``) over all ``N`` keys, ``duty`` of each
+    ``period``) and *narrow* (Zipf(``alpha_lo``) over a ``lo``-key hot
+    set) — the single-tenant version of :func:`tenants_trace`'s
+    fluctuating-working-set regime, which is where the paper claims DAC's
+    resizing wins and where admission must not pin the cache to the stale
+    wide set.
+
+    >>> keys = diurnal_trace(N=64, T=200, period=40, duty=0.5, lo=8)
+    >>> keys.shape, bool((keys < 64).all())
+    ((200,), True)
+    """
+    if not 0.0 < duty < 1.0:
+        raise ValueError(f"duty must lie in (0, 1), got {duty}")
+    if not 1 <= lo <= N:
+        raise ValueError(f"lo must lie in [1, N], got {lo}")
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(N).astype(np.int32)
+    wide = rng.choice(N, size=T, p=_zipf_pmf(N, alpha))
+    narrow = rng.choice(lo, size=T, p=_zipf_pmf(lo, alpha_lo))
+    phase = np.arange(T) % period
+    wide_len = max(1, int(period * duty))
+    return perm[np.where(phase < wide_len, wide, narrow)].astype(np.int32)
+
+
+def thrash_trace(N: int, T: int, loop: int, seed: int = 0) -> np.ndarray:
+    """The adversarial eviction-order pattern: a strict cyclic sweep over
+    ``loop`` distinct keys (a seeded subset of ``[0, N)``).  Every reuse
+    distance is exactly ``loop - 1``, so any policy holding ``K < loop``
+    slots with LRU-like eviction order misses *every* request — the
+    classic sequential-flooding worst case (FIFO/CLOCK/LRU all degrade;
+    frequency-free policies cannot recover).
+
+    >>> keys = thrash_trace(N=64, T=12, loop=4, seed=0)
+    >>> sorted(set(keys.tolist())) == sorted(set(keys[:4].tolist()))
+    True
+    >>> bool((keys[:4] == keys[4:8]).all())
+    True
+    """
+    if not 1 <= loop <= N:
+        raise ValueError(f"loop must lie in [1, N], got {loop}")
+    rng = np.random.default_rng(seed)
+    cycle = rng.permutation(N)[:loop].astype(np.int32)
+    return cycle[np.arange(T) % loop]
+
+
 # --- dataset families ------------------------------------------------------
 # Parameters chosen to mimic the published character of each dataset:
 #   alibaba   block storage, high skew, heavy churn, large footprint
@@ -350,7 +492,16 @@ TRACES = {
     "tenants": tenants_trace,
     "fleet": fleet_trace,
     "file": file_trace,
+    "flood": flood_trace,
+    "scanstorm": scanstorm_trace,
+    "diurnal": diurnal_trace,
+    "thrash": thrash_trace,
 }
+
+# families whose cold/one-hit ids live in the disjoint range [N, 2N): the
+# id footprint is 2N, and a bimodal(split=N) size model makes cold
+# traffic large-object by construction
+COLD_RANGE_FAMILIES = frozenset({"scan_mix", "flood", "scanstorm"})
 
 # families whose generators emit [T, n_tenants] interleaved tier streams
 # (repro.tier.replay_tier input) rather than a single [T] key trace
@@ -407,14 +558,15 @@ class TraceSpec:
 
     @property
     def n_keys(self) -> int:
-        """Id-space footprint: keys lie in ``[0, n_keys)``.  Scan mixes
-        address ``[0, 2N)`` (cold scan keys live in ``[N, 2N)``); file
+        """Id-space footprint: keys lie in ``[0, n_keys)``.  Cold-range
+        families (:data:`COLD_RANGE_FAMILIES` — scan mixes, floods, scan
+        storms) address ``[0, 2N)`` (cold ids live in ``[N, 2N)``); file
         traces resolve their distinct-key count from the file itself
         (``repro.data.ingest.characterize``, cached by path + mtime)."""
         if self.is_file:
             return self.stats().n_objects
         N = self.kwargs["N"]
-        return 2 * N if self.family == "scan_mix" else N
+        return 2 * N if self.family in COLD_RANGE_FAMILIES else N
 
     @property
     def is_file(self) -> bool:
@@ -554,6 +706,28 @@ def object_sizes(n_objects: int, seed: int = 0,
     """
     rng = np.random.default_rng(seed)
     kb = rng.lognormal(mean=np.log(median_kb), sigma=sigma, size=n_objects)
+    return np.maximum(1, (kb * 1024).astype(np.int64))
+
+
+def bimodal_sizes(n_objects: int, seed: int = 0, split: int = 8192,
+                  small_kb: float = 4.0, large_kb: float = 64.0,
+                  sigma: float = 0.5) -> np.ndarray:
+    """Two-population log-normal size table: ids below ``split`` draw
+    around ``small_kb``, ids at or above it around ``large_kb``.  With a
+    cold-range trace family (``flood``/``scanstorm``/``scan_mix``) and
+    ``split=N``, the hostile cold traffic is large-object *by id* — the
+    correlated-size regime where byte-weighted metrics punish size-blind
+    admission hardest.
+
+    >>> sizes = bimodal_sizes(100, split=50, small_kb=4, large_kb=64,
+    ...                       sigma=0.0)
+    >>> [round(s / 1024) for s in sizes[[0, 99]]]
+    [4, 64]
+    """
+    rng = np.random.default_rng(seed)
+    small = rng.lognormal(np.log(small_kb), sigma, size=n_objects)
+    large = rng.lognormal(np.log(large_kb), sigma, size=n_objects)
+    kb = np.where(np.arange(n_objects) < split, small, large)
     return np.maximum(1, (kb * 1024).astype(np.int64))
 
 

@@ -17,7 +17,8 @@ from __future__ import annotations
 import inspect
 import re
 
-__all__ = ["parse_spec", "coerce_value", "build_kwargs", "format_spec"]
+__all__ = ["parse_spec", "coerce_value", "build_kwargs", "format_spec",
+           "split_top"]
 
 _SPEC_RE = re.compile(r"([a-z0-9_]+)\s*(?:\((.*)\))?\s*", re.I | re.S)
 
@@ -32,6 +33,38 @@ def parse_spec(spec: str) -> tuple[str, str | None]:
     if not m:
         raise ValueError(f"unparseable spec {spec!r}")
     return m.group(1).lower(), m.group(2)
+
+
+def split_top(argstr: str | None) -> list:
+    """Split a spec argument string on *top-level* commas only — commas
+    inside nested parentheses stay put, so composite specs such as
+    ``admit(dac(eps=0.5,growth=4),filter=tinylfu)`` keep their base-policy
+    spec intact.  Empty segments are dropped; ``None`` splits to ``[]``.
+
+    >>> split_top("dac(eps=0.5,growth=4),filter=tinylfu")
+    ['dac(eps=0.5,growth=4)', 'filter=tinylfu']
+    >>> split_top("a=1,b=2"), split_top(None), split_top("  ")
+    (['a=1', 'b=2'], [], [])
+    """
+    if argstr is None:
+        return []
+    parts, depth, cur = [], 0, []
+    for ch in argstr:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth < 0:
+                raise ValueError(f"unbalanced parentheses in {argstr!r}")
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if depth != 0:
+        raise ValueError(f"unbalanced parentheses in {argstr!r}")
+    parts.append("".join(cur))
+    return [p for p in (q.strip() for q in parts) if p]
 
 
 def _coerce_literal(text: str):
@@ -95,7 +128,7 @@ def build_kwargs(kind: str, name: str, fn, argstr: str | None, *,
               if k not in skip}
     kwargs = {}
     if argstr and argstr.strip():
-        for part in argstr.split(","):
+        for part in split_top(argstr):
             k, sep, v = part.partition("=")
             if not sep:
                 raise ValueError(

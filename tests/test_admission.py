@@ -1,0 +1,239 @@
+"""Differential harness for the size-aware admission layer.
+
+The wrapper's core contract is *conservative extension*: ``admit(<p>,
+filter=off)`` must be bit-identical to bare ``<p>`` — not
+metrics-close, byte-for-byte equal per step — for every registry
+policy, under both ``use_pallas`` settings, on single-lane scans and
+vmapped lane batches.  On top of that: gating decisions are
+deterministic, hits are never re-accounted, rejected misses still
+charge their bytes, and the spec grammar composes (``admit(dac(...),
+...)`` keeps the nested base spec intact).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (EMPTY, AdmissionPolicy, Engine, POLICIES,
+                        make_policy)
+from repro.core.admission import FILTERS
+from repro.core.policy import Request
+
+ENGINE = Engine()
+PALLAS = (False, True)
+
+_rng = np.random.default_rng(7)
+KEYS = _rng.integers(0, 48, size=(2, 320)).astype(np.int32)
+SIZES = _rng.integers(1, 9000, size=(2, 320)).astype(np.float64)
+
+
+def _info_equal(a, b, label):
+    assert (a is None) == (b is None)
+    for f in a._fields:
+        x, y = getattr(a, f), getattr(b, f)
+        if x is None and y is None:
+            continue
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"{label}: StepInfo.{f}")
+
+
+def _metrics_equal(a, b, label):
+    for f in a._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f"{label}: Metrics.{f}")
+
+
+@pytest.mark.parametrize("use_pallas", PALLAS)
+@pytest.mark.parametrize("name", sorted(POLICIES))
+def test_filter_off_bit_identical_scan(name, use_pallas):
+    """Single-lane scan: the pass-through wrapper is invisible."""
+    wrapped = make_policy(f"admit({name},filter=off)")
+    ref = ENGINE.replay(name, KEYS[0], 8, sizes=SIZES[0],
+                        use_pallas=use_pallas)
+    got = ENGINE.replay(wrapped, KEYS[0], 8, sizes=SIZES[0],
+                        use_pallas=use_pallas)
+    _info_equal(got.info, ref.info, f"{name}/pallas={use_pallas}")
+    _metrics_equal(got.metrics, ref.metrics, f"{name}/pallas={use_pallas}")
+
+
+@pytest.mark.parametrize("use_pallas", PALLAS)
+@pytest.mark.parametrize("name", sorted(POLICIES))
+def test_filter_off_bit_identical_vmapped(name, use_pallas):
+    """Vmapped lane batch: identical per lane, not just in aggregate."""
+    wrapped = make_policy(f"admit({name},filter=off)")
+    ref = ENGINE.replay(name, KEYS, 8, sizes=SIZES, use_pallas=use_pallas)
+    got = ENGINE.replay(wrapped, KEYS, 8, sizes=SIZES,
+                        use_pallas=use_pallas)
+    _info_equal(got.info, ref.info, f"{name}/vmap/pallas={use_pallas}")
+    _metrics_equal(got.metrics, ref.metrics,
+                   f"{name}/vmap/pallas={use_pallas}")
+
+
+@pytest.mark.parametrize("filter", [f for f in FILTERS if f != "off"])
+def test_gated_replay_deterministic(filter):
+    """Same trace, same wrapper -> the same decisions, step for step;
+    and the vmapped batch reproduces each single-lane scan exactly."""
+    pol = make_policy(f"admit(dac,filter={filter})")
+    a = ENGINE.replay(pol, KEYS, 8, sizes=SIZES)
+    b = ENGINE.replay(pol, KEYS, 8, sizes=SIZES)
+    _info_equal(a.info, b.info, f"repeat/{filter}")
+    for lane in range(KEYS.shape[0]):
+        single = ENGINE.replay(pol, KEYS[lane], 8, sizes=SIZES[lane])
+        for f in a.info._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a.info, f))[lane],
+                np.asarray(getattr(single.info, f)),
+                err_msg=f"lane {lane}/{filter}: StepInfo.{f}")
+
+
+@pytest.mark.parametrize("filter", FILTERS)
+def test_hits_never_gated(filter):
+    """When everything fits (no evictions, victim always EMPTY) the
+    gate can never fire: any filter replays bit-identically to the bare
+    base, and hit accounting is untouched."""
+    keys = _rng.integers(0, 6, size=400).astype(np.int32)
+    ref = ENGINE.replay("lru", keys, 8)
+    got = ENGINE.replay(make_policy(f"admit(lru,filter={filter})"), keys, 8)
+    _info_equal(got.info, ref.info, f"fits/{filter}")
+    _metrics_equal(got.metrics, ref.metrics, f"fits/{filter}")
+
+
+def test_hit_steps_commit_unchanged():
+    """On hit steps the gate is a no-op: the hit flag and the zero
+    eviction/bytes accounting come straight from the base."""
+    res = ENGINE.replay(make_policy("admit(dac)"), KEYS[0], 8,
+                        sizes=SIZES[0])
+    hit = np.asarray(res.info.hit)
+    assert hit.any()
+    assert (np.asarray(res.info.evicted_key)[hit] == EMPTY).all()
+    assert (np.asarray(res.info.bytes_missed)[hit] == 0).all()
+
+
+def test_rejected_miss_still_charges_bytes():
+    """A gated miss reports no eviction but still pays the fetch: every
+    miss charges its request size whether or not it was admitted."""
+    res = ENGINE.replay(make_policy("admit(lru,filter=tinylfu)"), KEYS[0],
+                        8, sizes=SIZES[0])
+    miss = ~np.asarray(res.info.hit)
+    np.testing.assert_array_equal(
+        np.asarray(res.info.bytes_missed)[miss], SIZES[0][miss])
+    # the wrapper must actually have rejected something on this trace,
+    # or the test above is vacuous for the gated path
+    bare = ENGINE.replay("lru", KEYS[0], 8, sizes=SIZES[0])
+    n_evict = (np.asarray(res.info.evicted_key) != EMPTY).sum()
+    n_bare = (np.asarray(bare.info.evicted_key) != EMPTY).sum()
+    assert n_evict < n_bare
+
+
+def test_gating_changes_behaviour():
+    """The non-off filters are not accidental pass-throughs."""
+    bare = ENGINE.replay("lru", KEYS[0], 8, sizes=SIZES[0])
+    gated = ENGINE.replay(make_policy("admit(lru)"), KEYS[0], 8,
+                          sizes=SIZES[0])
+    assert not np.array_equal(np.asarray(bare.info.evicted_key),
+                              np.asarray(gated.info.evicted_key))
+
+
+# --- budgeted / observables delegation ---------------------------------
+
+
+def test_hasattr_mirrors_base():
+    """The engine and the tier feature-detect with hasattr: the wrapper
+    must expose ``step_budgeted``/``observables`` exactly when its base
+    does."""
+    for name in sorted(POLICIES):
+        base = make_policy(name)
+        wrapped = make_policy(f"admit({name})")
+        for attr in ("step_budgeted", "observables"):
+            assert hasattr(wrapped, attr) == hasattr(base, attr), \
+                f"{name}.{attr}"
+
+
+def test_step_budgeted_off_parity():
+    """filter=off budgeted stepping matches the bare base with the same
+    cap threaded through ``state['base']['cap']``."""
+    wrapped = make_policy("admit(dac,filter=off)")
+    bare = make_policy("dac")
+    sw, sb = wrapped.init(8), bare.init(8)
+    sw = {"base": dict(sw["base"], cap=jnp.int32(12))}
+    sb = dict(sb, cap=jnp.int32(12))
+    for k in KEYS[0][:120]:
+        r = Request.of(jnp.int32(int(k)))
+        sw, iw = wrapped.step_budgeted(sw, r)
+        sb, ib = bare.step_budgeted(sb, r)
+        assert bool(iw.hit) == bool(ib.hit)
+        assert int(iw.evicted_key) == int(ib.evicted_key)
+    np.testing.assert_array_equal(np.asarray(sw["base"]["cache"]),
+                                  np.asarray(sb["cache"]))
+
+
+def test_step_budgeted_gated_runs_and_observes():
+    """The gated budgeted path steps, and observables delegate to the
+    base's view of the nested state."""
+    wrapped = make_policy("admit(dac)")
+    st = wrapped.init(8)
+    st = {"base": dict(st["base"], cap=jnp.int32(12)), "adm": st["adm"]}
+    for k in KEYS[0][:80]:
+        st, _ = wrapped.step_budgeted(st, Request.of(jnp.int32(int(k))))
+    obs = wrapped.observables(st)
+    assert set(obs) == {"k", "jump"}
+    assert int(obs["k"]) >= 2
+
+
+def test_adapt_keys_keep_controller_live():
+    """DAC's resize controller observes rejected misses (ADAPT_KEYS):
+    a flood of oversized one-hit wonders must not freeze ``k`` at its
+    minimum the way a wholesale revert would."""
+    N = 256
+    base = _rng.zipf(1.2, size=2000) % N
+    flood = N + np.arange(2000) % N
+    mask = _rng.random(2000) < 0.4
+    keys = np.where(mask, flood, base).astype(np.int32)
+    sizes = np.where(keys >= N, 65536.0, 4096.0)
+    res = ENGINE.replay(make_policy("admit(dac)"), keys, 32, sizes=sizes,
+                        observe=True)
+    assert int(np.asarray(res.obs["k"]).max()) > 32
+
+
+# --- spec grammar ------------------------------------------------------
+
+
+def test_nested_base_spec_survives():
+    pol = make_policy("admit(dac(eps=0.25,growth=2),filter=tinylfu,"
+                      "size_norm=false)")
+    assert isinstance(pol, AdmissionPolicy)
+    assert pol.base.eps == 0.25 and pol.base.growth == 2
+    assert pol.filter == "tinylfu" and pol.size_norm is False
+
+
+def test_admit_specs_equal_and_hash():
+    a = make_policy("admit(dac(eps=0.25),filter=ghost)")
+    b = make_policy("admit(dac(eps=0.25))")
+    assert a == b and hash(a) == hash(b)
+    assert a != make_policy("admit(dac(eps=0.5))")
+
+
+@pytest.mark.parametrize("spec, match", [
+    ("admit()", "needs a base policy spec"),
+    ("admit(filter=tinylfu)", "needs a base policy spec"),
+    ("admit(lru,filter=sometimes)", "admit filter must be one of"),
+    ("admit(lru,rows=9)", "rows must lie in"),
+    ("admit(lru,nope=1)", "unknown parameter"),
+    ("admit(nosuchpolicy)", "unknown policy"),
+])
+def test_spec_errors(spec, match):
+    with pytest.raises(ValueError, match=match):
+        make_policy(spec)
+
+
+def test_estimator_state_shapes_fixed():
+    """Sketch width is the pow2 ceiling of K*width_factor; ghost ring is
+    ghost_factor*K and starts all-EMPTY — fixed shapes, derived from K."""
+    pol = make_policy("admit(lru,width_factor=3,ghost_factor=2)")
+    st = pol.init(10)
+    assert st["adm"]["sketch"].shape == (4, 32)
+    assert st["adm"]["bytes"].shape == (4, 32)
+    assert st["adm"]["ghost"].shape == (20,)
+    assert bool((st["adm"]["ghost"] == EMPTY).all())
+    off = make_policy("admit(lru,filter=off)")
+    assert set(off.init(10)) == {"base"}

@@ -19,6 +19,7 @@ MODULES = [
     "repro.core.policy",
     "repro.core.simulator",
     "repro.core.adaptiveclimb",
+    "repro.core.admission",
     "repro.core.dynamicadaptiveclimb",
     "repro.core.baselines",
     "repro.core.lirs_lhd",

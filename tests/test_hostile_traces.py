@@ -1,0 +1,154 @@
+"""Property suite for the hostile trace families (flood / scanstorm /
+diurnal / thrash): the structural guarantees each family's docstring
+promises, checked over hypothesis-sampled parameter grids, plus the
+canonical round-trip contract every registered family carries.
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.data.traces import (COLD_RANGE_FAMILIES, TRACES, make_trace)
+
+HOSTILE = ("flood", "scanstorm", "diurnal", "thrash")
+
+
+def test_families_registered():
+    assert set(HOSTILE) <= set(TRACES)
+    assert {"flood", "scanstorm"} <= COLD_RANGE_FAMILIES
+
+
+@settings(max_examples=20, deadline=None)
+@given(N=st.sampled_from([64, 128, 256]),
+       frac=st.sampled_from([0.1, 0.25, 0.3, 0.5]),
+       phases=st.integers(min_value=1, max_value=4),
+       seed=st.integers(min_value=0, max_value=5))
+def test_flood_fraction_per_phase(N, frac, phases, seed):
+    """Each phase carries exactly ``int(phase_len * flood_frac)`` flood
+    requests, all in the cold id range [N, 2N)."""
+    T = 2048
+    spec = make_trace(f"flood(N={N},alpha=1.0,flood_frac={frac},"
+                      f"burst_len=16,phases={phases})")
+    keys = spec.generate(T=T, seed=seed)
+    assert spec.n_keys == 2 * N
+    bounds = np.linspace(0, T, phases + 1).astype(int)
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        phase = keys[lo:hi]
+        n_cold = int((phase >= N).sum())
+        assert n_cold == int((hi - lo) * frac), (lo, hi)
+
+
+@settings(max_examples=20, deadline=None)
+@given(N=st.sampled_from([128, 256]), seed=st.integers(0, 5))
+def test_flood_cold_ids_are_one_hit(N, seed):
+    """While the cold counter hasn't wrapped (total flood requests <= N),
+    every flood id appears exactly once — true one-hit wonders."""
+    frac, T = 0.1, 1024        # T*frac = 102 <= N
+    spec = make_trace(f"flood(N={N},alpha=1.0,flood_frac={frac},"
+                      "burst_len=16,phases=2)")
+    keys = spec.generate(T=T, seed=seed)
+    cold = keys[keys >= N]
+    assert len(cold) == int(T / 2 * frac) * 2
+    _, counts = np.unique(cold, return_counts=True)
+    assert counts.max() == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(N=st.sampled_from([64, 128, 256]),
+       loop_frac=st.sampled_from([4, 8]),
+       K=st.sampled_from([4, 8, 12]),
+       seed=st.integers(0, 5))
+def test_thrash_reuse_distance_exceeds_K(N, loop_frac, K, seed):
+    """The realized reuse distance of every repeat access is exactly
+    ``loop - 1`` distinct keys — strictly larger than any cache smaller
+    than the loop, by construction."""
+    loop = N // loop_frac
+    if loop <= K:
+        loop = K + 1            # the property under test needs loop > K
+    spec = make_trace(f"thrash(N={N},loop={loop})")
+    keys = spec.generate(T=4 * loop, seed=seed)
+    last = {}
+    dists = []
+    for t, k in enumerate(keys):
+        if k in last:
+            dists.append(len(set(keys[last[k] + 1:t])))
+        last[k] = t
+    assert dists and set(dists) == {loop - 1}
+    assert all(d >= K for d in dists)
+
+
+@settings(max_examples=20, deadline=None)
+@given(N=st.sampled_from([128, 256]),
+       lo=st.sampled_from([8, 16, 32]),
+       seed=st.integers(0, 5))
+def test_diurnal_narrow_phase_working_set(N, lo, seed):
+    """Off-duty windows address at most ``lo`` distinct keys; the wide
+    windows address more than ``lo`` (the swing is real)."""
+    period, duty = 64, 0.5
+    spec = make_trace(f"diurnal(N={N},period={period},duty={duty},lo={lo})")
+    keys = spec.generate(T=1024, seed=seed)
+    on = int(period * duty)
+    phase = np.arange(1024) % period
+    narrow = keys[phase >= on]
+    wide = keys[phase < on]
+    assert len(np.unique(narrow)) <= lo
+    assert len(np.unique(wide)) > lo
+
+
+@settings(max_examples=20, deadline=None)
+@given(N=st.sampled_from([128, 256]),
+       storm_frac=st.sampled_from([0.1, 0.25]),
+       seed=st.integers(0, 5))
+def test_scanstorm_scans_hit_cold_range(N, storm_frac, seed):
+    """Scan overlays land in the cold range [N, 2N) while the churn base
+    stays in [0, N).  Scans may overlap or clip at the trace end, so the
+    cold volume is bounded by (not pinned to) ``n_scans * scan_len`` and
+    overlapped runs merge — but a cold stretch always steps sequentially
+    (+1, wrapping by N at the range edge or at a scan junction)."""
+    scan_len = 32
+    spec = make_trace(f"scanstorm(N={N},alpha=1.0,mean_phase=200,"
+                      f"drift=0.1,storm_frac={storm_frac},"
+                      f"scan_len={scan_len})")
+    keys = spec.generate(T=2048, seed=seed)
+    assert spec.n_keys == 2 * N
+    cold = keys >= N
+    n_scans = max(1, int(2048 * storm_frac / scan_len))
+    assert 0 < cold.sum() <= n_scans * scan_len
+    assert (keys[~cold] < N).all()
+    # overlaps only merge runs, never mint new ones
+    idx = np.flatnonzero(cold)
+    runs = np.split(idx, np.flatnonzero(np.diff(idx) != 1) + 1)
+    assert 1 <= len(runs) <= n_scans
+
+
+@pytest.mark.parametrize("family", HOSTILE)
+def test_roundtrip_and_determinism(family):
+    """Same contract as tests/test_trace_registry.py: canonical string
+    is a fixed point and generation is seed-deterministic."""
+    example = {
+        "flood": "flood(N=128,alpha=1.0,flood_frac=0.3,burst_len=16,"
+                 "phases=2)",
+        "scanstorm": "scanstorm(N=128,alpha=1.0,mean_phase=100,drift=0.1,"
+                     "storm_frac=0.25,scan_len=16)",
+        "diurnal": "diurnal(N=128,period=64,lo=16)",
+        "thrash": "thrash(N=128,loop=32)",
+    }[family]
+    spec = make_trace(example)
+    assert spec.family == family
+    again = make_trace(str(spec))
+    assert again == spec and str(again) == str(spec)
+    a = spec.generate(T=512, seed=1)
+    np.testing.assert_array_equal(a, spec.generate(T=512, seed=1))
+    assert not np.array_equal(a, spec.generate(T=512, seed=2))
+    assert a.dtype == np.int32 and a.min() >= 0 and a.max() < spec.n_keys
+
+
+@pytest.mark.parametrize("spec, match", [
+    ("flood(N=64,flood_frac=1.5)", "flood_frac"),
+    ("diurnal(N=64,duty=0.0)", "duty"),
+    ("diurnal(N=64,lo=100)", "lo"),
+    ("thrash(N=64,loop=100)", "loop"),
+    ("thrash(N=64,loop=0)", "loop"),
+])
+def test_parameter_validation(spec, match):
+    with pytest.raises(ValueError, match=match):
+        make_trace(spec).generate(T=64, seed=0)

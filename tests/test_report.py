@@ -1,0 +1,188 @@
+"""Unit tests for the report layer on hand-built record stores.
+
+Two halves: :mod:`repro.bench.report` (winners / metric_cdf /
+robustness_frontier) on dense and deliberately *partial* grids — the
+dropped-cell counts must be surfaced, ties must resolve
+lexicographically regardless of caller ordering — and the campaign
+aggregation path (:mod:`repro.campaign.report`), whose cross-policy
+tables shrink to complete cells instead of crashing on partial
+coverage.
+"""
+import numpy as np
+import pytest
+
+from repro.bench import report
+from repro.campaign import report as campaign_report
+
+
+def _rec(policy, scenario, k_label, values, metric="miss_ratio", **extra):
+    vals = list(np.atleast_1d(values))
+    return dict({"policy": policy, "scenario": scenario, "K_label": k_label,
+                 "metrics": {metric: vals}}, **extra)
+
+
+# --- winners ----------------------------------------------------------------
+
+
+def test_winners_fraction_and_margin():
+    recs = [_rec("fifo", "z", "S", [0.5, 0.5]),
+            _rec("lru", "z", "S", [0.3, 0.6])]
+    w = report.winners(recs, ["fifo", "lru"], margin=True)["z(S)"]
+    assert w["winners"] == {"fifo": 0.5, "lru": 0.5}
+    # margin is the seed-mean runner-up gap: |0.5-0.3| and |0.6-0.5|
+    assert w["margin"] == pytest.approx(0.15)
+
+
+def test_winners_tie_is_lexicographic_not_caller_order():
+    recs = [_rec(p, "z", "S", [0.3]) for p in ("lru", "arc", "fifo")]
+    for order in (["lru", "arc", "fifo"], ["fifo", "lru", "arc"],
+                  ["arc", "fifo", "lru"]):
+        assert report.winners(recs, order) == {"z(S)": {"arc": 1.0}}
+
+
+def test_winners_margin_zero_on_exact_tie():
+    recs = [_rec(p, "z", "S", [0.3]) for p in ("lru", "arc")]
+    w = report.winners(recs, ["lru", "arc"], margin=True)["z(S)"]
+    assert w == {"winners": {"arc": 1.0}, "margin": 0.0}
+
+
+# --- metric_cdf -------------------------------------------------------------
+
+
+def test_metric_cdf_sorted_with_unit_tail():
+    recs = [_rec("lru", s, "S", [v], metric="hit_ratio")
+            for s, v in [("a", 0.8), ("b", 0.2), ("c", 0.5)]]
+    cdf = report.metric_cdf(recs, ["lru"])["lru"]
+    assert cdf["values"] == sorted(cdf["values"]) == [0.2, 0.5, 0.8]
+    assert cdf["cdf"] == [pytest.approx((i + 1) / 3) for i in range(3)]
+    assert cdf["cdf"][-1] == 1.0
+
+
+def test_metric_cdf_uses_seed_means():
+    recs = [_rec("lru", "a", "S", [0.2, 0.6], metric="hit_ratio")]
+    assert report.metric_cdf(recs, ["lru"])["lru"]["values"] == [0.4]
+
+
+# --- robustness_frontier ----------------------------------------------------
+
+
+def _grid():
+    """fifo baseline everywhere; dac covered everywhere; lru missing the
+    scan cell entirely (partial coverage)."""
+    return [
+        _rec("fifo", "flood", "S", [0.8]), _rec("fifo", "scan", "S", [0.5]),
+        _rec("fifo", "loop", "S", [0.4]),
+        _rec("dac", "flood", "S", [0.4]), _rec("dac", "scan", "S", [0.6]),
+        _rec("dac", "loop", "S", [0.4]),
+        _rec("lru", "flood", "S", [0.6]), _rec("lru", "loop", "S", [0.2]),
+    ]
+
+
+def test_frontier_worst_mean_and_dropped():
+    f = report.robustness_frontier(_grid(), ["dac", "lru"],
+                                   metric="miss_ratio")
+    dac = f["dac"]
+    assert dac["cells"] == 3 and dac["dropped"] == 0
+    assert dac["worst_cell"] == "scan(S)"
+    # signed MRR: (0.5 - 0.6) / max(0.5, 0.6)
+    assert dac["worst"] == pytest.approx(-1 / 6)
+    assert dac["mean"] == pytest.approx(np.mean([0.5, -1 / 6, 0.0]))
+    lru = f["lru"]
+    assert lru["cells"] == 2 and lru["dropped"] == 1
+    assert "scan(S)" not in lru["per_cell"]
+    assert lru["worst_cell"] == "flood(S)"          # +0.25 < +0.5
+
+
+def test_frontier_missing_baseline_cell_counts_as_dropped():
+    recs = [_rec("fifo", "flood", "S", [0.8]),
+            _rec("dac", "flood", "S", [0.4]),
+            _rec("dac", "scan", "S", [0.6])]   # no fifo record for scan
+    f = report.robustness_frontier(recs, ["dac"], metric="miss_ratio")
+    assert f["dac"]["cells"] == 1 and f["dac"]["dropped"] == 1
+
+
+def test_frontier_empty_coverage_reports_none():
+    recs = [_rec("fifo", "flood", "S", [0.8])]
+    f = report.robustness_frontier(recs, ["lirs"], metric="miss_ratio")
+    assert f["lirs"] == {"worst": None, "worst_cell": None, "mean": None,
+                         "cells": 0, "dropped": 1, "per_cell": {}}
+
+
+def test_frontier_worst_cell_tie_is_lexicographic():
+    recs = []
+    for sc in ("zeta", "alpha", "mid"):
+        recs.append(_rec("fifo", sc, "S", [0.5]))
+        recs.append(_rec("dac", sc, "S", [0.6]))   # identical MRR everywhere
+    f = report.robustness_frontier(recs, ["dac"], metric="miss_ratio")
+    assert f["dac"]["worst_cell"] == "alpha(S)"
+
+
+def test_frontier_default_metric_is_byte_weighted():
+    recs = [dict(_rec("fifo", "flood", "S", [0.5]),
+                 metrics={"byte_miss_ratio": [0.5]}),
+            dict(_rec("dac", "flood", "S", [0.25]),
+                 metrics={"byte_miss_ratio": [0.25]})]
+    f = report.robustness_frontier(recs, ["dac"])
+    assert f["dac"]["worst"] == pytest.approx(0.5)
+
+
+# --- campaign report path ---------------------------------------------------
+
+
+def _camp(policy, scenario, m, dataset="ds", k_label="S"):
+    return {"policy": policy, "scenario": scenario, "K_label": k_label,
+            "dataset": dataset, "seeds": [0],
+            "metrics": {"miss_ratio": [m], "hit_ratio": [1 - m],
+                        "byte_miss_ratio": [m], "penalty_ratio": [m]}}
+
+
+def test_complete_cells_keeps_only_fully_covered():
+    recs = [_camp("fifo", "a", 0.5), _camp("lru", "a", 0.3),
+            _camp("fifo", "b", 0.4)]             # lru missing from cell b
+    kept, dropped = campaign_report.complete_cells(recs, ["fifo", "lru"])
+    assert dropped == 1
+    assert {(r["scenario"], r["policy"]) for r in kept} == \
+        {("a", "fifo"), ("a", "lru")}
+
+
+def test_complete_cells_filters_uncompared_policies():
+    recs = [_camp("fifo", "a", 0.5), _camp("lru", "a", 0.3),
+            _camp("arc", "a", 0.2)]
+    kept, dropped = campaign_report.complete_cells(recs, ["fifo", "lru"])
+    assert dropped == 0
+    assert all(r["policy"] in ("fifo", "lru") for r in kept)
+
+
+def test_dataset_winners_surfaces_dropped_and_shrinks():
+    recs = [_camp("fifo", "a", 0.5), _camp("lru", "a", 0.3),
+            _camp("fifo", "b", 0.4),             # incomplete cell -> dropped
+            _camp("fifo", "c", 0.2, dataset="other"),
+            _camp("lru", "c", 0.4, dataset="other")]
+    table = campaign_report.dataset_winners(recs, ["fifo", "lru"])
+    assert table["ds"]["cells"] == 1 and table["ds"]["dropped"] == 1
+    assert table["ds"]["winner"] == "lru"
+    assert table["ds"]["wins"] == {"fifo": 0.0, "lru": 1.0}
+    assert table["other"]["winner"] == "fifo" and \
+        table["other"]["dropped"] == 0
+
+
+def test_dataset_winners_skips_dataset_with_no_complete_cells():
+    recs = [_camp("fifo", "a", 0.5),
+            _camp("lru", "b", 0.3)]              # no cell has both
+    assert campaign_report.dataset_winners(recs, ["fifo", "lru"]) == {}
+
+
+def test_dataset_winners_tie_is_lexicographic():
+    recs = [_camp("fifo", "a", 0.3), _camp("lru", "a", 0.3)]
+    table = campaign_report.dataset_winners(recs, ["fifo", "lru"])
+    assert table["ds"]["winner"] == "fifo"
+    assert table["ds"]["margin"] == 0.0
+
+
+def test_mrr_vs_baseline_over_complete_cells():
+    recs = [_camp("fifo", "a", 0.5), _camp("lru", "a", 0.25),
+            _camp("fifo", "b", 0.4)]             # b incomplete -> excluded
+    out = campaign_report.mrr_vs_baseline(recs, ["fifo", "lru"],
+                                          baseline="fifo")
+    assert out["ds"]["lru"] == pytest.approx(0.5)
+    assert out["ds"]["fifo"] == pytest.approx(0.0)

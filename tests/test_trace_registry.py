@@ -20,6 +20,11 @@ EXAMPLE_SPECS = {
     "tenants": "tenants(N=128,n_tenants=4,period=512,lo=16)",
     "fleet": "fleet(N=128,n_lanes=4,rate=0.05,mean_session=200,lo=16)",
     "file": f"file(path={_CORPUS / 'kv.csv.gz'})",
+    "flood": "flood(N=128,alpha=1.0,flood_frac=0.3,burst_len=16,phases=2)",
+    "scanstorm": "scanstorm(N=128,alpha=1.0,mean_phase=100,drift=0.1,"
+                 "storm_frac=0.25,scan_len=16)",
+    "diurnal": "diurnal(N=128,period=64,lo=16)",
+    "thrash": "thrash(N=128,loop=32)",
 }
 
 

@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""Committed-benchmark checker: every ``BENCH_*.json`` artifact lives
+under ``experiments/bench/`` and loads as a schema-valid result payload.
+
+PR 7 committed ``experiments/bench/BENCH_policy_step.json`` while PR 8
+dropped ``BENCH_fleet.json`` at the repo root; this tool pins the layout
+so the committed artifacts can't drift apart again.  Three rules:
+
+1. no ``BENCH_*.json`` anywhere outside ``experiments/bench/``
+   (git-tracked or not — a stray artifact in the working tree is a
+   refresh that forgot the path);
+2. every ``experiments/bench/BENCH_*.json`` loads through
+   ``repro.bench.results.load`` (envelope + schema validation);
+3. at least one artifact exists — an empty directory means the checker
+   is checking nothing.
+
+Exit code 0 iff all rules hold; each failure prints one line.  Run from
+the repo root (CI does), or pass the root as argv[1].
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+BENCH_DIR = "experiments/bench"
+# trees that legitimately contain json or are not ours to police
+SKIP_PARTS = {".git", "__pycache__", ".pytest_cache", ".hypothesis",
+              "node_modules"}
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    sys.path.insert(0, str(root / "src"))
+    from repro.bench import results
+
+    bench_dir = root / BENCH_DIR
+    errors = []
+
+    strays = [p for p in root.glob("**/BENCH_*.json")
+              if not SKIP_PARTS.intersection(p.parts)
+              and p.parent != bench_dir]
+    for p in strays:
+        errors.append(f"{p.relative_to(root)}: committed benchmark "
+                      f"artifacts belong under {BENCH_DIR}/")
+
+    artifacts = sorted(bench_dir.glob("BENCH_*.json"))
+    if not artifacts:
+        errors.append(f"{BENCH_DIR}: no BENCH_*.json artifacts found")
+    for p in artifacts:
+        try:
+            payload = results.load(str(p))
+        except Exception as e:  # noqa: BLE001 — report, don't crash
+            errors.append(f"{p.relative_to(root)}: failed to load/"
+                          f"validate: {e}")
+            continue
+        print(f"{p.relative_to(root)}: schema {payload['schema']} OK "
+              f"({len(payload['records'])} records)")
+
+    for err in errors:
+        print(err, file=sys.stderr)
+    print(f"checked {len(artifacts)} artifacts, {len(strays)} strays: "
+          f"{'FAIL' if errors else 'OK'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
