@@ -22,10 +22,10 @@ their traceback under `<store>/quarantine/` and reported, never fatal.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 
+from repro.bench import results
 from repro.campaign import (CampaignStore, Manifest, format_report,
                             load_manifest, pending_cells, plan_cells,
                             render_report, run_campaign)
@@ -52,9 +52,7 @@ def _status(store: CampaignStore) -> int:
 def _report(store: CampaignStore, out: str | None, baseline: str) -> int:
     report = render_report(store, baseline=baseline)
     path = out or os.path.join(store.root, "report.json")
-    with open(path, "w") as f:
-        json.dump(report, f, indent=1, sort_keys=True)
-        f.write("\n")
+    results.atomic_write_json(path, report, sort_keys=True)
     print(format_report(report))
     print(f"\nreport written to {path}")
     return 0

@@ -26,7 +26,7 @@ def save(name: str, payload: dict, *, config: dict | None = None,
     (default: the live ``repro.bench.results`` directory, which
     ``benchmarks.run --out-dir`` redirects).  New payloads default to
     ``repro.bench.result/v2`` (a strict superset of v1); pass
-    ``schema=results.SCHEMA_VERSION`` to pin v1."""
+    ``schema=results.SCHEMA_V1`` to pin v1."""
     out = results.build_payload(name, config=config or {},
                                 records=records or [], extras=payload,
                                 schema=schema, wall_s=wall_s)

@@ -17,7 +17,7 @@ trade through the same pool unpriced, and ``dac+static`` / ``lru+static``
 headline number is the aggregate byte-weighted MRR vs ``fifo+static``;
 every record additionally carries the SLO telemetry (penalty p50/p99
 from the in-carry histograms, Jain occupancy fairness) plus per-lane
-sub-records, landing in the v2 schema (``repro.bench.result/v2``).
+sub-records, landing in the v2 schema (``repro.bench.results.SCHEMA_V2``).
 
 Run via ``python -m benchmarks.run --only fleet_sweep``; invoking this
 module directly (or ``run(commit=...)``) additionally refreshes the
@@ -29,7 +29,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.bench import FleetScenario, FleetSweep, report, run_fleet_sweep
+from repro.bench import (FleetScenario, FleetSweep, report, results,
+                         run_fleet_sweep)
 from repro.bench.results import atomic_write_json
 
 DAC = "dac(k_min=16)"   # floor the shrink at the narrow-phase working set
@@ -112,6 +113,7 @@ def run(T: int = 40_000, seeds=(0, 1, 2), quiet: bool = False,
                   f"did not beat static partitioning ({static_best:.3f})")
     payload = res.save(extras={"mrr_vs_fifo_static": mrr, "winners": wins,
                                "fleet_windows_auction": windows})
+    assert payload["schema"] == results.SCHEMA_V2, payload["schema"]
     if commit is not None:
         atomic_write_json(commit, payload)
         if not quiet:

@@ -112,10 +112,10 @@ def main(argv=None) -> int:
     for name in to_run:
         desc, fn = jobs[name]
         print(f"\n{'='*72}\n{name} ({desc})\n{'='*72}")
-        t0 = time.time()
+        t0 = time.perf_counter()
         payload = fn(args.fast)
         results.validate(payload)
-        print(f"[{name}] {time.time()-t0:.1f}s "
+        print(f"[{name}] {time.perf_counter()-t0:.1f}s "
               f"(schema {payload['schema']} OK, "
               f"{len(payload['records'])} records)")
     return 0

@@ -12,13 +12,14 @@ trade capacity through the free pool, ``dac+static`` and the LRU / Climb /
 AdaptiveClimb / FIFO rows are hard-partitioned at ``budget // n_tenants``.
 The headline number is the aggregate byte-weighted MRR vs ``fifo+static``
 (``repro.bench.report.tier_mrr_matrix``); results land in the v2 schema
-with per-tenant records (``repro.bench.result/v2``).
+with per-tenant records (``repro.bench.results.SCHEMA_V2``).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.bench import TierScenario, TierSweep, report, run_tier_sweep
+from repro.bench import (TierScenario, TierSweep, report, results,
+                         run_tier_sweep)
 
 DAC = "dac(k_min=16)"   # floor the shrink at the narrow-phase working set
 ENTRIES = (
@@ -94,8 +95,10 @@ def run(T: int = 60_000, seeds=(0, 1, 2), quiet: bool = False):
         if not np.isfinite(arbitrated) or arbitrated <= static_best:
             print(f"WARNING: DAC-arbitrated ({arbitrated:.3f}) did not beat "
                   f"static partitioning ({static_best:.3f})")
-    return res.save(extras={"mrr_vs_fifo_static": mrr, "winners": wins,
-                            "occupancy_timeline_greedy": timelines})
+    payload = res.save(extras={"mrr_vs_fifo_static": mrr, "winners": wins,
+                               "occupancy_timeline_greedy": timelines})
+    assert payload["schema"] == results.SCHEMA_V2, payload["schema"]
+    return payload
 
 
 if __name__ == "__main__":

@@ -1,0 +1,32 @@
+"""Static analysis for the reproduction: jaxpr contracts + repo lint.
+
+Two levels, one ``Finding`` currency, gated in CI by
+``tools/repolint.py``:
+
+* :mod:`repro.analysis.contracts` — abstractly traces every registry
+  policy (and the tier/fleet budgeted paths) to its jaxpr and verifies
+  the scan-carry law, lane-padded ``int32`` rows, ``ADAPT_KEYS``
+  presence, and the absence of 64-bit widening and host-callback
+  primitives.
+* :mod:`repro.analysis.retrace` — counts compiled programs across the
+  nine canonical engine shapes and fails on silent retraces.
+* :mod:`repro.analysis.lint` — AST rules over ``src/``, ``benchmarks/``
+  and ``tools/`` (wallclock, unseeded RNG, schema literals, inline
+  ``-1`` sentinels, non-atomic JSON writes, traced-value branching),
+  with an audited per-line waiver syntax.
+
+>>> from repro.analysis import Finding, lint_source, verify_contracts
+>>> lint_source("x = 1\\n", path="ok.py")
+[]
+"""
+from .contracts import (check_fleet, check_policy, check_tier,
+                        registry_specs, verify_contracts)
+from .findings import Finding
+from .lint import RULES, lint_file, lint_source, lint_tree
+from .retrace import audit_engine, audit_jit, cache_entries
+
+__all__ = [
+    "Finding", "RULES", "lint_source", "lint_file", "lint_tree",
+    "registry_specs", "check_policy", "check_tier", "check_fleet",
+    "verify_contracts", "audit_jit", "audit_engine", "cache_entries",
+]

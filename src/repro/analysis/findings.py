@@ -1,0 +1,36 @@
+"""The one currency of the static-analysis subsystem: a ``Finding``.
+
+Both analyzer levels — the AST lint pass (``repro.analysis.lint``) and the
+jaxpr contract analyzer (``repro.analysis.contracts`` /
+``repro.analysis.retrace``) — report problems as a flat list of ``Finding``
+records, so ``tools/repolint.py`` can render and gate them uniformly.
+
+>>> f = Finding(rule="wallclock", where="benchmarks/run.py:12",
+...             message="time.time() call")
+>>> print(f)
+benchmarks/run.py:12: [wallclock] time.time() call
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+__all__ = ["Finding"]
+
+
+class Finding(NamedTuple):
+    """One static-analysis violation.
+
+    ``rule`` is the machine-readable rule id (used in waiver comments),
+    ``where`` locates it (``path:line`` for lint, a contract-target label
+    for jaxpr checks), ``message`` explains it to a human.
+
+    >>> Finding("carry-aval", "dac@pallas=False", "dtype drift").rule
+    'carry-aval'
+    """
+
+    rule: str
+    where: str
+    message: str
+
+    def __str__(self):
+        return f"{self.where}: [{self.rule}] {self.message}"

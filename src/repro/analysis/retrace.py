@@ -1,0 +1,164 @@
+"""Retrace auditor: compilation-cache accounting for the jitted engine.
+
+A jitted function retraces when a call's cache key differs — a new aval
+(weak-typed Python scalar where an ``int32`` array went before), an
+unhashable-or-unequal static argument (a policy without value
+``__eq__``/``__hash__``), a drifted donation signature.  Each silent
+retrace costs a full compile and, at fleet scale, turns a warm serving
+path into a cold one.  This module counts cache entries (via the jit
+internals ``fn._cache_size()``) across the **nine canonical engine
+program shapes** and fails when either the canonical set compiles to an
+unexpected count or an equivalence variant — same request stream spelled
+differently — grows any cache.
+
+The nine canonical programs:
+
+====================  =====================================================
+``_replay_single``    default / ``collect_info=False`` / ``observe=True`` /
+                      ``use_pallas="interpret"``                (4 entries)
+``_replay_batched``   default / ``collect_info=False`` /
+                      ``use_pallas="interpret"``                (3 entries)
+``_replay_chunk``     streaming ``[T]`` / ``[B, T]``            (2 entries)
+====================  =====================================================
+
+>>> import jax, jax.numpy as jnp
+>>> from repro.analysis.retrace import audit_jit
+>>> f = jax.jit(lambda x: x + 1)
+>>> audit_jit(f, "toy", prime=[("i32", lambda: f(jnp.int32(0)))],
+...           variants=[("same-aval", lambda: f(jnp.int32(5)))])
+[]
+>>> bad = audit_jit(f, "toy", prime=[("i32", lambda: f(jnp.int32(0)))],
+...                 variants=[("weak-python-int", lambda: f(0))])
+>>> [b.rule for b in bad]
+['retrace']
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .findings import Finding
+
+__all__ = ["cache_entries", "audit_jit", "audit_engine",
+            "ENGINE_EXPECTED"]
+
+# canonical compiled-program count per jitted engine entry point
+ENGINE_EXPECTED = {"_replay_single": 4, "_replay_batched": 3,
+                   "_replay_chunk": 2}
+
+
+def cache_entries(fn):
+    """Number of compiled programs in a ``jax.jit`` function's cache.
+
+    >>> import jax, jax.numpy as jnp
+    >>> g = jax.jit(lambda x: x * 2)
+    >>> _ = g(jnp.int32(1))
+    >>> cache_entries(g)
+    1
+    """
+    return fn._cache_size()
+
+
+def audit_jit(fn, label, prime, variants, expected=None):
+    """Clear ``fn``'s cache, run the ``prime`` calls, then verify that no
+    ``variants`` call adds a cache entry (and, when ``expected`` is
+    given, that priming compiled exactly that many programs).
+
+    ``prime`` / ``variants`` are ``(name, thunk)`` lists.  Returns
+    findings; empty means the cache keys are stable.
+    """
+    findings = []
+    fn._clear_cache()
+    for _, thunk in prime:
+        thunk()
+    n = cache_entries(fn)
+    if expected is not None and n != expected:
+        findings.append(Finding(
+            "retrace-count", label,
+            f"priming compiled {n} programs, expected {expected} — a "
+            "canonical shape either retraced or collapsed"))
+    for name, thunk in variants:
+        before = cache_entries(fn)
+        thunk()
+        grew = cache_entries(fn) - before
+        if grew:
+            findings.append(Finding(
+                "retrace", label,
+                f"equivalence variant {name!r} grew the cache by {grew} "
+                "(weak-type / static-arg cache-key bug)"))
+    return findings
+
+
+def audit_engine(policy="dac", K=8, T=16):
+    """Audit the three jitted engine entry points across the nine
+    canonical program shapes plus equivalence variants.
+
+    Returns ``(findings, report)`` where ``report`` maps entry-point name
+    to its compiled-program count after priming.
+    """
+    from ..core import make_policy
+    from ..core.simulator import (Engine, _replay_batched, _replay_chunk,
+                                  _replay_single)
+
+    eng = Engine()
+    keys1 = (np.arange(T) % 5).astype(np.int32)
+    keys2 = np.stack([keys1, (keys1 + 3) % 7]).astype(np.int32)
+
+    prime = [
+        ("single", lambda: eng.replay(policy, keys1, K)),
+        ("single/metrics-only",
+         lambda: eng.replay(policy, keys1, K, collect_info=False)),
+        ("single/observe",
+         lambda: eng.replay(policy, keys1, K, observe=True)),
+        ("single/pallas-interpret",
+         lambda: eng.replay(policy, keys1, K, use_pallas="interpret")),
+        ("batched", lambda: eng.replay(policy, keys2, K)),
+        ("batched/metrics-only",
+         lambda: eng.replay(policy, keys2, K, collect_info=False)),
+        ("batched/pallas-interpret",
+         lambda: eng.replay(policy, keys2, K, use_pallas="interpret")),
+        ("stream[T]", lambda: eng.replay_stream(policy, keys1, K)),
+        ("stream[B,T]", lambda: eng.replay_stream(policy, keys2, K)),
+    ]
+    # the same nine requests spelled differently — none may recompile
+    variants = [
+        ("python-list keys",
+         lambda: eng.replay(policy, [int(x) for x in keys1], K)),
+        ("jnp keys", lambda: eng.replay(policy, jnp.asarray(keys1), K)),
+        ("np.int32 capacity",
+         lambda: eng.replay(policy, keys1, np.int32(K))),
+        ("explicit unit sizes/costs",
+         lambda: eng.replay(policy, keys1, K, sizes=1, costs=1.0)),
+        ("fresh equal policy instance",
+         lambda: eng.replay(make_policy(policy), keys1, K)),
+        ("explicit stream chunk",
+         lambda: eng.replay_stream(policy, keys1, K, chunk=T)),
+    ]
+
+    fns = {"_replay_single": _replay_single,
+           "_replay_batched": _replay_batched,
+           "_replay_chunk": _replay_chunk}
+    for fn in fns.values():
+        fn._clear_cache()
+    for _, thunk in prime:
+        thunk()
+
+    findings = []
+    report = {name: cache_entries(fn) for name, fn in fns.items()}
+    for name, fn in fns.items():
+        if report[name] != ENGINE_EXPECTED[name]:
+            findings.append(Finding(
+                "retrace-count", f"engine.{name}",
+                f"{report[name]} compiled programs after priming the "
+                f"canonical shapes, expected {ENGINE_EXPECTED[name]}"))
+    for vname, thunk in variants:
+        before = {name: cache_entries(fn) for name, fn in fns.items()}
+        thunk()
+        for name, fn in fns.items():
+            grew = cache_entries(fn) - before[name]
+            if grew:
+                findings.append(Finding(
+                    "retrace", f"engine.{name}",
+                    f"equivalence variant {vname!r} grew the cache by "
+                    f"{grew} (weak-type / static-arg cache-key bug)"))
+    return findings, report

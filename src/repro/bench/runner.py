@@ -229,7 +229,7 @@ class SweepResult:
         return report.seed_values(self.records, name, **eq)
 
     def payload(self, extras: dict | None = None, *,
-                schema: str = results.SCHEMA_VERSION) -> dict:
+                schema: str = results.SCHEMA_V1) -> dict:
         return results.build_payload(
             self.sweep.name, config=self.sweep.to_config(),
             records=self.records, extras=extras, wall_s=self.wall_s,
@@ -237,7 +237,7 @@ class SweepResult:
 
     def save(self, extras: dict | None = None, *,
              results_dir: str | None = None,
-             schema: str = results.SCHEMA_VERSION) -> dict:
+             schema: str = results.SCHEMA_V1) -> dict:
         """Validate + write the canonical payload; returns it."""
         payload = self.payload(extras, schema=schema)
         results.save(payload, results_dir=results_dir)

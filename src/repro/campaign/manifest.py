@@ -239,10 +239,10 @@ class Manifest:
                    grid=Grid.from_dict(cfg["grid"]))
 
     def save(self, path: str) -> str:
-        """Write the manifest as JSON; returns ``path``."""
-        with open(path, "w") as f:
-            json.dump(self.to_dict(), f, indent=1, sort_keys=True)
-            f.write("\n")
+        """Write the manifest as JSON (atomically — a crashed scan must
+        not leave a torn manifest behind); returns ``path``."""
+        from ..bench.results import atomic_write_json
+        atomic_write_json(path, self.to_dict(), sort_keys=True)
         return path
 
 

@@ -88,6 +88,7 @@ class CheckpointManager:
             if v.dtype in _VIEW_AS:
                 dtypes[k] = str(v.dtype)
                 host[k] = v.view(_VIEW_AS[v.dtype])
+        # repolint: waive[wallclock] -- checkpoint provenance stamp
         meta = {"step": step, "time": time.time(), "dtypes": dtypes,
                 **(extra_meta or {})}
 
@@ -98,6 +99,7 @@ class CheckpointManager:
             os.makedirs(tmp)
             np.savez(os.path.join(tmp, "state.npz"), **host)
             with open(os.path.join(tmp, "meta.json"), "w") as f:
+                # repolint: waive[atomic-json] -- tmp dir + atomic rename
                 json.dump(meta, f)
             shutil.rmtree(final, ignore_errors=True)
             os.rename(tmp, final)

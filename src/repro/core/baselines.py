@@ -681,7 +681,9 @@ class Hyperbolic(Policy):
         keys, cnt, ins, t = state["keys"], state["cnt"], state["ins"], state["t"]
         hit, i = find(keys, key)
         age = (t - ins + 1).astype(jnp.float32)
-        prio = jnp.where(keys == EMPTY, -jnp.inf, cnt.astype(jnp.float32) / age)
+        # float32 literal: a weak Python scalar would trace as f64 under x64
+        prio = jnp.where(keys == EMPTY, jnp.float32(-jnp.inf),
+                         cnt.astype(jnp.float32) / age)
         v = jnp.argmin(prio).astype(jnp.int32)
         evicted = keys[v]
         keys_m = keys.at[v].set(key)

@@ -211,7 +211,8 @@ class LHD(Policy):
         hd = self._hd(hits_c, evs_c)
         ages = t - t_ins
         slot_hd = hd[self._bin(ages)]
-        slot_hd = jnp.where(keys == EMPTY, -1.0, slot_hd)
+        # float32 literal: a weak Python scalar would trace as f64 under x64
+        slot_hd = jnp.where(keys == EMPTY, jnp.float32(-1.0), slot_hd)
         v = jnp.argmin(slot_hd).astype(jnp.int32)
         victim_occupied = keys[v] != EMPTY
         evs_m = jnp.where(victim_occupied,

@@ -282,6 +282,9 @@ class Engine:
         ``None`` and peak memory is O(K) per lane instead of O(T).
         """
         policy, use_pallas = self._resolve(policy, use_pallas)
+        # a np.int32 capacity would be a fresh jit cache key (static args
+        # compare with strict type equality) — normalize at the boundary
+        K = int(K)
         reqs = Request.of(requests, sizes, costs)
         if reqs.key.ndim == 1:
             return _replay_single(policy, reqs, K, observe, collect_info,
@@ -380,6 +383,7 @@ class Engine:
         for mesh-sharded batch replay use ``replay(..., mesh=...)``.
         """
         policy, use_pallas = self._resolve(policy, use_pallas)
+        K = int(K)   # strict-type static-arg key; see replay()
 
         if hasattr(requests, "__next__"):      # iterator of chunks
             if sizes is not None or costs is not None:

@@ -222,13 +222,13 @@ def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
     os.makedirs(out_dir, exist_ok=True)
     name = f"{arch}__{shape}__{mesh_kind}" + (f"__{tag}" if tag else "")
     path = os.path.join(out_dir, name + ".json")
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         lowered, n_chips, meta = lower_cell(arch, shape, mesh_kind,
                                             remat=remat, extra=extra)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis() or {}
@@ -296,12 +296,12 @@ def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
         result = {"arch": arch, "shape": shape, "mesh": mesh_kind,
                   "ok": False, "error": f"{type(e).__name__}: {e}",
                   "traceback": traceback.format_exc()[-4000:]}
-    with open(path, "w") as f:
-        json.dump(result, f, indent=1)
+    from repro.bench.results import atomic_write_json
+    atomic_write_json(path, result)
     dom = result.get("roofline", {}).get("dominant", "-")
     rf = result.get("roofline", {}).get("roofline_fraction", 0)
     print(f"[dryrun] {name}: ok={result['ok']} dominant={dom} "
-          f"roofline_frac={rf:.3f} ({time.time()-t0:.0f}s)")
+          f"roofline_frac={rf:.3f} ({time.perf_counter()-t0:.0f}s)")
     return result
 
 

@@ -1,7 +1,8 @@
 """Doctest runner for the public API surface.
 
 Every symbol exported from ``repro.core``, ``repro.bench``, ``repro.data``,
-``repro.tier``, ``repro.fleet`` and ``repro.campaign`` carries a docstring
+``repro.tier``, ``repro.fleet``, ``repro.campaign`` and ``repro.analysis``
+carries a docstring
 with an executable example; this
 suite runs them all (the scoped equivalent of ``pytest --doctest-modules``)
 so the examples in the docs can't rot.  ``tools/check_docs.py`` relies on
@@ -36,6 +37,11 @@ MODULES = [
     "repro.campaign.executor",
     "repro.campaign.report",
     "repro.specs",
+    "repro.analysis",
+    "repro.analysis.findings",
+    "repro.analysis.lint",
+    "repro.analysis.contracts",
+    "repro.analysis.retrace",
     "repro.tier",
     "repro.tier.arbiter",
     "repro.tier.tier",
@@ -62,7 +68,7 @@ def test_doctests(module):
 def test_public_exports_have_docstrings():
     """Every public export of the public packages is documented."""
     for pkg_name in ("repro.core", "repro.bench", "repro.data", "repro.tier",
-                     "repro.fleet", "repro.campaign"):
+                     "repro.fleet", "repro.campaign", "repro.analysis"):
         pkg = importlib.import_module(pkg_name)
         exports = getattr(pkg, "__all__", None) or [
             n for n in vars(pkg) if not n.startswith("_")]

@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""One command that reproduces the full CI gate locally.
+
+Chains the repo's checkers in the order CI runs them and reports one
+pass/fail table::
+
+    python tools/check_all.py            # everything
+    python tools/check_all.py --fast     # lint-only repolint (no compiles)
+    python tools/check_all.py --skip bench --skip lowering
+
+Each step is a subprocess with ``PYTHONPATH=src`` (and CPU-pinned JAX),
+so a locally-importable-but-broken module fails here exactly like it
+fails in CI.  Exit status is nonzero if any step fails.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+STEPS = [
+    ("repolint", ["tools/repolint.py"]),
+    ("docs", ["tools/check_docs.py"]),
+    ("bench", ["tools/check_bench.py"]),
+    ("lowering", ["tools/check_lowering.py"]),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true",
+                    help="repolint runs --lint-only (skip jaxpr/compile "
+                         "passes)")
+    ap.add_argument("--skip", action="append", default=[],
+                    choices=[name for name, _ in STEPS],
+                    help="skip a step (repeatable)")
+    args = ap.parse_args(argv)
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+
+    outcomes = []
+    for name, cmd in STEPS:
+        if name in args.skip:
+            outcomes.append((name, "SKIP", 0.0))
+            continue
+        full = [sys.executable] + cmd
+        if name == "repolint" and args.fast:
+            full.append("--lint-only")
+        print(f"\n=== {name}: {' '.join(cmd)} ===", flush=True)
+        t0 = time.perf_counter()
+        rc = subprocess.run(full, cwd=ROOT, env=env).returncode
+        outcomes.append((name, "OK" if rc == 0 else f"FAIL({rc})",
+                         time.perf_counter() - t0))
+
+    print("\n" + "=" * 46)
+    failed = 0
+    for name, status, dt in outcomes:
+        print(f"{name:<10} {status:<9} {dt:6.1f}s")
+        failed += status.startswith("FAIL")
+    print("=" * 46)
+    if failed:
+        print(f"{failed} step(s) failed")
+        return 1
+    print("all steps passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Repo-wide static-analysis gate: AST lint + jaxpr contracts + retrace
+audit.
+
+Runs the three layers of ``repro.analysis`` and exits nonzero on any
+unwaived finding, so CI (the ``static-analysis`` job) and pre-commit
+runs share one verdict:
+
+1. **lint** — repo-specific AST rules over ``src/``, ``benchmarks/``,
+   ``tools/`` (wallclock, unseeded RNG, schema literals, inline ``-1``
+   sentinels, non-atomic JSON writes, traced-value branching).  Waivers
+   are per-line ``# repolint: waive[rule] -- reason`` comments and are
+   themselves audited: a stale waiver is a finding.
+2. **contracts** — every registry policy (and ``admit(...)`` wrapper,
+   and the tier/fleet budgeted paths) abstractly traced under both
+   Pallas settings: scan-carry law, lane-padded int32 rows,
+   ``ADAPT_KEYS``, no 64-bit widening, no host-callback primitives.
+3. **retrace** — the nine canonical engine program shapes compile to
+   exactly nine programs, and equivalence variants never recompile.
+
+Usage::
+
+    python tools/repolint.py                 # the full gate
+    python tools/repolint.py --lint-only     # AST pass only (fast)
+    python tools/repolint.py --contracts-only
+    python tools/repolint.py --no-retrace    # skip the compile audit
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--lint-only", action="store_true",
+                    help="run only the AST lint pass (no jax import)")
+    ap.add_argument("--contracts-only", action="store_true",
+                    help="run only the jaxpr contract + retrace passes")
+    ap.add_argument("--no-retrace", action="store_true",
+                    help="skip the compilation-cache audit")
+    ap.add_argument("--root", default=ROOT,
+                    help="repository root to lint (default: this repo)")
+    args = ap.parse_args(argv)
+    if args.lint_only and args.contracts_only:
+        ap.error("--lint-only and --contracts-only are mutually exclusive")
+
+    findings = []
+    t0 = time.perf_counter()
+
+    if not args.contracts_only:
+        from repro.analysis import lint
+        lint_findings = lint.lint_tree(args.root)
+        findings += lint_findings
+        print(f"[repolint] lint: {len(lint_findings)} finding(s)")
+
+    if not args.lint_only:
+        from repro.analysis import contracts, retrace
+        contract_findings = contracts.verify_contracts()
+        findings += contract_findings
+        n_targets = (len(contracts.registry_specs()) + 4)  # + budgeted/
+        print(f"[repolint] contracts: {len(contract_findings)} finding(s) "
+              f"over {n_targets} targets x 2 pallas modes (+ x64 pass)")
+        if not args.no_retrace:
+            retrace_findings, report = retrace.audit_engine()
+            findings += retrace_findings
+            print(f"[repolint] retrace: {len(retrace_findings)} finding(s),"
+                  f" compiled programs {report}")
+
+    for f in findings:
+        print(f"  {f}")
+    status = "clean" if not findings else f"{len(findings)} finding(s)"
+    print(f"[repolint] {status} in {time.perf_counter() - t0:.1f}s")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
